@@ -1,0 +1,85 @@
+"""E5 (beyond-paper): checkpoint subsystem microbenchmarks on a real model
+state — sync vs async write blocking, incremental delta bytes, int8 codec
+ratio, restore time.  These numbers calibrate the simulator's cost model
+(sim/costmodel.py) for arch-specific CI optimization."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import (AsyncCheckpointer, CheckpointStore,
+                              IncrementalCheckpointer)
+from repro.config import OptimizerConfig
+from repro.configs import get_smoke_config
+from repro.models import zoo
+from repro.optim import make_optimizer
+from repro.utils.trees import tree_bytes
+
+
+def _mk_state(scale: int = 4):
+    import dataclasses
+    cfg = get_smoke_config("yi-6b")
+    cfg = dataclasses.replace(cfg, d_model=64 * scale, d_ff=128 * scale,
+                              num_layers=4)
+    params = zoo.init_params(cfg, jax.random.PRNGKey(0))
+    opt = make_optimizer(OptimizerConfig())
+    return {"params": params, "opt": opt.init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def bench_checkpoint(tmpdir: str = "/tmp/repro_bench_ckpt"):
+    import shutil
+    shutil.rmtree(tmpdir, ignore_errors=True)
+    state = _mk_state()
+    nbytes = tree_bytes(state)
+    print(f"\n=== Checkpoint subsystem (state = {nbytes/2**20:.1f} MiB) ===")
+    rows = []
+
+    store = CheckpointStore(tmpdir + "/sync", num_shards=4)
+    t0 = time.monotonic()
+    store.save(1, state)
+    sync_s = time.monotonic() - t0
+    rows.append(("ckpt_sync_save", sync_s * 1e6, f"{nbytes/sync_s/2**20:.0f} MiB/s"))
+
+    ac = AsyncCheckpointer(CheckpointStore(tmpdir + "/async", num_shards=4))
+    t0 = time.monotonic()
+    ac.save(1, state)
+    block_s = time.monotonic() - t0     # only the snapshot blocks
+    ac.wait()
+    rows.append(("ckpt_async_block", block_s * 1e6,
+                 f"{block_s/sync_s:.3f}x of sync"))
+
+    t0 = time.monotonic()
+    restored, _ = store.restore(state)
+    restore_s = time.monotonic() - t0
+    rows.append(("ckpt_restore", restore_s * 1e6, f"{nbytes/restore_s/2**20:.0f} MiB/s"))
+
+    for mode in ("lossless", "int8"):
+        inc = IncrementalCheckpointer(CheckpointStore(tmpdir + f"/inc_{mode}",
+                                                      num_shards=2),
+                                      full_every=8, mode=mode)
+        inc.save(0, state)
+        bumped = jax.tree_util.tree_map(
+            lambda x: x + jnp.asarray(1e-4, x.dtype)
+            if jnp.issubdtype(x.dtype, jnp.floating) else x, state)
+        t0 = time.monotonic()
+        inc.save(1, bumped)
+        dt = time.monotonic() - t0
+        ratio = inc.bytes_written_delta / max(inc.bytes_written_full, 1)
+        rows.append((f"ckpt_incr_{mode}", dt * 1e6,
+                     f"delta/full bytes = {ratio:.4f}"))
+
+    for name, us, derived in rows:
+        print(f"{name},{us:.0f},{derived}")
+    return rows
+
+
+def main():
+    return bench_checkpoint()
+
+
+if __name__ == "__main__":
+    main()

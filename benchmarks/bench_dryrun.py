@@ -1,0 +1,45 @@
+"""E7/E8: summarize the multi-pod dry-run + roofline records produced by
+``python -m repro.launch.dryrun`` (experiments/dryrun.json).  This bench
+formats the §Dry-run and §Roofline tables for EXPERIMENTS.md."""
+from __future__ import annotations
+
+import json
+import os
+
+
+def bench_dryrun(path: str = "experiments/dryrun.json"):
+    if not os.path.exists(path):
+        print(f"\n=== Dry-run summary: {path} not found ===")
+        print("run: PYTHONPATH=src python -m repro.launch.dryrun --arch all "
+              "--shape all --mesh both --out experiments/dryrun.json")
+        return []
+    with open(path) as f:
+        records = json.load(f)
+    runs = [r for r in records if "skipped" not in r]
+    skips = [r for r in records if "skipped" in r]
+    print(f"\n=== Multi-pod dry-run: {len(runs)} compiled cells, "
+          f"{len(skips)} documented skips ===")
+    hdr = (f"{'arch':>18s} {'shape':>11s} {'mesh':>8s} {'HBM/dev':>8s} "
+           f"{'t_comp':>9s} {'t_mem':>9s} {'t_coll':>9s} {'dominant':>10s} "
+           f"{'useful':>7s}")
+    print(hdr)
+    for r in runs:
+        print(f"{r['arch']:>18s} {r['shape']:>11s} {r['mesh']:>8s} "
+              f"{r['hbm_gb_per_dev']:7.2f}G "
+              f"{r['t_compute_s']*1e3:8.1f}ms {r['t_memory_s']*1e3:8.1f}ms "
+              f"{r['t_collective_s']*1e3:8.1f}ms {r['dominant']:>10s} "
+              f"{100*r['useful_flops_ratio']:6.1f}%")
+    for r in skips:
+        print(f"{r['arch']:>18s} {r['shape']:>11s}      SKIP ({r['skipped']})")
+    n_fit = sum(1 for r in runs if r.get("fits_16gb"))
+    print(f"fits 16GB v5e HBM: {n_fit}/{len(runs)} cells "
+          f"(see EXPERIMENTS.md for the exceptions)")
+    return runs
+
+
+def main():
+    return bench_dryrun()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""E6: kernel microbenchmarks — per-call wall time of the XLA reference
+paths on CPU (the deployable CPU numbers) plus interpret-mode validation of
+every Pallas kernel against its oracle.  TPU wall times come from the
+roofline analysis (§Roofline), not from this CPU container."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.ckpt_delta.ops import delta_decode, delta_encode
+from repro.kernels.ckpt_delta.ref import decode_ref, encode_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.rglru.ops import rglru_scan
+from repro.kernels.rglru.ref import rglru_ref
+from repro.kernels.rwkv6.ops import wkv6
+from repro.kernels.rwkv6.ref import wkv6_ref
+
+
+def _time(fn, *args, n=3, **kw):
+    fn(*args, **kw)  # compile
+    t0 = time.monotonic()
+    for _ in range(n):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.monotonic() - t0) / n * 1e6
+
+
+def bench_kernels():
+    print("\n=== Kernels: oracle wall time (CPU) + interpret-mode validation ===")
+    rows = []
+    ks = jax.random.split(jax.random.PRNGKey(0), 8)
+
+    B, S, H, K, hd = 1, 512, 8, 2, 64
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, K, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, K, hd), jnp.float32)
+    us = _time(jax.jit(lambda a, b, c: attention_ref(a, b, c, causal=True)), q, k, v)
+    out = flash_attention(q, k, v, causal=True, block_q=128, block_kv=128,
+                          interpret=True)
+    ok = bool(jnp.allclose(out, attention_ref(q, k, v, causal=True), atol=1e-4))
+    rows.append(("flash_attention", us, f"validated={ok} (B{B},S{S},H{H},K{K},hd{hd})"))
+
+    D = 512
+    a = jax.nn.sigmoid(jax.random.normal(ks[3], (B, S, D)) + 2.0)
+    b = jax.random.normal(ks[4], (B, S, D)) * 0.1
+    h0 = jnp.zeros((B, D))
+    us = _time(jax.jit(rglru_ref), a, b, h0)
+    out = rglru_scan(a, b, h0, interpret=True)
+    ok = bool(jnp.allclose(out, rglru_ref(a, b, h0), atol=1e-4))
+    rows.append(("rglru_scan", us, f"validated={ok} (S{S},D{D})"))
+
+    Hh, hs = 4, 32
+    r, kk, vv = (jax.random.normal(x, (B, S, Hh, hs)) * 0.5 for x in ks[5:8])
+    w = jax.nn.sigmoid(jax.random.normal(ks[0], (B, S, Hh, hs))) * 0.3 + 0.65
+    u = jax.random.normal(ks[1], (Hh, hs)) * 0.3
+    s0 = jnp.zeros((B, Hh, hs, hs))
+    us = _time(jax.jit(wkv6_ref), r, kk, vv, w, u, s0)
+    y, _ = wkv6(r, kk, vv, w, u, s0, interpret=True)
+    yr, _ = wkv6_ref(r, kk, vv, w, u, s0)
+    ok = bool(jnp.allclose(y, yr, atol=1e-4))
+    rows.append(("wkv6", us, f"validated={ok} (S{S},H{Hh},hs{hs})"))
+
+    n = 1 << 20
+    new = jax.random.normal(ks[2], (n,))
+    base = new + jax.random.normal(ks[3], (n,)) * 0.01
+    us = _time(lambda a, b: encode_ref(np.asarray(a - b)), new, base)
+    qq, sc = delta_encode(new, base, interpret=True)
+    d = delta_decode(qq, sc, interpret=True)[:n]
+    ok = bool(jnp.max(jnp.abs((new - base) - d)) < 1e-3)
+    rows.append(("ckpt_delta", us, f"validated={ok} (n=2^20, 4x byte cut)"))
+
+    for name, us, derived in rows:
+        print(f"{name},{us:.0f},{derived}")
+    return rows
+
+
+def main():
+    return bench_kernels()
+
+
+if __name__ == "__main__":
+    main()

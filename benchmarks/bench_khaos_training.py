@@ -1,0 +1,127 @@
+"""E9 (beyond-paper capstone): Khaos applied to the TPU *training* domain.
+
+Takes a real architecture's roofline record (experiments/dryrun.json), the
+measured checkpoint economics (TrainState bytes over host disk bandwidth)
+and a cluster failure model, then runs the full three-phase pipeline to
+pick the checkpoint interval for a continual-training job ingesting a
+variable document stream — against Young/Daly and naive statics.
+
+This is the thesis of the adaptation (DESIGN.md §2): the paper's insight
+transfers verbatim once "events/s" means "sequences/s" and "consumer lag"
+means ingestion backlog.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.config import KhaosConfig
+from repro.configs import get_config
+from repro.core import (KhaosController, QoSModel, run_profiling,
+                        select_failure_points, young_daly_interval)
+from repro.data.stream import diurnal_rate, record_workload
+from repro.ft.failures import FailureModel
+from repro.sim import (SimCostModel, SimDeployment, SimJobHandle,
+                       StreamSimulator, costmodel_from_arch)
+
+DAY = 86_400.0
+
+
+def _arch_costmodel(arch: str = "yi-6b", dryrun_path: str = "experiments/dryrun.json"):
+    cfg = get_config(arch)
+    bound = 2.0
+    if os.path.exists(dryrun_path):
+        recs = json.load(open(dryrun_path))
+        for r in recs:
+            if r.get("arch") == arch and r.get("shape") == "train_4k" \
+                    and r.get("mesh") == "16x16":
+                bound = r["bound_step_s"]
+                break
+    cm = costmodel_from_arch(
+        param_count=cfg.param_count(), bound_step_s=bound,
+        tokens_per_step=256 * 4096, seq_len=4096,
+        n_hosts=64, disk_bw_per_host=1.0e9,
+        opt_state_bytes_per_param=12.0)
+    return cfg, cm, bound
+
+
+def bench_khaos_training(arch: str = "yi-6b"):
+    cfg, cm, bound = _arch_costmodel(arch)
+    print(f"\n=== Khaos for TPU training: {arch} (roofline-bound step "
+          f"{bound:.2f}s, ckpt {cm.ckpt_duration_s:.1f}s for "
+          f"{cfg.param_count()*12/2**30:.0f} GiB TrainState) ===")
+
+    # ingestion stream: diurnal document arrivals at ~75% of capacity
+    sched = diurnal_rate(base=0.62 * cm.capacity_eps, amplitude=0.45,
+                         period=DAY, seed=7)
+    fm = FailureModel(mtbf_node_s=30 * DAY, num_nodes=64, seed=3)
+    mtbf = fm.cluster_mtbf_s
+    yd = young_daly_interval(cm.ckpt_duration_s, mtbf)
+    print(f"cluster MTBF {mtbf/3600:.1f}h -> Young/Daly CI = {yd:.0f}s")
+
+    # Phase 1+2: record, profile around the Young/Daly prior
+    recording = record_workload(sched, duration=14_400.0, seed=7)
+    ss = select_failure_points(recording, m=4, smoothing_window=60)
+    ci_grid = np.geomspace(max(10.0, yd / 8), yd * 2.5, 6)
+    prof = run_profiling(
+        lambda ci: SimDeployment(ci, recording, cm, warmup_s=600,
+                                 max_recovery_s=3600.0),
+        ss, ci_grid, margin=120)
+    ci_f, tr_f, L_f, R_f = prof.flat()
+    m_l = QoSModel().fit(ci_f, tr_f, L_f)
+    m_r = QoSModel().fit(ci_f, tr_f, np.minimum(R_f, 3600.0))
+
+    kcfg = KhaosConfig(latency_constraint=4.0 * bound,
+                       recovery_constraint=450.0,
+                       optimization_period=300.0,
+                       ci_min=float(ci_grid[0]), ci_max=float(ci_grid[-1]),
+                       reconfig_cooldown=1800.0)
+    ctl = KhaosController(cfg=kcfg, m_l=m_l, m_r=m_r)
+    ci0 = ctl.initial_ci(float(np.mean(recording.counts)))
+    print(f"Khaos initial CI (Eq. 8) = {ci0 and round(ci0)}s")
+
+    # one shared failure schedule so every configuration faces the same day
+    t, shared_fails = 0.0, []
+    while t < DAY:
+        t = fm.next_failure_after(t)
+        if t < DAY:
+            shared_fails.append(t)
+
+    def run(name, ci_static=None, controller=None):
+        sim = StreamSimulator(cm, ci_s=ci_static or ci0 or yd, schedule=sched,
+                              flink_semantics=False)   # hot CI swap on TPU
+        job = SimJobHandle(sim)
+        rng_fails = shared_fails
+        for ft in rng_fails:
+            sim.inject_failure(ft)
+        while sim.t < DAY:
+            sim.tick()
+            if controller is not None:
+                controller.maybe_optimize(job)
+        thr = np.array(sim.metrics.series("throughput").values)
+        goodput = thr.sum() / (cm.capacity_eps * DAY)
+        recs = [r["recovery_s"] for r in sim.recoveries]
+        viol = sum(max(0.0, r - kcfg.recovery_constraint) for r in recs)
+        print(f"{name:>16s}: goodput {100*goodput:5.1f}%  "
+              f"ckpts {sim.ckpt_count:4d}  failures {len(rng_fails)}  "
+              f"recoveries {[round(r) for r in recs]}  "
+              f"rec-viol {viol:6.0f}s  reconfigs {len(job.reconfigurations)}")
+        return goodput, viol
+
+    results = {
+        "Khaos": run("Khaos", controller=ctl),
+        "YoungDaly": run(f"YoungDaly {yd:.0f}s", ci_static=yd),
+        "static 60s": run("static 60s", ci_static=60.0),
+        "static 1800s": run("static 1800s", ci_static=1800.0),
+    }
+    return results
+
+
+def main():
+    return bench_khaos_training()
+
+
+if __name__ == "__main__":
+    main()

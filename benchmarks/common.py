@@ -1,0 +1,169 @@
+"""Shared evaluation harness for the paper-table benchmarks (E1/E2).
+
+Implements the paper's protocol (§IV): a day-scale variable workload, 12
+worst-case failure injections at varied throughput levels, static CI
+baselines {10,30,60,90,120}s vs the full three-phase Khaos pipeline, QoS
+constraints 1000 ms / 240 s.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.config import KhaosConfig
+from repro.core import (KhaosController, QoSModel, run_profiling,
+                        select_failure_points)
+from repro.data.stream import RateSchedule, record_workload
+from repro.ft.failures import FailureInjector
+from repro.sim import SimCostModel, SimDeployment, SimJobHandle, StreamSimulator
+
+STATIC_CIS = (10.0, 30.0, 60.0, 90.0, 120.0)
+L_CONST = 1.0        # 1000 ms
+R_CONST = 240.0      # seconds
+NUM_FAILURES = 12
+
+
+@dataclass
+class RunResult:
+    name: str
+    avg_latency_ms: float
+    lat_violation_frac: float
+    total_recovery_s: float
+    recovery_violation_s: float
+    reconfigurations: int
+    recoveries: list
+
+
+def make_khaos(recording, cost: SimCostModel, seed: int = 0):
+    """Phases 1+2+3 setup: returns (controller, profiling_result)."""
+    ss = select_failure_points(recording, m=5, smoothing_window=30)
+    ci_grid = np.linspace(10, 120, 6)
+    prof = run_profiling(
+        lambda ci: SimDeployment(ci, recording, cost, warmup_s=300,
+                                 max_recovery_s=3600.0),
+        ss, ci_grid, margin=90)
+    ci_f, tr_f, L_f, R_f = prof.flat()
+    # a deployment that cannot keep up at its CI (burst peak + checkpoint
+    # tax) reports the cap; winsorize so the cliff doesn't poison the fit —
+    # such configs are correctly predicted as infeasible anyway
+    R_f = np.minimum(R_f, 3600.0)
+    m_l = QoSModel().fit(ci_f, tr_f, L_f)
+    m_r = QoSModel().fit(ci_f, tr_f, R_f)
+    cfg = KhaosConfig(latency_constraint=L_CONST, recovery_constraint=R_CONST,
+                      optimization_period=120.0, ci_min=10.0, ci_max=120.0,
+                      reconfig_cooldown=600.0)
+    return KhaosController(cfg=cfg, m_l=m_l, m_r=m_r), prof
+
+
+def failure_times_by_throughput(recording, n=NUM_FAILURES, t_min=2000.0):
+    """Failure times spread over throughput levels (paper Fig. 2c/d)."""
+    ss = select_failure_points(recording, m=n, smoothing_window=30)
+    times = np.sort(ss.failure_times)
+    return times[times > t_min]
+
+
+def evaluate(name: str, schedule: RateSchedule, duration: float,
+             cost: SimCostModel, fail_times, ci_static=None,
+             controller: KhaosController | None = None,
+             initial_tr: float | None = None) -> RunResult:
+    ci0 = ci_static or 60.0
+    if controller is not None and initial_tr is not None:
+        ci0 = controller.initial_ci(initial_tr) or ci0
+    sim = StreamSimulator(cost, ci_s=ci0, schedule=schedule)
+    job = SimJobHandle(sim)
+    inj = FailureInjector()
+    for ft in fail_times:
+        # worst case: just before the next checkpoint completes (per-job CI)
+        t = inj.worst_case_time(float(ft), 0.0, sim.policy.interval_s,
+                                cost.ckpt_duration_s)
+        sim.inject_failure(t)
+    while sim.t < duration:
+        sim.tick()
+        if controller is not None:
+            ctl_obs = controller.maybe_optimize(job)
+            del ctl_obs
+    lat = np.array(sim.metrics.series("latency").values)
+    recs = [r["recovery_s"] for r in sim.recoveries]
+    if controller is not None:
+        ci_now = sim.policy.interval_s
+        for r in sim.recoveries:
+            controller.record_recovery(r["ci"], 0.0, r["recovery_s"])
+    return RunResult(
+        name=name,
+        avg_latency_ms=float(np.mean(lat) * 1e3),
+        lat_violation_frac=float(np.mean(lat > L_CONST)),
+        total_recovery_s=float(np.sum(recs)),
+        recovery_violation_s=float(sum(max(0.0, r - R_CONST) for r in recs)),
+        reconfigurations=len(job.reconfigurations),
+        recoveries=recs,
+    )
+
+
+def _run_once(schedule: RateSchedule, cost: SimCostModel, duration: float,
+              seed: int):
+    recording = record_workload(schedule, duration=min(duration, 14_400.0),
+                                seed=seed)
+    controller, prof = make_khaos(recording, cost, seed)
+    fails = failure_times_by_throughput(
+        record_workload(schedule, duration=duration, seed=seed + 1))
+    rows = [evaluate("Khaos", schedule, duration, cost, fails,
+                     controller=controller,
+                     initial_tr=float(np.mean(recording.counts)))]
+    for ci in STATIC_CIS:
+        rows.append(evaluate(f"{int(ci)}s", schedule, duration, cost, fails,
+                             ci_static=ci))
+    # post-execution error analysis (Tables II(a)/III(a)): latency tracked per
+    # optimization cycle, recovery at failures with the TR at failure time
+    err = {}
+    if controller.latency_obs:
+        ci_a, tr_a, y = map(np.array, zip(*controller.latency_obs))
+        err["latency_pct_error"] = controller.m_l.avg_percent_error(ci_a, tr_a, y)
+    # recovery error: predictions vs the profiling ground truth
+    ci_f, tr_f, _, R_f = prof.flat()
+    err["recovery_pct_error"] = controller.m_r.avg_percent_error(ci_f, tr_f, R_f)
+    return rows, err
+
+
+def run_experiment(exp_name: str, schedule: RateSchedule, cost: SimCostModel,
+                   duration: float = 86_400.0, seed: int = 0,
+                   repeats: int = 3):
+    """Full paper protocol, median over ``repeats`` runs (paper: 5).
+    Returns (rows, error_analysis)."""
+    all_rows, all_errs = [], []
+    for rep in range(repeats):
+        rows, err = _run_once(schedule, cost, duration, seed + 100 * rep)
+        all_rows.append(rows)
+        all_errs.append(err)
+    med_rows = []
+    for i in range(len(all_rows[0])):
+        med_rows.append(RunResult(
+            name=all_rows[0][i].name,
+            avg_latency_ms=float(np.median([r[i].avg_latency_ms for r in all_rows])),
+            lat_violation_frac=float(np.median([r[i].lat_violation_frac for r in all_rows])),
+            total_recovery_s=float(np.median([r[i].total_recovery_s for r in all_rows])),
+            recovery_violation_s=float(np.median([r[i].recovery_violation_s for r in all_rows])),
+            reconfigurations=int(np.median([r[i].reconfigurations for r in all_rows])),
+            recoveries=all_rows[0][i].recoveries,
+        ))
+    err = {k: float(np.median([e[k] for e in all_errs if k in e]))
+           for k in all_errs[0]}
+    return med_rows, err
+
+
+def print_table(exp: str, rows, err) -> None:
+    print(f"\n=== {exp} ===")
+    print(f"{'Configuration':>16s} " + " ".join(f"{r.name:>8s}" for r in rows))
+    print(f"{'Avg Latency (ms)':>16s} " +
+          " ".join(f"{r.avg_latency_ms:8.0f}" for r in rows))
+    print(f"{'Lat Viol (%)':>16s} " +
+          " ".join(f"{100*r.lat_violation_frac:8.2f}" for r in rows))
+    print(f"{'Recovery (s)':>16s} " +
+          " ".join(f"{r.total_recovery_s:8.0f}" for r in rows))
+    print(f"{'Rec Viol (s)':>16s} " +
+          " ".join(f"{r.recovery_violation_s:8.0f}" for r in rows))
+    print(f"{'Reconfigs':>16s} " +
+          " ".join(f"{r.reconfigurations:8d}" for r in rows))
+    print(f"error analysis: latency={err.get('latency_pct_error', float('nan')):.3f} "
+          f"recovery={err.get('recovery_pct_error', float('nan')):.3f} "
+          f"(paper: 0.099-0.122 / 0.073-0.131)")

@@ -1,0 +1,42 @@
+"""Benchmark driver — one section per paper table/figure (DESIGN.md §6):
+
+  E1  IoT-Vehicles analogue  (paper Table II, Fig. 2a/2c, Fig. 3a)
+  E2  YSB analogue           (paper Table III, Fig. 2b/2d, Fig. 3b)
+  E4  recovery/latency vs CI (paper §III-C premise)
+  E5  checkpoint subsystem   (beyond-paper; calibrates sim cost model)
+  E6  kernel validation      (oracle timings + interpret-mode allclose)
+  E7  dry-run / roofline     (reads experiments/dryrun.json)
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="single repetition for E1/E2 (default: median of 3)")
+    args = ap.parse_args()
+
+    t0 = time.monotonic()
+    from benchmarks import (bench_ckpt, bench_dryrun, bench_kernels,
+                            bench_khaos_training, bench_recovery,
+                            bench_tables)
+
+    repeats = 1 if args.quick else 3
+    bench_tables.bench_iot_vehicles(repeats=repeats)
+    bench_tables.bench_ysb(repeats=repeats)
+    bench_recovery.main()
+    bench_khaos_training.main()
+    bench_ckpt.main()
+    bench_kernels.main()
+    bench_dryrun.main()
+    print(f"\nall benchmarks done in {time.monotonic() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Phase-2 deep dive: parallel profiling deployments, worst-case injection,
+and the (CI x TR) -> latency/recovery surfaces Khaos learns.
+
+    PYTHONPATH=src python examples/chaos_profiling.py
+"""
+import numpy as np
+
+from repro.core import QoSModel, run_profiling, select_failure_points
+from repro.data.stream import diurnal_rate, record_workload
+from repro.sim import SimCostModel, SimDeployment
+
+sched = diurnal_rate(base=2500, amplitude=0.6, period=10_800, seed=9)
+recording = record_workload(sched, duration=10_800, seed=9)
+steady = select_failure_points(recording, m=5, smoothing_window=30)
+cost = SimCostModel(capacity_eps=4400.0, ckpt_duration_s=3.0,
+                    ckpt_sync_penalty=0.6)
+
+ci_values = [10, 30, 60, 90, 120]
+print("profiling 5 parallel deployments x 5 worst-case failure injections...")
+prof = run_profiling(
+    lambda ci: SimDeployment(ci, recording, cost),
+    steady, ci_values, margin=90,
+    progress=lambda msg: print("  " + msg))
+
+print("\nLatency surface L (ms)  [rows: failure points by rate; cols: CI]")
+hdr = "  TR \\ CI " + " ".join(f"{c:>7d}" for c in ci_values)
+print(hdr)
+for i, tr in enumerate(prof.failure_rates):
+    print(f"{tr:9.0f} " + " ".join(f"{v*1e3:7.0f}" for v in prof.latencies[i]))
+
+print("\nRecovery surface R (s)")
+print(hdr)
+for i, tr in enumerate(prof.failure_rates):
+    print(f"{tr:9.0f} " + " ".join(f"{v:7.0f}" for v in prof.recoveries[i]))
+
+ci_f, tr_f, L_f, R_f = prof.flat()
+m_l = QoSModel().fit(ci_f, tr_f, L_f)
+m_r = QoSModel().fit(ci_f, tr_f, R_f)
+print(f"\nM_L avg pct error: {m_l.avg_percent_error(ci_f, tr_f, L_f):.3f}  "
+      f"M_R: {m_r.avg_percent_error(ci_f, tr_f, R_f):.3f}")
+print("M_R predictions at TR=3500:",
+      np.round(m_r.predict(np.array(ci_values, float), 3500.0)).astype(int).tolist())

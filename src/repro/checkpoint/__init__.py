@@ -1,0 +1,10 @@
+from repro.checkpoint.store import CheckpointStore, CheckpointMeta
+from repro.checkpoint.async_ckpt import AsyncCheckpointer
+from repro.checkpoint.incremental import IncrementalCheckpointer
+from repro.checkpoint.multilevel import MultiLevelCheckpointer
+from repro.checkpoint.policy import CheckpointPolicy
+
+__all__ = [
+    "CheckpointStore", "CheckpointMeta", "AsyncCheckpointer",
+    "IncrementalCheckpointer", "MultiLevelCheckpointer", "CheckpointPolicy",
+]

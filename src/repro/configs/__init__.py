@@ -1,0 +1,43 @@
+"""Architecture config registry.
+
+Each assigned architecture lives in ``repro/configs/<id>.py`` (dashes ->
+underscores) and exposes ``CONFIG`` (the exact published config) and
+``SMOKE`` (a reduced same-family config for CPU smoke tests).
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCH_IDS = (
+    "internlm2-20b",
+    "yi-6b",
+    "codeqwen1.5-7b",
+    "qwen2.5-14b",
+    "recurrentgemma-2b",
+    "olmoe-1b-7b",
+    "grok-1-314b",
+    "rwkv6-3b",
+    "qwen2-vl-7b",
+    "whisper-small",
+)
+
+
+def _module(arch: str):
+    mod = arch.replace("-", "_").replace(".", "_")
+    return importlib.import_module(f"repro.configs.{mod}")
+
+
+def get_config(arch: str):
+    if arch not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch!r}; available: {ARCH_IDS}")
+    return _module(arch).CONFIG
+
+
+def get_smoke_config(arch: str):
+    if arch not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch!r}; available: {ARCH_IDS}")
+    return _module(arch).SMOKE
+
+
+def list_archs() -> tuple[str, ...]:
+    return ARCH_IDS

@@ -1,0 +1,31 @@
+"""Khaos core: the paper's contribution (chaos-engineering-driven runtime
+optimization of the checkpoint interval).
+
+Phase 1  steady_state     — workload recording analysis, failure-point selection
+Phase 2  profiler          — parallel profiling deployments + worst-case failure
+                             injection; anomaly-detector recovery measurement
+Phase 3  qos_models        — M_L / M_R multivariate regression + rescaling p
+         forecast          — TSF deferral rule
+         ci_optimizer      — Eq. 8 multi-objective CI selection
+         controller        — the runtime optimization loop
+
+The control plane runs host-side (NumPy) — it supervises the JAX data plane
+(the distributed training/serving job), exactly as the paper's controller
+supervises Flink from outside the cluster.
+"""
+from repro.core.arima import OnlineARIMA
+from repro.core.anomaly import AnomalyDetector
+from repro.core.steady_state import select_failure_points, SteadyState
+from repro.core.qos_models import QoSModel, RescalingTracker
+from repro.core.forecast import WorkloadForecaster
+from repro.core.ci_optimizer import optimize_ci
+from repro.core.controller import KhaosController
+from repro.core.young_daly import young_daly_interval
+from repro.core.profiler import run_profiling, ProfilingResult
+
+__all__ = [
+    "OnlineARIMA", "AnomalyDetector", "select_failure_points", "SteadyState",
+    "QoSModel", "RescalingTracker", "WorkloadForecaster", "optimize_ci",
+    "KhaosController", "young_daly_interval",
+    "run_profiling", "ProfilingResult",
+]

@@ -1,0 +1,49 @@
+"""Phase 3 optimization step — Eq. 8 (paper §III-D):
+
+    min_C   Q_R + Q_L* + |Q_R - Q_L*|
+    s.t.    Q_R < 1,  Q_L* < 1,  Q_R, Q_L* > 0
+
+with Q_R = M_R(C, TR_avg)/r_const and Q_L* = p * M_L(C, TR_avg)/l_const.
+The objective prefers the CI with the furthest *balanced* distance from
+both upper bounds.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+from repro.core.qos_models import QoSModel
+
+
+@dataclass
+class CIOptimization:
+    ci: Optional[float]
+    feasible: bool
+    q_r: float
+    q_l: float
+    objective: float
+
+
+def optimize_ci(m_l: QoSModel, m_r: QoSModel, tr_avg: float,
+                l_const: float, r_const: float, p: float,
+                ci_min: float, ci_max: float, grid: int = 256) -> CIOptimization:
+    ci = np.linspace(ci_min, ci_max, grid)
+    q_r = m_r.predict(ci, tr_avg) / r_const
+    q_l = p * m_l.predict(ci, tr_avg) / l_const
+    obj = q_r + q_l + np.abs(q_r - q_l)
+    feas = (q_r < 1.0) & (q_l < 1.0) & (q_r > 0.0) & (q_l > 0.0)
+
+    if feas.any():
+        masked = np.where(feas, obj, np.inf)
+        i = int(np.argmin(masked))
+        return CIOptimization(float(ci[i]), True, float(q_r[i]), float(q_l[i]),
+                              float(obj[i]))
+    # No feasible CI: the paper requires a constraint to be satisfiable to
+    # optimize ("reconfigurations are applied sparsely ... CI updates were
+    # aborted"); report the least-violating point but flag infeasible.
+    viol = np.maximum(q_r - 1, 0) + np.maximum(q_l - 1, 0) + \
+        np.maximum(-q_r, 0) + np.maximum(-q_l, 0)
+    i = int(np.argmin(viol))
+    return CIOptimization(None, False, float(q_r[i]), float(q_l[i]), float(obj[i]))

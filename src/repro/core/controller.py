@@ -1,0 +1,153 @@
+"""Phase 3 — the runtime optimization loop (paper §III-D).
+
+Monitors the production job for violations of the two QoS constraints
+(average end-to-end latency vs ``l_const``; predicted worst-case recovery
+time vs ``r_const``), defers reconfiguration when the TSF expects the
+workload to drop >10%, and otherwise solves Eq. 8 for a new CI.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Protocol
+
+import numpy as np
+
+from repro.config import KhaosConfig
+from repro.core.ci_optimizer import optimize_ci
+from repro.core.forecast import WorkloadForecaster
+from repro.core.qos_models import QoSModel, RescalingTracker
+
+
+class JobHandle(Protocol):
+    """The controller's view of the supervised production job."""
+
+    def now(self) -> float: ...
+    def current_ci(self) -> float: ...
+    def avg_latency(self, window_s: float) -> float: ...
+    def avg_throughput(self, window_s: float) -> float: ...
+    def healthy(self) -> bool:
+        """False while the job is down or catching up after a failure —
+        latency samples then reflect the failure, not the (CI, TR) -> L
+        mapping, and reconfiguration would be aborted anyway (§IV-D)."""
+        ...
+
+    def reconfigure(self, new_ci: float) -> None:
+        """Controlled reconfiguration: checkpoint-now, then apply the CI."""
+        ...
+
+
+@dataclass
+class Decision:
+    t: float
+    kind: str            # none | defer | reconfigure | infeasible | cooldown
+    latency: float
+    tr_avg: float
+    predicted_recovery: float
+    new_ci: Optional[float] = None
+
+
+@dataclass
+class KhaosController:
+    cfg: KhaosConfig
+    m_l: QoSModel
+    m_r: QoSModel
+    forecaster: WorkloadForecaster = None
+    rescaler: RescalingTracker = None
+    decisions: list = field(default_factory=list)
+    _last_reconfig_t: float = -1e18
+    _last_opt_t: float = -1e18
+    # error-analysis tracking (Tables II(a)/III(a))
+    latency_obs: list = field(default_factory=list)    # (ci, tr, observed)
+    recovery_obs: list = field(default_factory=list)
+
+    def __post_init__(self) -> None:
+        if self.forecaster is None:
+            self.forecaster = WorkloadForecaster(
+                horizon=self.cfg.forecast_horizon,
+                defer_drop_fraction=self.cfg.defer_drop_fraction)
+        if self.rescaler is None:
+            self.rescaler = RescalingTracker(k=self.cfg.rescale_history)
+
+    # ------------------------------------------------------------------
+    def record_recovery(self, ci: float, tr: float, recovery_s: float) -> None:
+        """Called by the runtime when an actual failure recovery was measured."""
+        self.recovery_obs.append((ci, tr, recovery_s))
+
+    def initial_ci(self, tr_avg: float) -> Optional[float]:
+        """Pick the starting CI from the freshly-fitted models (end of
+        Phase 2): the Eq. 8 optimum at the recorded average throughput."""
+        res = optimize_ci(self.m_l, self.m_r, tr_avg,
+                          self.cfg.latency_constraint,
+                          self.cfg.recovery_constraint, 1.0,
+                          self.cfg.ci_min, self.cfg.ci_max)
+        return res.ci if res.feasible else None
+
+    def maybe_optimize(self, job: JobHandle) -> Optional[Decision]:
+        """Run one optimization cycle if the period elapsed. Returns the
+        decision made (or None if not yet due)."""
+        t = job.now()
+        if t - self._last_opt_t < self.cfg.optimization_period:
+            return None
+        self._last_opt_t = t
+
+        if not getattr(job, "healthy", lambda: True)():
+            return self._decide(t, "unhealthy", float("nan"), float("nan"),
+                                float("nan"))
+
+        window = self.cfg.optimization_period
+        lat = job.avg_latency(window)
+        tr_avg = job.avg_throughput(window)
+        ci_now = job.current_ci()
+        self.forecaster.observe(tr_avg)
+
+        if not np.isfinite(lat) or not np.isfinite(tr_avg):
+            return self._decide(t, "none", lat, tr_avg, float("nan"))
+
+        # localize M_L predictions to current conditions (rescaling factor p)
+        pred_lat = float(self.m_l.predict(np.array([ci_now]), tr_avg)[0])
+        self.rescaler.track(lat, pred_lat)
+        self.latency_obs.append((ci_now, tr_avg, lat))
+
+        # violation checks
+        pred_rec = float(self.m_r.predict(np.array([ci_now]), tr_avg)[0])
+        lat_violation = lat > self.cfg.latency_constraint
+        rec_violation = pred_rec > self.cfg.recovery_constraint
+        if not (lat_violation or rec_violation):
+            return self._decide(t, "none", lat, tr_avg, pred_rec)
+
+        # TSF deferral: workload expected to drop > 10% -> defer
+        if self.forecaster.should_defer():
+            return self._decide(t, "defer", lat, tr_avg, pred_rec)
+
+        if t - self._last_reconfig_t < self.cfg.reconfig_cooldown:
+            return self._decide(t, "cooldown", lat, tr_avg, pred_rec)
+
+        res = optimize_ci(self.m_l, self.m_r, tr_avg,
+                          self.cfg.latency_constraint,
+                          self.cfg.recovery_constraint,
+                          self.rescaler.p,
+                          self.cfg.ci_min, self.cfg.ci_max)
+        if not res.feasible or res.ci is None:
+            return self._decide(t, "infeasible", lat, tr_avg, pred_rec)
+        if abs(res.ci - ci_now) < 1.0:   # no meaningful change
+            return self._decide(t, "none", lat, tr_avg, pred_rec)
+
+        job.reconfigure(res.ci)
+        self._last_reconfig_t = t
+        return self._decide(t, "reconfigure", lat, tr_avg, pred_rec, res.ci)
+
+    def _decide(self, t, kind, lat, tr, rec, new_ci=None) -> Decision:
+        d = Decision(t, kind, lat, tr, rec, new_ci)
+        self.decisions.append(d)
+        return d
+
+    # -- post-execution error analysis (paper Tables II(a)/III(a)) -----------
+    def error_analysis(self) -> dict:
+        out = {}
+        if self.latency_obs:
+            ci, tr, y = map(np.array, zip(*self.latency_obs))
+            out["latency_avg_pct_error"] = self.m_l.avg_percent_error(ci, tr, y)
+        if self.recovery_obs:
+            ci, tr, y = map(np.array, zip(*self.recovery_obs))
+            out["recovery_avg_pct_error"] = self.m_r.avg_percent_error(ci, tr, y)
+        return out

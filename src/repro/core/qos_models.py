@@ -1,0 +1,87 @@
+"""Phase 3 models — performance model M_L : (C, TR) -> L and recovery-time
+model M_R : (C, TR) -> R (paper §III-D): multivariate polynomial ridge
+regression, plus the prediction-rescaling factor ``p``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+
+def _features(ci_n: np.ndarray, tr_n: np.ndarray, ci_raw: np.ndarray,
+              degree: int, rational: bool) -> np.ndarray:
+    """Design matrix over (ci, tr): full polynomial of ``degree`` plus
+    (optionally) rational terms in CI.  Checkpoint economics are rational:
+    per-checkpoint overhead scales with 1/CI while lost work scales with CI,
+    so 1/ci and tr/ci features capture the recovery/latency surfaces that a
+    plain quadratic cannot (this is still "multivariate regression" in the
+    paper's sense — only the basis is richer)."""
+    cols = [np.ones_like(ci_n)]
+    for dtot in range(1, degree + 1):
+        for i in range(dtot + 1):
+            cols.append((ci_n ** (dtot - i)) * (tr_n ** i))
+    if rational:
+        inv = 1.0 / np.maximum(ci_raw, 1e-9)
+        cols.append(inv)
+        cols.append(inv * tr_n)
+        cols.append(inv * inv)
+    return np.stack(cols, axis=-1)
+
+
+@dataclass
+class QoSModel:
+    """Ridge regression y ~ basis(ci, tr)."""
+    degree: int = 2
+    ridge_lambda: float = 1e-3
+    rational: bool = True
+    _beta: Optional[np.ndarray] = None
+    _mu: Optional[np.ndarray] = None
+    _sd: Optional[np.ndarray] = None
+
+    def _design(self, ci: np.ndarray, tr: np.ndarray) -> np.ndarray:
+        return _features((ci - self._mu[0]) / self._sd[0],
+                         (tr - self._mu[1]) / self._sd[1],
+                         ci, self.degree, self.rational)
+
+    def fit(self, ci: np.ndarray, tr: np.ndarray, y: np.ndarray) -> "QoSModel":
+        ci, tr, y = map(lambda a: np.asarray(a, np.float64).ravel(), (ci, tr, y))
+        self._mu = np.array([ci.mean(), tr.mean()])
+        self._sd = np.array([ci.std() + 1e-9, tr.std() + 1e-9])
+        X = self._design(ci, tr)
+        lam = self.ridge_lambda * np.eye(X.shape[1])
+        lam[0, 0] = 0.0   # don't penalize the intercept
+        self._beta = np.linalg.solve(X.T @ X + lam, X.T @ y)
+        return self
+
+    def predict(self, ci, tr) -> np.ndarray:
+        assert self._beta is not None, "fit first"
+        ci = np.asarray(ci, np.float64)
+        tr = np.broadcast_to(np.asarray(tr, np.float64), ci.shape)
+        return self._design(ci, tr) @ self._beta
+
+    def avg_percent_error(self, ci, tr, y) -> float:
+        """The paper's post-execution error analysis (Tables II(a)/III(a))."""
+        pred = self.predict(np.asarray(ci, np.float64), np.asarray(tr, np.float64))
+        y = np.asarray(y, np.float64).ravel()
+        return float(np.mean(np.abs(pred - y) / np.maximum(np.abs(y), 1e-9)))
+
+
+@dataclass
+class RescalingTracker:
+    """The paper's correction factor p: average of the k pairwise fractional
+    differences between observed latencies and model predictions, used to
+    localize M_L to current cluster conditions."""
+    k: int = 5
+    _pairs: list = field(default_factory=list)
+
+    def track(self, observed: float, predicted: float) -> None:
+        if predicted > 1e-12:
+            self._pairs.append(observed / predicted)
+            if len(self._pairs) > self.k:
+                self._pairs.pop(0)
+
+    @property
+    def p(self) -> float:
+        return float(np.mean(self._pairs)) if self._pairs else 1.0

@@ -1,0 +1,64 @@
+"""Elastic rescaling: derive a runnable mesh from the surviving hosts and
+restore the latest checkpoint onto it.
+
+The checkpoint store's manifest-driven restore is shard-count agnostic
+(checkpoint/store.py), so a rescale is: plan new mesh -> restore -> resume
+from the checkpointed stream cursor.  The planner keeps the TP degree
+(model-parallel sharding must divide weight dims) and shrinks the data
+axis to the largest value that fits — spare hosts become hot standbys.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.config import MeshConfig
+
+
+@dataclass
+class RescalePlan:
+    old: MeshConfig
+    new: MeshConfig
+    hosts_alive: int
+    hosts_used: int
+    standby: int
+    batch_ok: bool         # global batch still divisible by the new dp
+
+    @property
+    def changed(self) -> bool:
+        return self.new.shape != self.old.shape
+
+
+def plan_rescale(mesh: MeshConfig, hosts_alive: int, chips_per_host: int = 4,
+                 global_batch: Optional[int] = None) -> RescalePlan:
+    """Largest (data' x model) mesh that fits the surviving chips.
+
+    TP ('model') is pinned: resharding TP requires repartitioning every
+    weight, while shrinking 'data' only re-spreads the batch and FSDP
+    shards — exactly what manifest-driven restore gives us for free.
+    """
+    chips = hosts_alive * chips_per_host
+    model = mesh.model
+    pods = mesh.pods if mesh.multi_pod else 1
+    if chips < model:
+        raise ValueError(f"cannot keep TP={model} with only {chips} chips")
+    # keep multi-pod only if both pods can stay symmetric
+    new_multi = mesh.multi_pod and chips >= 2 * model
+    per_pod_chips = chips // (2 if new_multi else 1)
+    new_data = max(1, per_pod_chips // model)
+    # data axis must divide the global batch for clean batch sharding
+    if global_batch:
+        dp_total = new_data * (2 if new_multi else 1)
+        while new_data > 1 and global_batch % dp_total != 0:
+            new_data -= 1
+            dp_total = new_data * (2 if new_multi else 1)
+    new = MeshConfig(multi_pod=new_multi, data=new_data, model=model,
+                     pods=2 if new_multi else mesh.pods)
+    used_chips = new.num_devices
+    batch_ok = (global_batch is None) or (
+        global_batch % (new_data * (2 if new_multi else 1)) == 0)
+    return RescalePlan(
+        old=mesh, new=new, hosts_alive=hosts_alive,
+        hosts_used=-(-used_chips // chips_per_host),
+        standby=hosts_alive - (-(-used_chips // chips_per_host)),
+        batch_ok=batch_ok)

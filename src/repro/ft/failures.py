@@ -1,0 +1,88 @@
+"""Failure models and injection (the chaos in Khaos).
+
+* ``FailureModel`` samples node failures from exponential (Poisson process)
+  or Weibull (infant-mortality / wear-out) inter-arrival distributions —
+  feeds both the simulator's background failures and MTBF estimates for
+  the Young/Daly baseline.
+* ``FailureInjector`` implements the paper's worst-case injection: given
+  the checkpoint schedule, a requested injection time is snapped to just
+  before the *next checkpoint completes* (maximizing lost work, §III-C).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+
+class InjectedFailure(RuntimeError):
+    """Raised inside the live trainer loop to simulate a host crash."""
+
+    def __init__(self, kind: str = "node", host: int = 0, t: float = 0.0):
+        super().__init__(f"injected {kind} failure on host {host} at t={t:.1f}")
+        self.kind = kind
+        self.host = host
+        self.t = t
+
+
+@dataclass
+class FailureModel:
+    mtbf_node_s: float = 86_400.0      # per-node MTBF
+    num_nodes: int = 64
+    distribution: str = "exponential"  # exponential | weibull
+    weibull_shape: float = 0.7         # <1: infant mortality
+    seed: int = 0
+    kinds: tuple = (("task", 0.3), ("node", 0.65), ("cluster", 0.05))
+
+    def __post_init__(self) -> None:
+        self._rng = np.random.default_rng(self.seed)
+
+    @property
+    def cluster_mtbf_s(self) -> float:
+        return self.mtbf_node_s / max(1, self.num_nodes)
+
+    def next_failure_after(self, t: float) -> float:
+        scale = self.cluster_mtbf_s
+        if self.distribution == "exponential":
+            dt = self._rng.exponential(scale)
+        else:
+            k = self.weibull_shape
+            lam = scale / math.gamma(1 + 1 / k)   # mean matches the MTBF
+            dt = lam * self._rng.weibull(k)
+        return t + float(max(dt, 1.0))
+
+    def sample_kind(self) -> str:
+        kinds, probs = zip(*self.kinds)
+        return str(self._rng.choice(kinds, p=probs))
+
+    def sample_host(self) -> int:
+        return int(self._rng.integers(self.num_nodes))
+
+
+@dataclass
+class FailureInjector:
+    """Deterministic injection scheduler for profiling and baselines."""
+    epsilon_s: float = 1.0
+    log: list = field(default_factory=list)
+
+    def worst_case_time(self, requested_t: float, last_ckpt_t: float,
+                        interval_s: float, ckpt_cost_s: float) -> float:
+        """Paper §III-C: inject just before the next checkpoint *completes*.
+
+        The next checkpoint after ``requested_t`` starts at the next
+        multiple of the interval and completes ``ckpt_cost_s`` later; we
+        inject epsilon before that completion so the job replays a full
+        interval's worth of work.
+        """
+        if interval_s <= 0:
+            return requested_t
+        k = np.ceil(max(requested_t - last_ckpt_t, 0.0) / interval_s)
+        next_start = last_ckpt_t + k * interval_s
+        if next_start < requested_t:
+            next_start += interval_s
+        completion = next_start + ckpt_cost_s
+        t = max(requested_t, completion - self.epsilon_s)
+        self.log.append({"requested": requested_t, "injected": t})
+        return float(t)

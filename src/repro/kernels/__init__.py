@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the perf-critical compute hot-spots.
+
+Each kernel ships three files:
+  kernel.py — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — the jit'd public wrapper (``interpret=`` switch for CPU)
+  ref.py    — pure-jnp/numpy oracle used by the allclose test sweeps
+
+Kernels are the TPU fast path behind the model zoo's ``attn_impl="pallas"``;
+the XLA fallbacks remain the default on CPU (DESIGN.md §8).
+"""

@@ -1,0 +1,3 @@
+from repro.kernels.ckpt_delta.ops import delta_encode, delta_decode
+
+__all__ = ["delta_encode", "delta_decode"]

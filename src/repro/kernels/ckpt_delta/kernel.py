@@ -1,0 +1,90 @@
+"""Incremental-checkpoint delta codec kernel (TPU Pallas).
+
+Fused on-device encode: delta = new - base, per-group symmetric int8
+quantization (group = 1024 elements).  Runs as part of the async snapshot
+so only int8 payload + fp32 scales cross the device->host link — an ~3.5x
+cut of checkpoint bytes *before* host-side zstd (this is the level-1 codec
+in the multi-level scheme, and the same payload format the cross-pod
+gradient compressor uses).
+
+  new, base  (N,)        viewed as (N/G, G); block (bg, G)
+  q          (N,) int8   block (bg, G)
+  scale      (N/G,) f32  block (bg,)
+
+VMEM per step: 3 * bg * G fp32 (8 x 1024 -> 96 KB).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+GROUP = 1024
+
+
+def _encode_kernel(new_ref, base_ref, q_ref, s_ref):
+    d = new_ref[...].astype(jnp.float32) - base_ref[...].astype(jnp.float32)
+    amax = jnp.max(jnp.abs(d), axis=1)                    # (bg,)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(d / scale[:, None]), -127, 127)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale
+
+
+def _decode_kernel(q_ref, s_ref, d_ref):
+    d_ref[...] = q_ref[...].astype(jnp.float32) * s_ref[...][:, None]
+
+
+def _pad_to_groups(x: jax.Array) -> tuple[jax.Array, int]:
+    n = x.shape[0]
+    pad = (-n) % GROUP
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,), x.dtype)])
+    return x, n
+
+
+def delta_encode_fwd(new: jax.Array, base: jax.Array, *, block_groups: int = 8,
+                     interpret: bool = False):
+    new, n = _pad_to_groups(new.reshape(-1))
+    base, _ = _pad_to_groups(base.reshape(-1))
+    ng = new.shape[0] // GROUP
+    bg = min(block_groups, ng)
+    while ng % bg != 0:
+        bg -= 1
+    new2 = new.reshape(ng, GROUP)
+    base2 = base.reshape(ng, GROUP)
+    q, s = pl.pallas_call(
+        _encode_kernel,
+        grid=(ng // bg,),
+        in_specs=[pl.BlockSpec((bg, GROUP), lambda i: (i, 0)),
+                  pl.BlockSpec((bg, GROUP), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((bg, GROUP), lambda i: (i, 0)),
+                   pl.BlockSpec((bg,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((ng, GROUP), jnp.int8),
+                   jax.ShapeDtypeStruct((ng,), jnp.float32)],
+        interpret=interpret,
+    )(new2, base2)
+    del n
+    return q.reshape(-1), s   # padded to a multiple of GROUP; decode+slice
+
+
+def delta_decode_fwd(q: jax.Array, scales: jax.Array, *, block_groups: int = 8,
+                     interpret: bool = False) -> jax.Array:
+    qp, n = _pad_to_groups(q.reshape(-1))
+    ng = qp.shape[0] // GROUP
+    bg = min(block_groups, ng)
+    while ng % bg != 0:
+        bg -= 1
+    d = pl.pallas_call(
+        _decode_kernel,
+        grid=(ng // bg,),
+        in_specs=[pl.BlockSpec((bg, GROUP), lambda i: (i, 0)),
+                  pl.BlockSpec((bg,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((bg, GROUP), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((ng, GROUP), jnp.float32),
+        interpret=interpret,
+    )(qp.reshape(ng, GROUP), scales)
+    del n
+    return d.reshape(-1)   # padded length; caller slices to the leaf size

@@ -1,0 +1,22 @@
+"""Public jit'd wrappers for the delta codec kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.ckpt_delta.kernel import delta_decode_fwd, delta_encode_fwd
+
+
+@partial(jax.jit, static_argnames=("block_groups", "interpret"))
+def delta_encode(new, base, *, block_groups: int = 8, interpret: bool = False):
+    """(new - base) -> (int8 payload, per-1024-group fp32 scales)."""
+    return delta_encode_fwd(new, base, block_groups=block_groups,
+                            interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("block_groups", "interpret"))
+def delta_decode(q, scales, *, block_groups: int = 8, interpret: bool = False):
+    """Inverse of delta_encode (returns fp32 delta)."""
+    return delta_decode_fwd(q, scales, block_groups=block_groups,
+                            interpret=interpret)

@@ -1,0 +1,25 @@
+"""NumPy oracle for the delta codec (also the host-side fallback used by
+checkpoint/incremental.py in int8 mode)."""
+from __future__ import annotations
+
+import numpy as np
+
+GROUP = 1024
+
+
+def encode_ref(delta: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    d = np.asarray(delta, np.float32).reshape(-1)
+    n = d.size
+    pad = (-n) % GROUP
+    if pad:
+        d = np.concatenate([d, np.zeros(pad, np.float32)])
+    d = d.reshape(-1, GROUP)
+    scale = np.maximum(np.abs(d).max(axis=1), 1e-12) / 127.0
+    q = np.clip(np.round(d / scale[:, None]), -127, 127).astype(np.int8)
+    del n
+    return q.reshape(-1), scale.astype(np.float32)   # padded payload
+
+
+def decode_ref(q: np.ndarray, scales: np.ndarray) -> np.ndarray:
+    q = np.asarray(q, np.int8).reshape(-1, GROUP)
+    return (q.astype(np.float32) * np.asarray(scales, np.float32)[:, None]).reshape(-1)

@@ -1,0 +1,127 @@
+"""Flash attention forward kernel (TPU Pallas).
+
+Canonical TPU streaming-softmax layout:
+  grid = (B, H, nq, nkv) — the innermost kv axis is sequential on TPU, so
+  the output block (index_map independent of j) stays resident in VMEM and
+  accumulates across kv chunks; running max/denominator live in two small
+  side outputs.
+
+  q     (B, S, H, hd)   block (1, bq, 1, hd)
+  k, v  (B, S, K, hd)   block (1, bkv, 1, hd); GQA: kv head = h // (H // K)
+  o     (B, S, H, hd)   block (1, bq, 1, hd)  fp32 accumulator
+  m, l  (B, H, S)       block (1, 1, bq)      running max / sum
+
+VMEM working set per step: bq*hd + 2*bkv*hd + bq*bkv fp32
+(512, 1024, hd=128 -> ~1.3 MB) — MXU dims are multiples of 128.
+
+Causal / sliding-window masking is positional; fully-masked (i, j) pairs
+are skipped with pl.when (the DMA still runs; the paper's roofline
+methodology charges the skipped FLOPs at zero).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
+            scale: float, causal: bool, window: int, softcap: float,
+            bq: int, bkv: int, nkv: int):
+    j = pl.program_id(3)
+    qi = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    q_start = qi * bq
+    k_start = j * bkv
+    # skip blocks that are entirely masked out
+    relevant = jnp.bool_(True)
+    if causal:
+        relevant = relevant & (k_start <= q_start + bq - 1)
+    if window > 0 and causal:
+        relevant = relevant & (k_start + bkv - 1 >= q_start - (window - 1))
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)        # (bq, hd)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)        # (bkv, hd)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap and softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+        allow = jnp.ones((bq, bkv), jnp.bool_)
+        if causal:
+            allow = allow & (k_pos <= q_pos)
+        if window > 0:
+            allow = allow & (q_pos - k_pos < window)
+        s = jnp.where(allow, s, -1e30)
+
+        m_prev = m_ref[0, 0, :]                          # (bq,)
+        l_prev = l_ref[0, 0, :]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l_prev * corr + p.sum(axis=1)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        o_ref[0, :, 0, :] = o_ref[0, :, 0, :] * corr[:, None] + pv
+        m_ref[0, 0, :] = m_new
+        l_ref[0, 0, :] = l_new
+
+    @pl.when(j == nkv - 1)
+    def _finalize():
+        l = l_ref[0, 0, :]
+        o_ref[0, :, 0, :] = o_ref[0, :, 0, :] / jnp.maximum(l, 1e-30)[:, None]
+
+
+def flash_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0,
+                        softcap: float = 0.0, block_q: int = 128,
+                        block_kv: int = 128, interpret: bool = False
+                        ) -> jax.Array:
+    B, S, H, hd = q.shape
+    Skv, K = k.shape[1], k.shape[2]
+    G = H // K
+    bq = min(block_q, S)
+    bkv = min(block_kv, Skv)
+    assert S % bq == 0 and Skv % bkv == 0, "seq must divide block size"
+    nq, nkv = S // bq, Skv // bkv
+    scale = 1.0 / math.sqrt(hd)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window, softcap=softcap,
+        bq=bq, bkv=bkv, nkv=nkv)
+
+    o, m, l = pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, hd), lambda b, h, i, j: (b, i, h, 0)),
+            pl.BlockSpec((1, bkv, 1, hd), lambda b, h, i, j: (b, j, h // G, 0)),
+            pl.BlockSpec((1, bkv, 1, hd), lambda b, h, i, j: (b, j, h // G, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bq, 1, hd), lambda b, h, i, j: (b, i, h, 0)),
+            pl.BlockSpec((1, 1, bq), lambda b, h, i, j: (b, h, i)),
+            pl.BlockSpec((1, 1, bq), lambda b, h, i, j: (b, h, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, H, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, S), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, S), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    del m, l
+    return o.astype(q.dtype)

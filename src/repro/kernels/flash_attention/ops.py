@@ -1,0 +1,19 @@
+"""Public jit'd wrapper for the flash attention kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                   "block_q", "block_kv", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, block_q: int = 128,
+                    block_kv: int = 128, interpret: bool = False):
+    """q (B,S,H,hd); k/v (B,S,K,hd) with K | H (GQA). Returns (B,S,H,hd)."""
+    return flash_attention_fwd(q, k, v, causal=causal, window=window,
+                               softcap=softcap, block_q=block_q,
+                               block_kv=block_kv, interpret=interpret)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the flash attention kernel (GQA, causal, window,
+softcap) — naive full-materialization softmax attention in fp32."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  softcap: float = 0.0):
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    s = jnp.einsum("bqnh,bsnh->bnqs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    if softcap and softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = jnp.arange(S)[:, None]
+    k_pos = jnp.arange(k.shape[1])[None, :]
+    allow = jnp.ones((S, k.shape[1]), bool)
+    if causal:
+        allow = allow & (k_pos <= q_pos)
+    if window > 0:
+        allow = allow & (q_pos - k_pos < window)
+    s = jnp.where(allow[None, None], s, -1e30)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    o = jnp.einsum("bnqs,bsnh->bqnh", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)

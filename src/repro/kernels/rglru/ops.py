@@ -1,0 +1,16 @@
+"""Public jit'd wrapper for the RG-LRU scan kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.rglru.kernel import rglru_scan_fwd
+
+
+@partial(jax.jit, static_argnames=("chunk_t", "block_d", "interpret"))
+def rglru_scan(a, b, h0, *, chunk_t: int = 256, block_d: int = 512,
+               interpret: bool = False):
+    """h_t = a_t * h_{t-1} + b_t; a/b (B,S,D), h0 (B,D) -> h (B,S,D) fp32."""
+    return rglru_scan_fwd(a, b, h0, chunk_t=chunk_t, block_d=block_d,
+                          interpret=interpret)

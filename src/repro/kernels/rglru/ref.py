@@ -1,0 +1,19 @@
+"""Oracle: sequential scan for h_t = a_t h_{t-1} + b_t."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_ref(a, b, h0):
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    h0 = h0.astype(jnp.float32)
+
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    _, hs = jax.lax.scan(step, h0, (a.swapaxes(0, 1), b.swapaxes(0, 1)))
+    return hs.swapaxes(0, 1)

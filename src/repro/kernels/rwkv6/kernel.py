@@ -1,0 +1,86 @@
+"""RWKV-6 (Finch) WKV recurrence kernel (TPU Pallas).
+
+    y_t[j]    = sum_i r_t[i] * (S_t[i,j] + u[i] * k_t[i] * v_t[j])
+    S_{t+1}   = diag(w_t) S_t + k_t^T v_t
+
+Grid (B, H, nt) with the time axis innermost; the per-head state
+S (hs x hs) fp32 persists in a VMEM-resident output block across chunk
+steps.  Inside a chunk the recurrence is sequential over ct timesteps
+(fori_loop) — each step is an (hs x hs) rank-1 update + matvec, which is
+VPU/MXU-friendly at hs = 64.
+
+  r,k,v,w  (B, S, H, hs)  block (1, ct, 1, hs)
+  u        (H, hs)        block (1, hs)
+  y        (B, S, H, hs)  block (1, ct, 1, hs) fp32
+  S        (B, H, hs, hs) block (1, 1, hs, hs) fp32 (also returned)
+
+VMEM per step: 4*ct*hs + hs*hs + ct*hs fp32 (ct=128, hs=64 -> ~0.2 MB).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, s_ref, *,
+            ct: int):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        s_ref[0, 0, :, :] = s0_ref[0, 0, :, :].astype(jnp.float32)
+
+    r = r_ref[0, :, 0, :].astype(jnp.float32)   # (ct, hs)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    w = w_ref[0, :, 0, :].astype(jnp.float32)
+    u = u_ref[0, :].astype(jnp.float32)         # (hs,)
+
+    def step(i, carry):
+        s, y = carry
+        kv = k[i][:, None] * v[i][None, :]             # (hs, hs)
+        yt = (r[i][None, :] @ (s + u[:, None] * kv))[0]  # (hs,)
+        s = w[i][:, None] * s + kv
+        y = y.at[i].set(yt)
+        return s, y
+
+    s0 = s_ref[0, 0, :, :]
+    y0 = jnp.zeros_like(r)
+    s_final, y = jax.lax.fori_loop(0, ct, step, (s0, y0))
+    y_ref[0, :, 0, :] = y
+    s_ref[0, 0, :, :] = s_final
+
+
+def wkv6_fwd(r, k, v, w, u, s0, *, chunk_t: int = 128,
+             interpret: bool = False):
+    B, S, H, hs = r.shape
+    ct = min(chunk_t, S)
+    assert S % ct == 0
+    nt = S // ct
+
+    kernel = functools.partial(_kernel, ct=ct)
+    y, s = pl.pallas_call(
+        kernel,
+        grid=(B, H, nt),
+        in_specs=[
+            pl.BlockSpec((1, ct, 1, hs), lambda b, h, t: (b, t, h, 0)),
+            pl.BlockSpec((1, ct, 1, hs), lambda b, h, t: (b, t, h, 0)),
+            pl.BlockSpec((1, ct, 1, hs), lambda b, h, t: (b, t, h, 0)),
+            pl.BlockSpec((1, ct, 1, hs), lambda b, h, t: (b, t, h, 0)),
+            pl.BlockSpec((1, hs), lambda b, h, t: (h, 0)),
+            pl.BlockSpec((1, 1, hs, hs), lambda b, h, t: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, ct, 1, hs), lambda b, h, t: (b, t, h, 0)),
+            pl.BlockSpec((1, 1, hs, hs), lambda b, h, t: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, H, hs), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, hs, hs), jnp.float32),
+        ],
+        interpret=interpret,
+    )(r, k, v, w, u, s0)
+    return y, s

@@ -1,0 +1,14 @@
+"""Public jit'd wrapper for the WKV-6 kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.rwkv6.kernel import wkv6_fwd
+
+
+@partial(jax.jit, static_argnames=("chunk_t", "interpret"))
+def wkv6(r, k, v, w, u, s0, *, chunk_t: int = 128, interpret: bool = False):
+    """r/k/v/w (B,S,H,hs); u (H,hs); s0 (B,H,hs,hs) -> (y, s_final)."""
+    return wkv6_fwd(r, k, v, w, u, s0, chunk_t=chunk_t, interpret=interpret)

@@ -1,0 +1,22 @@
+"""Oracle: sequential WKV-6 recurrence (mirrors models/layers._rwkv_wkv_scan)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, w, u, s0):
+    r, k, v, w = (x.astype(jnp.float32) for x in (r, k, v, w))
+    u = u.astype(jnp.float32)
+    s0 = s0.astype(jnp.float32)
+
+    def step(s, rkvw):
+        rt, kt, vt, wt = rkvw                       # (B, H, hs)
+        kv = kt[..., :, None] * vt[..., None, :]    # (B, H, hs, hs)
+        y = jnp.einsum("bhi,bhij->bhj", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, y
+
+    xs = tuple(x.swapaxes(0, 1) for x in (r, k, v, w))
+    s_final, ys = jax.lax.scan(step, s0, xs)
+    return ys.swapaxes(0, 1), s_final

@@ -1,0 +1,253 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# --- everything below may import jax -----------------------------------------
+import argparse     # noqa: E402
+import json         # noqa: E402
+import time         # noqa: E402
+import traceback    # noqa: E402
+from dataclasses import replace as dc_replace   # noqa: E402
+
+import jax          # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.config import (ALL_SHAPES, SHAPES_BY_NAME, OptimizerConfig,   # noqa: E402
+                          ShardingConfig, applicable_shapes)
+from repro.configs import ARCH_IDS, get_config                            # noqa: E402
+from repro.launch.mesh import make_production_mesh                        # noqa: E402
+from repro.models import zoo                                              # noqa: E402
+from repro.optim import make_optimizer                                    # noqa: E402
+from repro.roofline import analyze_hlo_text, model_flops, roofline_terms  # noqa: E402
+from repro.sharding import ShardingRules                                  # noqa: E402
+
+"""Multi-pod dry-run: ``.lower().compile()`` every (arch x shape x mesh)
+cell against placeholder devices, record memory / cost / roofline terms.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+        --mesh both --out experiments/dryrun.json
+"""
+
+
+def default_plan(arch: str, shape_name: str, dp_total: int) -> dict:
+    """Per-cell feasibility plan (microbatching / optimizer-state dtypes).
+
+    These are the *baseline* settings; §Perf hillclimb overrides arrive via
+    --plan or --recommended.
+    """
+    plan = {"accum": 1, "state_dtype": "float32", "accum_dtype": "float32",
+            "remat": None, "sharding": {}}
+    if shape_name == "train_4k":
+        batch = 256
+        plan["accum"] = max(1, batch // dp_total)       # 1-seq-per-device microbatches
+        if arch == "grok-1-314b":
+            plan["state_dtype"] = "bfloat16"            # m/v in bf16 (316B params)
+            plan["accum_dtype"] = "bfloat16"
+            plan["remat"] = "full"
+    return plan
+
+
+# §Perf winners (EXPERIMENTS.md): head padding for TP-unfriendly head
+# counts, larger flash chunks, sequence parallelism for train, int8 KV for
+# decode, MoE capacity 1.0 for grok.
+_PAD_HEADS = {"qwen2.5-14b": 48, "qwen2-vl-7b": 32}
+
+
+def recommended_plan(arch: str, shape_name: str, dp_total: int) -> dict:
+    plan = default_plan(arch, shape_name, dp_total)
+    if arch in _PAD_HEADS:
+        plan["num_heads"] = _PAD_HEADS[arch]
+    if shape_name in ("train_4k", "prefill_32k"):
+        plan["attn_chunk_q"] = 1024
+        plan["attn_chunk_kv"] = 4096
+    if shape_name == "train_4k":
+        # SP shards the hidden SEQ dim — poison for time-sequential mixers
+        # (WKV / RG-LRU scans reshard every chunk): measured 5x regression
+        # on rwkv6, so recurrent families stay batch-sharded.
+        if arch not in ("rwkv6-3b", "recurrentgemma-2b"):
+            plan["sharding"] = {"seq_shard_hidden": True}
+        if arch not in ("grok-1-314b",):
+            plan["accum"] = max(1, min(8, 256 // dp_total))
+    if shape_name == "decode_32k" and arch not in ("rwkv6-3b",):
+        plan["kv_cache_dtype"] = "int8"
+    if arch == "grok-1-314b":
+        plan["capacity_factor"] = 1.0
+    return plan
+
+
+def build_cell(arch: str, shape_name: str, multi_pod: bool,
+               plan: dict | None = None, recommended: bool = False):
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    dp_total = int(np.prod([mesh.shape[a] for a in mesh.axis_names if a != "model"]))
+    maker = recommended_plan if recommended else default_plan
+    p = maker(arch, shape_name, dp_total)
+    p.update(plan or {})
+    if "num_heads" in p and "head_dim" not in p:
+        # head padding must preserve the ORIGINAL head_dim (function-
+        # preserving: extra heads have zero-init wo rows); otherwise the
+        # derived d_model//num_heads silently changes the architecture.
+        p["head_dim"] = cfg.resolved_head_dim
+    if p.get("remat"):
+        cfg = dc_replace(cfg, remat_policy=p["remat"])
+    for k in ("attn_chunk_q", "attn_chunk_kv", "kv_cache_dtype", "attn_impl",
+              "num_heads", "head_dim", "param_dtype"):
+        if k in p:
+            cfg = dc_replace(cfg, **{k: p[k]})
+    if "capacity_factor" in p and cfg.moe is not None:
+        cfg = dc_replace(cfg, moe=dc_replace(cfg.moe,
+                                             capacity_factor=p["capacity_factor"]))
+    scfg = ShardingConfig(**p.get("sharding", {}))
+    rules = ShardingRules(cfg, mesh, scfg)
+    ann = rules.annotator()
+
+    if shape.mode == "train":
+        opt_cfg = OptimizerConfig(state_dtype=p["state_dtype"])
+        opt = make_optimizer(opt_cfg)
+        fn = zoo.make_train_step(cfg, opt, opt_cfg, accum=p["accum"], ann=ann,
+                                 accum_dtype=p["accum_dtype"])
+        state = zoo.state_specs(cfg, opt)
+        batch = zoo.input_specs(cfg, shape)
+        in_sh = (rules.state_shardings(state), rules.batch_shardings(batch))
+        out_struct = jax.eval_shape(fn, state, batch)
+        out_sh = (rules.state_shardings(out_struct[0]),
+                  jax.tree_util.tree_map(lambda _: rules.replicated(), out_struct[1]))
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=0)
+        args = (state, batch)
+    elif shape.mode == "prefill":
+        from functools import partial
+        params = jax.eval_shape(partial(zoo.init_params, cfg), jax.random.PRNGKey(0))
+        inputs = zoo.input_specs(cfg, shape)
+        fn = zoo.make_prefill_step(cfg, ann=ann)
+        in_sh = (rules.params_shardings(params), rules.batch_shardings(inputs))
+        out_struct = jax.eval_shape(fn, params, inputs)
+        out_sh = (rules.dp_vector(out_struct[0].shape),
+                  rules.cache_shardings(out_struct[1]))
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+        args = (params, inputs)
+    else:  # decode
+        from functools import partial
+        params = jax.eval_shape(partial(zoo.init_params, cfg), jax.random.PRNGKey(0))
+        caches = zoo.cache_specs(cfg, shape)
+        inputs = zoo.input_specs(cfg, shape)
+        fn = zoo.make_decode_step(cfg, ann=ann)
+        in_sh = (rules.params_shardings(params), rules.cache_shardings(caches),
+                 rules.batch_shardings(inputs))
+        out_struct = jax.eval_shape(fn, params, caches, inputs)
+        out_sh = (rules.dp_vector(out_struct[0].shape),
+                  rules.cache_shardings(out_struct[1]))
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=1)
+        args = (params, caches, inputs)
+    return cfg, shape, mesh, jitted, args, p
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             plan: dict | None = None, keep_hlo: bool = False,
+             recommended: bool = False) -> dict:
+    t0 = time.time()
+    cfg, shape, mesh, jitted, args, p = build_cell(arch, shape_name, multi_pod,
+                                                   plan, recommended)
+    n_dev = mesh.devices.size
+    lowered = jitted.lower(*args)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    ma = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    costs = analyze_hlo_text(hlo)
+    terms = roofline_terms(costs)
+    mf_global = model_flops(cfg, shape)
+    mf_per_dev = mf_global / n_dev
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": n_dev,
+        "plan": p,
+        "lower_s": round(t1 - t0, 2),
+        "compile_s": round(t2 - t1, 2),
+        "arg_gb_per_dev": ma.argument_size_in_bytes / 2**30,
+        "temp_gb_per_dev": ma.temp_size_in_bytes / 2**30,
+        "output_gb_per_dev": ma.output_size_in_bytes / 2**30,
+        "alias_gb_per_dev": ma.alias_size_in_bytes / 2**30,
+        "model_flops_global": mf_global,
+        "model_flops_per_dev": mf_per_dev,
+        "useful_flops_ratio": (mf_per_dev / costs.flops) if costs.flops else 0.0,
+        **terms,
+    }
+    # peak HBM estimate: args + temps (aliased outputs reuse arg space)
+    rec["hbm_gb_per_dev"] = rec["arg_gb_per_dev"] + rec["temp_gb_per_dev"] + \
+        max(0.0, rec["output_gb_per_dev"] - rec["alias_gb_per_dev"])
+    rec["fits_16gb"] = rec["hbm_gb_per_dev"] <= 16.0
+    if keep_hlo:
+        rec["_hlo"] = hlo
+    return rec
+
+
+def fmt_row(r: dict) -> str:
+    return (f"{r['arch']:>18s} {r['shape']:>11s} {r['mesh']:>7s} "
+            f"compile={r['compile_s']:6.1f}s hbm={r['hbm_gb_per_dev']:7.2f}GB "
+            f"tc={r['t_compute_s']*1e3:9.3f}ms tm={r['t_memory_s']*1e3:9.3f}ms "
+            f"tcoll={r['t_collective_s']*1e3:9.3f}ms dom={r['dominant']:>10s} "
+            f"useful={r['useful_flops_ratio']*100:5.1f}%")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun.json")
+    ap.add_argument("--plan", default=None, help="JSON dict of plan overrides")
+    ap.add_argument("--recommended", action="store_true",
+                    help="apply the EXPERIMENTS.md §Perf recommended plans")
+    ap.add_argument("--fail-fast", action="store_true")
+    args = ap.parse_args()
+
+    archs = list(ARCH_IDS) if args.arch == "all" else args.arch.split(",")
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    plan = json.loads(args.plan) if args.plan else None
+
+    records, failures = [], []
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = [s.name for s in applicable_shapes(cfg)]
+        if args.shape != "all":
+            shapes = [s for s in args.shape.split(",") if s in shapes or
+                      SHAPES_BY_NAME.get(s)]
+            shapes = [s for s in shapes
+                      if s in [x.name for x in applicable_shapes(cfg)]]
+        skipped = [s.name for s in ALL_SHAPES
+                   if s.name not in [x.name for x in applicable_shapes(cfg)]]
+        for sk in skipped:
+            if args.shape in ("all",) or sk in args.shape.split(","):
+                records.append({"arch": arch, "shape": sk, "mesh": "-",
+                                "skipped": "long-context needs sub-quadratic attention"})
+                print(f"{arch:>18s} {sk:>11s}    SKIP (full attention; DESIGN.md §4)")
+        for shape_name in shapes:
+            for multi in meshes:
+                try:
+                    r = run_cell(arch, shape_name, multi, plan,
+                                 recommended=args.recommended)
+                    records.append(r)
+                    print(fmt_row(r), flush=True)
+                except Exception as e:  # noqa: BLE001
+                    failures.append((arch, shape_name, multi, repr(e)))
+                    print(f"FAIL {arch} {shape_name} multi={multi}: {e}", flush=True)
+                    traceback.print_exc()
+                    if args.fail_fast:
+                        raise
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(records, f, indent=1)
+    print(f"\nwrote {len(records)} records to {args.out}; {len(failures)} failures")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+Functions (not module-level constants) so importing this module never
+touches jax device state.  The production target is a TPU v5e pod of
+16x16 = 256 chips; the multi-pod mesh stacks 2 pods on a leading 'pod'
+axis (512 chips) connected by slower inter-pod links.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.config import MeshConfig
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(cfg: MeshConfig):
+    return jax.make_mesh(cfg.shape, cfg.axis_names)
+
+
+def make_test_mesh(data: int = 2, model: int = 2, pods: int = 0):
+    """Small mesh for CPU tests (requires xla_force_host_platform_device_count)."""
+    if pods:
+        return jax.make_mesh((pods, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,69 @@
+"""Phase-2 profiling launcher: record a workload, spin up the z parallel
+profiling deployments (simulator-backed on this host; the Deployment
+protocol accepts cluster-backed implementations unchanged), inject
+worst-case failures and emit the (C, TR, L, R) grids + fitted QoS models.
+
+    PYTHONPATH=src python -m repro.launch.profile_run --ci 10,30,60,90,120 \
+        --out experiments/profiling.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+from repro.core import QoSModel, run_profiling, select_failure_points
+from repro.data.stream import diurnal_rate, record_workload
+from repro.sim import SimCostModel, SimDeployment
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ci", default="10,30,60,90,120")
+    ap.add_argument("--failure-points", type=int, default=5)
+    ap.add_argument("--record-seconds", type=float, default=14_400.0)
+    ap.add_argument("--capacity", type=float, default=4600.0)
+    ap.add_argument("--ckpt-duration", type=float, default=3.0)
+    ap.add_argument("--margin", type=float, default=90.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="experiments/profiling.json")
+    args = ap.parse_args()
+
+    sched = diurnal_rate(base=0.5 * args.capacity, amplitude=0.55,
+                         period=args.record_seconds, seed=args.seed)
+    recording = record_workload(sched, duration=args.record_seconds,
+                                seed=args.seed)
+    steady = select_failure_points(recording, m=args.failure_points,
+                                   smoothing_window=30)
+    cost = SimCostModel(capacity_eps=args.capacity,
+                        ckpt_duration_s=args.ckpt_duration,
+                        ckpt_sync_penalty=0.6)
+    ci_values = [float(x) for x in args.ci.split(",")]
+    prof = run_profiling(
+        lambda ci: SimDeployment(ci, recording, cost),
+        steady, ci_values, margin=args.margin,
+        progress=lambda m: print("  " + m, flush=True))
+
+    ci_f, tr_f, L_f, R_f = prof.flat()
+    m_l = QoSModel().fit(ci_f, tr_f, L_f)
+    m_r = QoSModel().fit(ci_f, tr_f, R_f)
+    out = {
+        "ci_values": ci_values,
+        "failure_rates": prof.failure_rates.tolist(),
+        "latencies": prof.latencies.tolist(),
+        "recoveries": prof.recoveries.tolist(),
+        "m_l_pct_error": m_l.avg_percent_error(ci_f, tr_f, L_f),
+        "m_r_pct_error": m_r.avg_percent_error(ci_f, tr_f, R_f),
+    }
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"\nM_L pct error {out['m_l_pct_error']:.3f}  "
+          f"M_R pct error {out['m_r_pct_error']:.3f}")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Serving launcher: compile the sharded prefill/decode steps for a
+production mesh (TPU) or run the CPU-scale batched server.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --local
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="decode_32k")
+    ap.add_argument("--local", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    if args.local:
+        import jax
+        import numpy as np
+
+        from repro.configs import get_smoke_config
+        from repro.models import zoo
+        from repro.runtime.server import ServeRequest, StreamServer
+
+        cfg = get_smoke_config(args.arch)
+        params = zoo.init_params(cfg, jax.random.PRNGKey(0))
+        srv = StreamServer(cfg, params)
+        rng = np.random.default_rng(0)
+        reqs = [ServeRequest(i, rng.integers(0, cfg.vocab_size, 16,
+                                             dtype=np.int32), 8)
+                for i in range(4)]
+        print({k: v.tolist() for k, v in srv.serve_batch(reqs).items()})
+        return
+
+    import jax
+
+    from repro.config import SHAPES_BY_NAME, ShardingConfig
+    from repro.configs import get_config
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import zoo
+    from repro.sharding import ShardingRules
+    from functools import partial
+
+    cfg = get_config(args.arch)
+    shape = SHAPES_BY_NAME[args.shape]
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    rules = ShardingRules(cfg, mesh, ShardingConfig())
+    params = jax.eval_shape(partial(zoo.init_params, cfg), jax.random.PRNGKey(0))
+    caches = zoo.cache_specs(cfg, shape)
+    inputs = zoo.input_specs(cfg, shape)
+    fn = zoo.make_decode_step(cfg, ann=rules.annotator())
+    out = jax.eval_shape(fn, params, caches, inputs)
+    jitted = jax.jit(fn,
+                     in_shardings=(rules.params_shardings(params),
+                                   rules.cache_shardings(caches),
+                                   rules.batch_shardings(inputs)),
+                     out_shardings=(rules.dp_vector(out[0].shape),
+                                    rules.cache_shardings(out[1])),
+                     donate_argnums=1)
+    compiled = jitted.lower(params, caches, inputs).compile()
+    print("compiled decode step:", compiled.memory_analysis())
+
+
+if __name__ == "__main__":
+    main()

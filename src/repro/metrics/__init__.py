@@ -1,0 +1,3 @@
+from repro.metrics.timeseries import TimeSeries, MetricsStore
+
+__all__ = ["TimeSeries", "MetricsStore"]

@@ -1,0 +1,81 @@
+"""In-memory time-series store — the framework's "Prometheus".
+
+The Khaos controller, the anomaly detector and the simulator all read and
+write through this interface, so the same controller code runs against the
+discrete-event simulator and the live trainer.
+"""
+from __future__ import annotations
+
+import bisect
+from dataclasses import dataclass, field
+from typing import Iterable, Optional
+
+import numpy as np
+
+
+@dataclass
+class TimeSeries:
+    name: str
+    times: list = field(default_factory=list)
+    values: list = field(default_factory=list)
+
+    def append(self, t: float, v: float) -> None:
+        if self.times and t < self.times[-1]:
+            raise ValueError(f"non-monotonic append to {self.name}: {t} < {self.times[-1]}")
+        self.times.append(float(t))
+        self.values.append(float(v))
+
+    def __len__(self) -> int:
+        return len(self.times)
+
+    # -- queries -----------------------------------------------------------
+    def window(self, t_start: float, t_end: float) -> tuple[np.ndarray, np.ndarray]:
+        lo = bisect.bisect_left(self.times, t_start)
+        hi = bisect.bisect_right(self.times, t_end)
+        return np.asarray(self.times[lo:hi]), np.asarray(self.values[lo:hi])
+
+    def last(self, n: int = 1) -> np.ndarray:
+        return np.asarray(self.values[-n:])
+
+    def latest(self, default: float = float("nan")) -> float:
+        return self.values[-1] if self.values else default
+
+    def mean_over(self, t_start: float, t_end: float, default: float = float("nan")) -> float:
+        _, v = self.window(t_start, t_end)
+        return float(v.mean()) if v.size else default
+
+    def percentile_over(self, t_start: float, t_end: float, q: float,
+                        default: float = float("nan")) -> float:
+        _, v = self.window(t_start, t_end)
+        return float(np.percentile(v, q)) if v.size else default
+
+    def smoothed(self, window: int) -> np.ndarray:
+        """Centered moving average (the paper's 'averaging window' over W(t))."""
+        v = np.asarray(self.values, dtype=np.float64)
+        if v.size == 0 or window <= 1:
+            return v
+        kernel = np.ones(window) / window
+        pad = window // 2
+        vp = np.pad(v, (pad, window - 1 - pad), mode="edge")
+        return np.convolve(vp, kernel, mode="valid")
+
+
+class MetricsStore:
+    """Named time series with lazy creation."""
+
+    def __init__(self) -> None:
+        self._series: dict[str, TimeSeries] = {}
+
+    def series(self, name: str) -> TimeSeries:
+        if name not in self._series:
+            self._series[name] = TimeSeries(name)
+        return self._series[name]
+
+    def record(self, name: str, t: float, v: float) -> None:
+        self.series(name).append(t, v)
+
+    def names(self) -> Iterable[str]:
+        return self._series.keys()
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._series

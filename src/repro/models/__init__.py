@@ -1,0 +1,17 @@
+from repro.models.zoo import (
+    build_model,
+    init_params,
+    make_train_step,
+    make_prefill_step,
+    make_decode_step,
+    input_specs,
+)
+
+__all__ = [
+    "build_model",
+    "init_params",
+    "make_train_step",
+    "make_prefill_step",
+    "make_decode_step",
+    "input_specs",
+]

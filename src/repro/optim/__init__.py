@@ -1,0 +1,19 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    adamw,
+    sgd,
+    make_optimizer,
+    global_norm,
+    clip_by_global_norm,
+)
+from repro.optim.schedule import make_schedule
+
+__all__ = [
+    "Optimizer",
+    "adamw",
+    "sgd",
+    "make_optimizer",
+    "global_norm",
+    "clip_by_global_norm",
+    "make_schedule",
+]

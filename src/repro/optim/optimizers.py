@@ -1,0 +1,114 @@
+"""Optimizers in pure JAX (no optax): AdamW, SGD+momentum.
+
+An Optimizer is a pair of pure functions ``init(params) -> opt_state`` and
+``update(grads, opt_state, params, step) -> (new_params, new_opt_state)``.
+Optimizer state lives in fp32 regardless of param dtype (master copies are
+the params themselves, kept in ``param_dtype=float32`` by default).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import OptimizerConfig
+from repro.optim.schedule import make_schedule
+
+Params = Any
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Params], Any]
+    update: Callable[[Params, Any, Params, jax.Array], tuple[Params, Any]]
+
+
+def global_norm(tree: Params) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(tree: Params, max_norm: float) -> tuple[Params, jax.Array]:
+    gn = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype), tree), gn
+
+
+def adamw(cfg: OptimizerConfig) -> Optimizer:
+    sched = make_schedule(cfg)
+    sdt = jnp.dtype(cfg.state_dtype)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, sdt)
+        return {
+            "m": jax.tree_util.tree_map(zeros, params),
+            "v": jax.tree_util.tree_map(zeros, params),
+        }
+
+    def update(grads, state, params, step):
+        lr = sched(step)
+        b1, b2 = cfg.b1, cfg.b2
+        t = step.astype(jnp.float32) + 1.0
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            m_new = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+            v_new = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+            mhat = m_new / bc1
+            vhat = v_new / bc2
+            delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+            # decoupled weight decay on matrices only (ndim >= 2)
+            wd = cfg.weight_decay if p.ndim >= 2 else 0.0
+            p_new = p.astype(jnp.float32) - lr * (delta + wd * p.astype(jnp.float32))
+            return p_new.astype(p.dtype), m_new.astype(sdt), v_new.astype(sdt)
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return new_p, {"m": new_m, "v": new_v}
+
+    return Optimizer(init, update)
+
+
+def sgd(cfg: OptimizerConfig) -> Optimizer:
+    sched = make_schedule(cfg)
+    momentum = 0.9
+
+    def init(params):
+        return {"mom": jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(grads, state, params, step):
+        lr = sched(step)
+
+        def upd(g, m, p):
+            m_new = momentum * m + g.astype(jnp.float32)
+            p_new = p.astype(jnp.float32) - lr * m_new
+            return p_new.astype(p.dtype), m_new
+
+        pairs = jax.tree_util.tree_map(upd, grads, state["mom"], params)
+        # tree_map over 3 trees returns tuples at leaves -> split
+        new_p = jax.tree_util.tree_map(lambda t: t[0], pairs,
+                                       is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree_util.tree_map(lambda t: t[1], pairs,
+                                       is_leaf=lambda t: isinstance(t, tuple))
+        return new_p, {"mom": new_m}
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(cfg: OptimizerConfig) -> Optimizer:
+    if cfg.name == "adamw":
+        return adamw(cfg)
+    if cfg.name == "sgd":
+        return sgd(cfg)
+    raise ValueError(f"unknown optimizer {cfg.name}")

@@ -1,0 +1,22 @@
+"""LR schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.config import OptimizerConfig
+
+
+def make_schedule(cfg: OptimizerConfig):
+    warmup = max(1, cfg.warmup_steps)
+    total = max(cfg.total_steps, warmup + 1)
+
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = cfg.lr * jnp.minimum(1.0, step / warmup)
+        if cfg.schedule == "constant":
+            return warm
+        prog = jnp.clip((step - warmup) / (total - warmup), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cfg.lr * (0.1 + 0.9 * cos))
+
+    return sched

@@ -1,0 +1,379 @@
+"""Roofline analysis from compiled (SPMD-partitioned) HLO.
+
+``compiled.cost_analysis()`` visits every instruction ONCE — it does not
+multiply ``while``-loop bodies by their trip count, so a scan-over-layers
+model under-reports FLOPs by ~num_layers x.  This module re-derives the
+three roofline terms by walking the post-optimization HLO text with
+explicit trip-count multipliers:
+
+  * FLOPs        — every ``dot`` (2 * prod(result) * contracted), recursing
+                   into fusions / calls / while bodies (x trip count).
+  * HBM bytes    — operand + result bytes of instructions at fusion
+                   granularity (fusion internals excluded: on TPU a fusion
+                   reads inputs and writes outputs through HBM once).
+                   Bookkeeping opcodes (parameter/tuple/gte/constant/bitcast)
+                   are skipped.  This is an HBM-traffic estimate, not an
+                   exact count — documented in EXPERIMENTS.md.
+  * collectives  — operand bytes of all-reduce / all-gather / reduce-scatter
+                   / all-to-all / collective-permute (+ async -start forms),
+                   x trip count, bucketed by type.
+
+All numbers are PER DEVICE (the partitioned module is the per-device
+program).  Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+PEAK_FLOPS = 197e12      # bf16 per chip
+HBM_BW = 819e9           # bytes/s per chip
+LINK_BW = 50e9           # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+_SHAPE_RE = re.compile(
+    r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+_SKIP_BYTES_OPS = {"parameter", "tuple", "get-tuple-element", "bitcast",
+                   "constant", "after-all", "partition-id", "replica-id"}
+
+# opcodes we must detect (longest-match first so e.g. all-gather-start wins)
+_KNOWN_OPS = sorted(
+    ["dot", "fusion", "call", "conditional", "while", "convolution",
+     "custom-call", "parameter", "tuple", "get-tuple-element", "bitcast",
+     "constant", "iota", "broadcast", "scatter", "gather", "copy",
+     "all-reduce-start", "all-reduce-done", "all-reduce",
+     "all-gather-start", "all-gather-done", "all-gather",
+     "reduce-scatter", "all-to-all", "ragged-all-to-all",
+     "collective-permute-start", "collective-permute-done",
+     "collective-permute"],
+    key=len, reverse=True)
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if not dims:
+        return _DTYPE_BYTES[dtype]
+    n = 1
+    for d in dims.split(","):
+        n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _opcode_of(rhs: str) -> Optional[str]:
+    for op in _KNOWN_OPS:
+        if rhs.startswith(f"{op}("):
+            return op
+        i = rhs.find(f" {op}(")
+        if i >= 0:
+            return op
+    m = re.search(r"(?:^|\s)([a-z0-9\-]+)\(", rhs)
+    return m.group(1) if m else None
+
+
+_NAME_RE = re.compile(r"%([\w\.\-]+)")
+
+
+@dataclass
+class Instr:
+    name: str
+    opcode: str
+    result_shapes: list          # [(dtype, dims_str), ...]
+    operands: list               # operand instruction names
+    line: str
+
+    @property
+    def result_bytes(self) -> int:
+        return sum(_shape_bytes(d, s) for d, s in self.result_shapes)
+
+    def result_dims(self) -> Optional[list]:
+        if len(self.result_shapes) == 1:
+            dims = self.result_shapes[0][1]
+            return [int(x) for x in dims.split(",")] if dims else []
+        return None
+
+
+def _parse_instr(line: str) -> Optional[Instr]:
+    if " = " not in line:
+        return None
+    lhs, rhs = line.split(" = ", 1)
+    mname = _NAME_RE.search(lhs)
+    if not mname:
+        return None
+    opcode = _opcode_of(rhs)
+    if opcode is None:
+        return None
+    op_idx = rhs.find(f"{opcode}(")
+    if op_idx < 0:
+        return None
+    # result shapes: all shape tokens before the opcode
+    result_shapes = [(m.group(1), m.group(2))
+                     for m in _SHAPE_RE.finditer(rhs[:op_idx])]
+    # operand list: balanced-paren scan from the opcode's '('
+    start = op_idx + len(opcode) + 1
+    depth, end = 1, start
+    while end < len(rhs) and depth:
+        c = rhs[end]
+        depth += (c == "(") - (c == ")")
+        end += 1
+    operands = _NAME_RE.findall(rhs[start:end - 1])
+    return Instr(mname.group(1), opcode, result_shapes, operands, line)
+
+
+@dataclass
+class HloCosts:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    by_type: dict = field(default_factory=dict)
+
+    def add(self, other: "HloCosts", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.collective_bytes += other.collective_bytes * mult
+        for k, v in other.by_type.items():
+            self.by_type[k] = self.by_type.get(k, 0.0) + v * mult
+
+
+class HloModule:
+    """Minimal post-optimization HLO text parser with a per-computation
+    symbol table (operand shapes are not printed inline)."""
+
+    def __init__(self, text: str):
+        self.computations: dict[str, list[Instr]] = {}
+        self.tables: dict[str, dict[str, Instr]] = {}
+        self.entry: Optional[str] = None
+        cur: Optional[str] = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            stripped = line.strip()
+            if cur is None:
+                m = re.match(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*(\([^{]*)?\{\s*$", line)
+                if m and ("->" in line or m.group(1) or "(" in line):
+                    cur = m.group(2)
+                    self.computations[cur] = []
+                    self.tables[cur] = {}
+                    if m.group(1):
+                        self.entry = cur
+                continue
+            if stripped.startswith("}"):
+                cur = None
+                continue
+            if stripped:
+                ins = _parse_instr(stripped)
+                if ins is not None:
+                    self.computations[cur].append(ins)
+                    self.tables[cur][ins.name] = ins
+        if self.entry is None and self.computations:
+            self.entry = list(self.computations)[-1]
+
+    def _operand_bytes(self, comp: str, ins: Instr) -> int:
+        table = self.tables.get(comp, {})
+        total = 0
+        for op_name in ins.operands:
+            ref = table.get(op_name)
+            if ref is not None:
+                total += ref.result_bytes
+        return total
+
+    def _dot_flops(self, comp: str, ins: Instr) -> float:
+        res = ins.result_dims()
+        if res is None:
+            return 0.0
+        contracted = 1
+        m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.line)
+        lhs = self.tables.get(comp, {}).get(ins.operands[0]) if ins.operands else None
+        if m and m.group(1) and lhs is not None:
+            lhs_dims = lhs.result_dims() or []
+            for ci in m.group(1).split(","):
+                ci = int(ci)
+                if ci < len(lhs_dims):
+                    contracted *= lhs_dims[ci]
+        return 2.0 * float(np.prod(res or [1])) * contracted
+
+    _PASSTHROUGH = ("convert", "bitcast", "reduce-precision", "copy", "reshape")
+
+    def _fusion_io_bytes(self, fusion_comp: str, call_ins: Instr,
+                         caller_comp: str) -> int:
+        """HBM traffic of one fusion call.
+
+        A fusion reads its inputs and writes its outputs through HBM once —
+        EXCEPT parameters that (possibly through elementwise convert chains)
+        are only consumed by (dynamic-)slice/gather (scan xs indexing: only
+        the slice is read) or feed the buffer side of a dynamic-update-slice
+        (in-place on TPU: only the update window moves).  Elementwise
+        convert/bitcast chains are register traffic on TPU, not HBM.
+        """
+        instrs = self.computations.get(fusion_comp)
+        if instrs is None:
+            return call_ins.result_bytes + self._operand_bytes(caller_comp, call_ins)
+        table = self.tables[fusion_comp]
+        uses: dict[str, list[Instr]] = {}
+        for ins in instrs:
+            for op_name in ins.operands:
+                uses.setdefault(op_name, []).append(ins)
+
+        def terminal_uses(name: str, depth: int = 0) -> Optional[list]:
+            """Follow pass-through chains; None => give up (count full)."""
+            if depth > 8:
+                return None
+            out = []
+            for u in uses.get(name, ()):
+                if u.opcode in self._PASSTHROUGH:
+                    t = terminal_uses(u.name, depth + 1)
+                    if t is None:
+                        return None
+                    out.extend(t)
+                else:
+                    out.append((name, u))
+            return out
+
+        read = 0
+        for p in (i for i in instrs if i.opcode == "parameter"):
+            terms = terminal_uses(p.name)
+            if terms is None:
+                read += p.result_bytes
+                continue
+            if not terms:       # unused (or pure passthrough to root)
+                read += p.result_bytes
+                continue
+            partial = 0
+            ok = True
+            for via, u in terms:
+                if u.opcode in ("dynamic-slice", "slice", "gather"):
+                    partial += u.result_bytes
+                elif u.opcode == "dynamic-update-slice" and u.operands and \
+                        u.operands[0] == via:
+                    upd = table.get(u.operands[1]) if len(u.operands) > 1 else None
+                    partial += upd.result_bytes if upd else 0
+                else:
+                    ok = False
+                    break
+            read += partial if ok else p.result_bytes
+        # output side: walk back through pass-through ops to a DUS root
+        root = next((i for i in instrs if "ROOT" in i.line), instrs[-1])
+        for _ in range(8):
+            if root.opcode in self._PASSTHROUGH and root.operands and \
+                    root.operands[0] in table:
+                root = table[root.operands[0]]
+            else:
+                break
+        if root.opcode == "dynamic-update-slice" and len(root.operands) > 1:
+            upd = table.get(root.operands[1])
+            written = upd.result_bytes if upd else call_ins.result_bytes
+        else:
+            written = call_ins.result_bytes
+        return read + written
+
+    def trip_count(self, cond_name: str) -> int:
+        best = 1
+        for ins in self.computations.get(cond_name, ()):
+            for m in re.finditer(r"constant\((\d+)\)", ins.line):
+                best = max(best, int(m.group(1)))
+        return best
+
+    def cost(self, name: Optional[str] = None, as_fusion: bool = False,
+             _memo: Optional[dict] = None) -> HloCosts:
+        if _memo is None:
+            _memo = {}
+        name = name or self.entry
+        key = (name, as_fusion)
+        if key in _memo:
+            return _memo[key]
+        total = HloCosts()
+        for ins in self.computations.get(name, ()):
+            op = ins.opcode
+            if op == "dot":
+                total.flops += self._dot_flops(name, ins)
+            elif op == "fusion":
+                m = re.search(r"calls=%?([\w\.\-]+)", ins.line)
+                if m:
+                    inner = self.cost(m.group(1), as_fusion=True, _memo=_memo)
+                    total.add(HloCosts(flops=inner.flops,
+                                       collective_bytes=inner.collective_bytes,
+                                       by_type=inner.by_type))
+                if not as_fusion:
+                    total.bytes += self._fusion_io_bytes(
+                        m.group(1) if m else "", ins, name)
+                continue
+            elif op in ("call", "conditional", "custom-call"):
+                m = re.search(r"to_apply=%?([\w\.\-]+)", ins.line)
+                if m:
+                    total.add(self.cost(m.group(1), as_fusion=as_fusion, _memo=_memo))
+            elif op == "while":
+                mb = re.search(r"body=%?([\w\.\-]+)", ins.line)
+                mc = re.search(r"condition=%?([\w\.\-]+)", ins.line)
+                trips = self.trip_count(mc.group(1)) if mc else 1
+                if mb:
+                    total.add(self.cost(mb.group(1), as_fusion=False, _memo=_memo),
+                              mult=trips)
+                continue
+            elif op.startswith(_COLLECTIVES):
+                if op.endswith("-done"):
+                    continue
+                operand_bytes = self._operand_bytes(name, ins)
+                base = op.replace("-start", "")
+                total.collective_bytes += operand_bytes
+                total.by_type[base] = total.by_type.get(base, 0.0) + operand_bytes
+                if not as_fusion:
+                    total.bytes += ins.result_bytes + operand_bytes
+                continue
+            if not as_fusion and op not in _SKIP_BYTES_OPS:
+                total.bytes += ins.result_bytes + self._operand_bytes(name, ins)
+        _memo[key] = total
+        return total
+
+
+def analyze_hlo_text(text: str) -> HloCosts:
+    return HloModule(text).cost()
+
+
+def roofline_terms(costs: HloCosts) -> dict:
+    """Per-device seconds for the three roofline terms + dominant."""
+    t_compute = costs.flops / PEAK_FLOPS
+    t_memory = costs.bytes / HBM_BW
+    t_collective = costs.collective_bytes / LINK_BW
+    dominant = max(
+        (("compute", t_compute), ("memory", t_memory), ("collective", t_collective)),
+        key=lambda kv: kv[1])[0]
+    total = max(t_compute, t_memory, t_collective)
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_collective,
+        "dominant": dominant,
+        "bound_step_s": total,
+        "roofline_fraction": (t_compute / total) if total > 0 else 0.0,
+        "collective_by_type": dict(costs.by_type),
+        "hlo_flops_per_dev": costs.flops,
+        "hlo_bytes_per_dev": costs.bytes,
+        "collective_bytes_per_dev": costs.collective_bytes,
+    }
+
+
+def model_flops(cfg, shape, accum_unused: int = 1) -> float:
+    """Analytic MODEL_FLOPS (global): 6·N·D train (N_active for MoE),
+    2·N·D for inference shapes."""
+    n = cfg.active_param_count()
+    if shape.mode == "train":
+        if cfg.family == "audio":
+            tokens = shape.global_batch * (shape.seq_len + shape.seq_len // cfg.dec_ratio)
+        else:
+            tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        if cfg.family == "audio":
+            tokens = shape.global_batch * (shape.seq_len + shape.seq_len // cfg.dec_ratio)
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch

@@ -1,0 +1,4 @@
+from repro.runtime.trainer import ResilientTrainer, TrainerConfig
+from repro.runtime.server import StreamServer
+
+__all__ = ["ResilientTrainer", "TrainerConfig", "StreamServer"]

@@ -1,0 +1,59 @@
+"""Batched streaming inference server: prefill + decode loop over request
+batches pulled from an event stream, with per-request latency metrics.
+
+The serving path shares the model zoo's prefill/decode step factories (the
+same ones the dry-run lowers at production shapes)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.metrics import MetricsStore
+from repro.models import zoo
+
+
+@dataclass
+class ServeRequest:
+    rid: int
+    prompt: np.ndarray          # (S,) int32
+    max_new_tokens: int = 8
+
+
+class StreamServer:
+    def __init__(self, cfg: ModelConfig, params, max_batch: int = 4,
+                 max_seq: int = 128):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.prefill = jax.jit(zoo.make_prefill_step(cfg))
+        self.decode = jax.jit(zoo.make_decode_step(cfg))
+        self.metrics = MetricsStore()
+        self._t = 0.0
+
+    def serve_batch(self, requests: list[ServeRequest]) -> dict[int, np.ndarray]:
+        """Prefill a batch of equal-length prompts, then decode greedily."""
+        assert 0 < len(requests) <= self.max_batch
+        S = len(requests[0].prompt)
+        assert all(len(r.prompt) == S for r in requests), "bucket by length"
+        tokens = jnp.asarray(np.stack([r.prompt for r in requests]))
+        next_tok, caches = self.prefill(self.params, {"tokens": tokens})
+        # decode caches sized S; continue writing into ring position
+        outs = [ [int(t)] for t in np.asarray(next_tok) ]
+        max_new = max(r.max_new_tokens for r in requests)
+        cur = next_tok[:, None]
+        for i in range(max_new - 1):
+            pos = jnp.full((len(requests),), min(S - 1, S - 1), jnp.int32)
+            cur, caches = self.decode(self.params, caches,
+                                      {"tokens": cur, "pos": pos})
+            for b, t in enumerate(np.asarray(cur)[:, 0]):
+                outs[b].append(int(t))
+        self.metrics.record("served", self._t, len(requests))
+        self._t += 1.0
+        return {r.rid: np.array(o[: r.max_new_tokens])
+                for r, o in zip(requests, outs)}

@@ -1,0 +1,175 @@
+"""Live resilient trainer: the real-JAX data plane the Khaos control plane
+supervises.
+
+Wires together: streaming batcher (consumer-lag semantics) -> jit'd
+train_step -> checkpoint policy/store (sync or async, atomically committed
+WITH the stream cursor for exactly-once) -> failure injection + restart
+loop -> metrics -> optional Khaos controller.
+
+Time: the trainer runs on a *virtual clock* driven by measured step wall
+times (scaled by ``time_scale``), so a 2-hour streaming experiment runs in
+seconds on CPU while keeping real step/checkpoint costs in the loop.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import AsyncCheckpointer, CheckpointPolicy, CheckpointStore
+from repro.config import ModelConfig, OptimizerConfig
+from repro.data.pipeline import StreamingBatcher
+from repro.data.stream import EventStream
+from repro.ft.failures import InjectedFailure
+from repro.metrics import MetricsStore
+from repro.models import zoo
+from repro.optim import make_optimizer
+
+
+@dataclass
+class TrainerConfig:
+    batch: int = 8
+    seq_len: int = 64
+    ckpt_dir: str = "/tmp/repro_trainer"
+    ckpt_interval_s: float = 30.0
+    ckpt_async: bool = False
+    num_shards: int = 2
+    time_scale: float = 1.0        # virtual seconds per wall second of compute
+    detect_s: float = 5.0          # simulated detection timeout after a crash
+    restart_s: float = 2.0
+
+
+class ResilientTrainer:
+    def __init__(self, model_cfg: ModelConfig, tcfg: TrainerConfig,
+                 stream: EventStream, opt_cfg: Optional[OptimizerConfig] = None,
+                 seed: int = 0):
+        self.cfg = model_cfg
+        self.tcfg = tcfg
+        self.opt_cfg = opt_cfg or OptimizerConfig(total_steps=100_000)
+        self.optimizer = make_optimizer(self.opt_cfg)
+        self.stream = stream
+        self.batcher = StreamingBatcher(stream, tcfg.batch, tcfg.seq_len,
+                                        model_cfg.vocab_size, seed=seed)
+        self.store = CheckpointStore(tcfg.ckpt_dir, num_shards=tcfg.num_shards)
+        self.async_ckpt = AsyncCheckpointer(self.store) if tcfg.ckpt_async else None
+        self.policy = CheckpointPolicy(tcfg.ckpt_interval_s)
+        self.metrics = MetricsStore()
+        self.step_fn = jax.jit(zoo.make_train_step(model_cfg, self.optimizer,
+                                                   self.opt_cfg))
+        params = zoo.init_params(model_cfg, jax.random.PRNGKey(seed))
+        self.state = {"params": params, "opt": self.optimizer.init(params),
+                      "step": jnp.zeros((), jnp.int32)}
+        # AOT-compile the step so jit compilation never counts as virtual
+        # job time (the first step would otherwise eat the whole experiment)
+        from repro.config import ShapeConfig
+        specs = zoo.input_specs(model_cfg,
+                                ShapeConfig("warm", "train", tcfg.seq_len,
+                                            tcfg.batch))
+        state_struct = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), self.state)
+        self.step_fn = self.step_fn.lower(state_struct, specs).compile()
+        self.t = 0.0                       # virtual clock (seconds)
+        self.failure_schedule: list[float] = []
+        self.events: list[dict] = []
+        self.losses: list[float] = []
+        self._measured_step_s: Optional[float] = None
+
+    # ------------------------------------------------------------------
+    def inject_failure_at(self, t: float) -> None:
+        self.failure_schedule.append(t)
+        self.failure_schedule.sort()
+
+    def set_ci(self, interval_s: float) -> None:
+        """Hot CI change (the Khaos actuation; no restart needed here)."""
+        self.policy.set_interval(interval_s, self.t)
+        self.events.append({"t": self.t, "event": "reconfigure",
+                            "ci": interval_s})
+
+    # ------------------------------------------------------------------
+    def _checkpoint(self) -> None:
+        extra = {"pipeline": self.batcher.state_dict(), "t": self.t}
+        step = int(self.state["step"])
+        if self.async_ckpt is not None:
+            self.async_ckpt.save(step, self.state, self.t, extra)
+        else:
+            self.store.save(step, self.state, self.t, extra)
+        self.policy.mark(self.t)
+        self.events.append({"t": self.t, "event": "checkpoint", "step": step})
+
+    def _restore(self) -> None:
+        if self.async_ckpt is not None:
+            self.async_ckpt.wait()
+        newest = self.store.newest()
+        if newest is None:
+            self.events.append({"t": self.t, "event": "restore_fresh"})
+            return
+        self.state, extra = self.store.restore(self.state, newest)
+        self.state = jax.tree_util.tree_map(jnp.asarray, self.state)
+        self.batcher.restore(extra["pipeline"])
+        self.events.append({"t": self.t, "event": "restore", "step": newest})
+
+    # ------------------------------------------------------------------
+    def run(self, duration_s: float,
+            on_second: Optional[Callable[[dict], None]] = None) -> dict:
+        """Run the resilient loop for ``duration_s`` virtual seconds."""
+        t_end = self.t + duration_s
+        next_metric_t = self.t
+        while self.t < t_end:
+            try:
+                self._run_until_failure(t_end, on_second)
+                break
+            except InjectedFailure:
+                self.events.append({"t": self.t, "event": "failure"})
+                # downtime: detection + restart; lag accrues on the stream
+                self.t += self.tcfg.detect_s + self.tcfg.restart_s
+                self.stream.produce_until(self.t)
+                self._restore()
+        return self.summary()
+
+    def _run_until_failure(self, t_end: float, on_second) -> None:
+        while self.t < t_end:
+            if self.failure_schedule and self.t >= self.failure_schedule[0]:
+                self.failure_schedule.pop(0)
+                raise InjectedFailure(t=self.t)
+            self.stream.produce_until(self.t)
+            if self.policy.due(self.t):
+                w0 = time.monotonic()
+                self._checkpoint()
+                if self.async_ckpt is None:
+                    self.t += (time.monotonic() - w0) * self.tcfg.time_scale
+            batch = self.batcher.next_batch()
+            if batch is None:
+                self.t += 0.05        # idle: stream underrun
+                continue
+            w0 = time.monotonic()
+            bt = {"tokens": jnp.asarray(batch["tokens"]),
+                  "labels": jnp.asarray(batch["labels"])}
+            self.state, metrics = self.step_fn(self.state, bt)
+            loss = float(metrics["loss"])
+            wall = time.monotonic() - w0
+            self._measured_step_s = wall
+            self.t += wall * self.tcfg.time_scale
+            self.losses.append(loss)
+            self.metrics.record("loss", self.t, loss)
+            self.metrics.record("step_time", self.t, wall)
+            self.metrics.record("consumer_lag", self.t, self.stream.lag)
+            lat = self.stream.lag / max(self.tcfg.batch / max(wall * self.tcfg.time_scale, 1e-6), 1e-9)
+            self.metrics.record("latency", self.t, lat)
+            if on_second is not None:
+                on_second({"t": self.t, "loss": loss, "lag": self.stream.lag})
+
+    # ------------------------------------------------------------------
+    def summary(self) -> dict:
+        return {
+            "final_step": int(self.state["step"]),
+            "final_loss": self.losses[-1] if self.losses else float("nan"),
+            "events": self.events,
+            "checkpoints": sum(1 for e in self.events if e["event"] == "checkpoint"),
+            "failures": sum(1 for e in self.events if e["event"] == "failure"),
+            "restores": sum(1 for e in self.events if e["event"] == "restore"),
+            "measured_step_s": self._measured_step_s,
+        }

@@ -1,0 +1,277 @@
+"""Sharding rules: logical parameter/activation layout -> NamedSharding.
+
+Policy (DESIGN.md §5):
+  * batch dims shard over the data-parallel axes — ('pod', 'data') on the
+    multi-pod mesh, ('data',) on a single pod;
+  * tensor-parallel 'model' axis shards attention heads, ffn hidden, vocab;
+  * FSDP (ZeRO-3 style) shards the non-TP weight dim over 'data' for models
+    above ``fsdp_min_params`` — weight all-gathers stay *within* a pod, only
+    gradient reductions cross the 'pod' axis;
+  * MoE experts shard over 'model' when divisible (olmoe 64e), otherwise
+    experts keep TP-sharded ffn dims (grok 8e);
+  * KV caches: batch -> data axes, kv-heads -> 'model' when divisible,
+    otherwise the cache *sequence* dim shards over 'model'
+    (flash-decoding-style contraction, GSPMD inserts the softmax combine).
+
+Every rule degrades to replication when a dim is not divisible by the axis
+size — a sharding must never make a cell uncompilable.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import MeshConfig, ModelConfig, ShardingConfig
+from repro.utils.trees import tree_map_with_names
+
+Axis = Optional[Any]   # None | str | tuple[str, ...]
+
+
+def _axis_size(mesh: Mesh, axis: Axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return int(mesh.shape[axis])
+
+
+def _place(shape: Sequence[int], prefs: Sequence[tuple[int, Axis]],
+           mesh: Mesh) -> P:
+    """Assign axes to dims in priority order, skipping non-divisible dims."""
+    spec: list[Axis] = [None] * len(shape)
+    used: set = set()
+    for dim, axis in prefs:
+        if axis is None or dim >= len(shape):
+            continue
+        names = axis if isinstance(axis, tuple) else (axis,)
+        if any(n in used for n in names):
+            continue
+        if spec[dim] is not None:
+            continue
+        if shape[dim] % _axis_size(mesh, axis) != 0:
+            continue
+        spec[dim] = axis
+        used.update(names)
+    return P(*spec)
+
+
+class ShardingRules:
+    """Resolves PartitionSpecs for params, inputs and caches of one job."""
+
+    def __init__(self, cfg: ModelConfig, mesh: Mesh, scfg: ShardingConfig):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.scfg = scfg
+        axes = mesh.axis_names
+        self.dp: Axis = tuple(a for a in ("pod", "data") if a in axes) or None
+        if isinstance(self.dp, tuple) and len(self.dp) == 1:
+            self.dp = self.dp[0]
+        self.tp: Axis = "model" if "model" in axes else None
+        use_fsdp = scfg.fsdp and cfg.param_count() >= scfg.fsdp_min_params
+        if use_fsdp and "data" in axes:
+            # ZeRO-3 over every data-parallel axis: on the multi-pod mesh the
+            # 'pod' axis joins so 316B-class optimizer state halves at 512
+            # chips (weight gathers then cross DCI — the documented tradeoff).
+            self.fsdp = ("pod", "data") if "pod" in axes else "data"
+        else:
+            self.fsdp = None
+
+    # -- parameters ----------------------------------------------------------
+    def param_spec(self, name: str, shape: Sequence[int]) -> P:
+        leaf = name.split("/")[-1]
+        in_moe = "/moe/" in f"/{name}/"
+        mesh, fsdp, tp = self.mesh, self.fsdp, self.tp
+
+        def tail(base_rank: int, prefs):
+            """Rules are defined on the trailing base_rank dims; leading
+            (scan-stacked) dims stay unsharded."""
+            off = len(shape) - base_rank
+            assert off >= 0, (name, shape, base_rank)
+            return _place(shape, [(d + off, a) for d, a in prefs], mesh)
+
+        if leaf in ("embed",):              # (V, d)
+            return tail(2, [(0, tp), (1, fsdp)])
+        if leaf in ("unembed",):            # (d, V)
+            return tail(2, [(1, tp), (0, fsdp)])
+        if leaf in ("wq", "wk", "wv"):      # (d, N, h)
+            # heads shard over TP when divisible; otherwise attention weights
+            # replicate (no head-dim sharding — the score contraction would
+            # force per-layer all-reduces).  Archs whose head counts don't
+            # divide 16 (qwen2-vl 28H, whisper 12H, RG 10H) run attention
+            # data-parallel only — surfaced in §Roofline as a TP gap.
+            return tail(3, [(1, tp), (0, fsdp)])
+        if leaf in ("bq", "bk", "bv"):      # (N, h)
+            return tail(2, [(0, tp)])
+        if leaf == "wo":                    # (N, h, d)
+            return tail(3, [(0, tp), (1, tp), (2, fsdp)])
+        if leaf == "router":                # (d, E)
+            return tail(2, [(0, fsdp)])
+        if leaf in ("w_up", "w_gate") and in_moe:      # (E, d, f)
+            ea = self._expert_axis(shape[-3])
+            if self.scfg.moe_megatron and ea is None:
+                # Megatron MLP inside each expert: f column-parallel over the
+                # combined (fsdp x tp) axis, d unsharded -> exactly one
+                # output all-reduce per expert block instead of partial-sum
+                # reductions on BOTH einsums (grok: 8 experts don't divide
+                # the tp axis, so this is the EP-free fallback).
+                return tail(3, [(2, self._ftp())])
+            return tail(3, [(0, ea), (2, tp), (1, fsdp)])
+        if leaf == "w_down" and in_moe:                # (E, f, d)
+            ea = self._expert_axis(shape[-3])
+            if self.scfg.moe_megatron and ea is None:
+                return tail(3, [(1, self._ftp())])     # row-parallel
+            return tail(3, [(0, ea), (1, tp), (2, fsdp)])
+        if leaf in ("w_up", "w_gate", "w_x", "cm_wk", "cm_wr",
+                    "w_r", "w_k", "w_v", "w_g", "wA"):  # (d, f)
+            return tail(2, [(1, tp), (0, fsdp)])
+        if leaf in ("w_down", "w_out", "cm_wv", "w_o", "wB"):   # (f, d)
+            return tail(2, [(0, tp), (1, fsdp)])
+        # everything else (norms, biases, conv, gates, mu, LoRA vectors) is
+        # small: replicate.
+        return P()
+
+    def _ftp(self) -> Axis:
+        """Combined (fsdp..., tp) axis tuple for maximal weight sharding."""
+        parts: list = []
+        if self.fsdp is not None:
+            parts.extend(self.fsdp if isinstance(self.fsdp, tuple) else (self.fsdp,))
+        if self.tp is not None:
+            parts.append(self.tp)
+        if not parts:
+            return None
+        return tuple(parts) if len(parts) > 1 else parts[0]
+
+    def _expert_axis(self, n_experts: int) -> Axis:
+        mode = self.scfg.expert_axis
+        if mode == "none":
+            return None
+        if mode == "auto":
+            mode = "model"
+        axis = {"model": self.tp, "data": "data" if "data" in self.mesh.axis_names else None}[mode]
+        if axis is not None and n_experts % _axis_size(self.mesh, axis) == 0:
+            return axis
+        return None
+
+    # -- inputs / activations -------------------------------------------------
+    def input_spec(self, name: str, shape: Sequence[int]) -> P:
+        leaf = name.split("/")[-1]
+        mesh, dp = self.mesh, self.dp
+        if leaf in ("tokens", "labels", "dec_tokens"):      # (B, S)
+            return _place(shape, [(0, dp)], mesh)
+        if leaf == "positions":                             # (3, B, S)
+            return _place(shape, [(1, dp)], mesh)
+        if leaf in ("frames", "vision_embeds"):             # (B, S, d)
+            return _place(shape, [(0, dp)], mesh)
+        if leaf == "pos":                                   # (B,)
+            return _place(shape, [(0, dp)], mesh)
+        return P()
+
+    # -- caches ---------------------------------------------------------------
+    def cache_spec(self, name: str, shape: Sequence[int]) -> P:
+        leaf = name.split("/")[-1]
+        mesh, dp, tp = self.mesh, self.dp, self.tp
+        seq = tp if self.scfg.decode_kv_seq_shard else None
+
+        def tail(base_rank: int, prefs):
+            off = len(shape) - base_rank
+            return _place(shape, [(d + off, a) for d, a in prefs], mesh)
+
+        if leaf in ("k", "v", "ck", "cv"):       # (B, S, K, h)
+            return tail(4, [(0, dp), (2, tp), (1, seq)])
+        if leaf == "tm_s":                       # (B, H, hs, hs)
+            return tail(4, [(0, dp), (1, tp), (2, tp)])
+        if leaf in ("tm_x", "cm_x"):             # (B, d)
+            return tail(2, [(0, dp), (1, tp)])
+        if leaf == "h":                          # (B, lru)
+            return tail(2, [(0, dp), (1, tp)])
+        if leaf == "conv":                       # (B, cw-1, lru)
+            return tail(3, [(0, dp), (2, tp)])
+        return P()
+
+    # -- tree-level helpers ----------------------------------------------------
+    def _named(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    def params_shardings(self, params_tree):
+        return tree_map_with_names(
+            lambda n, l: self._named(self.param_spec(n, l.shape)), params_tree)
+
+    def state_shardings(self, state_tree):
+        """TrainState {params, opt, step}: opt m/v mirror the param layout."""
+        def rule(name, leaf):
+            if name == "step":
+                return self._named(P())
+            # strip 'params/' or 'opt/m/' etc. prefixes
+            parts = name.split("/")
+            if parts[0] == "params":
+                core = "/".join(parts[1:])
+            elif parts[0] == "opt":
+                core = "/".join(parts[2:])
+            else:
+                core = name
+            return self._named(self.param_spec(core, leaf.shape))
+        return tree_map_with_names(rule, state_tree)
+
+    def batch_shardings(self, batch_tree):
+        return tree_map_with_names(
+            lambda n, l: self._named(self.input_spec(n, l.shape)), batch_tree)
+
+    def cache_shardings(self, cache_tree):
+        return tree_map_with_names(
+            lambda n, l: self._named(self.cache_spec(n, l.shape)), cache_tree)
+
+    def replicated(self):
+        return self._named(P())
+
+    def dp_vector(self, shape: Sequence[int]):
+        return self._named(_place(shape, [(0, self.dp)], self.mesh))
+
+    # -- activation annotations (with_sharding_constraint inside the model) ---
+    def act_spec(self, kind: str, shape: Sequence[int]) -> P:
+        mesh, dp, tp = self.mesh, self.dp, self.tp
+        if kind == "hidden":       # (B, S, d)
+            if self.scfg.seq_shard_hidden:
+                # Megatron sequence parallelism: residual-stream activations
+                # (incl. scan carries / saved microbatch residuals) shard
+                # their SEQ dim over 'model'; GSPMD turns the TP all-reduce
+                # into reduce-scatter + all-gather around attention/ffn.
+                return _place(shape, [(0, dp), (1, tp)], mesh)
+            return _place(shape, [(0, dp)], mesh)
+        if kind in ("heads",):     # (B, S, N, hd)
+            return _place(shape, [(0, dp), (2, tp)], mesh)
+        if kind in ("wide",):      # (B, S, f) — ffn/lru hidden
+            return _place(shape, [(0, dp), (2, tp)], mesh)
+        if kind == "logits":       # (B, S, V)
+            return _place(shape, [(0, dp), (2, tp)], mesh)
+        if kind == "moe_buf":      # (G, E, C, d)
+            return _place(shape, [(0, dp), (1, self._expert_axis(shape[1]))], mesh)
+        if kind == "moe_hidden":   # (G, E, C, f)
+            return _place(shape, [(0, dp), (1, self._expert_axis(shape[1])), (3, tp)], mesh)
+        return P()
+
+    @property
+    def dp_size(self) -> int:
+        return _axis_size(self.mesh, self.dp)
+
+    def annotator(self) -> "ActivationAnnotator":
+        return ActivationAnnotator(self)
+
+
+class ActivationAnnotator:
+    """Threaded through the model code as ``ann``; pins activation layouts
+    inside scan bodies so GSPMD never loses batch sharding across the layer
+    loop (see DESIGN.md §5)."""
+
+    def __init__(self, rules: ShardingRules):
+        self.rules = rules
+        self.dp_size = rules.dp_size
+        self.moe_groups = rules.dp_size
+
+    def constrain(self, x, kind: str):
+        spec = self.rules.act_spec(kind, x.shape)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.rules.mesh, spec))

@@ -1,0 +1,62 @@
+"""Cost model for the discrete-event simulator.
+
+Two calibration sources:
+  * the paper's cluster scale (E1/E2 analogues) — defaults below;
+  * a real architecture: ``costmodel_from_arch`` derives checkpoint bytes
+    from the TrainState size and step capacity from the dry-run roofline
+    record (bound_step_s), so the same simulator answers "what CI should a
+    grok-1 training job on 2 pods use?".
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Optional
+
+
+@dataclass(frozen=True)
+class SimCostModel:
+    capacity_eps: float = 3000.0      # events/s the job sustains at steady state
+    base_latency_s: float = 0.45      # floor end-to-end latency
+    ckpt_duration_s: float = 2.5      # sync write duration (bytes / bw)
+    ckpt_sync_penalty: float = 1.0    # fraction of capacity lost while writing (sync)
+    async_mode: bool = False
+    async_overhead: float = 0.12      # capacity fraction lost while async write in flight
+    detect_s: float = 50.0            # failure detection timeout (Flink default)
+    restart_s: float = 30.0           # scheduler/restart/init time
+    restore_s: float = 10.0           # state restore time
+    reconfig_restart_s: float = 30.0  # controlled restart (savepoint -> restart)
+
+    def effective_capacity(self, checkpointing: bool) -> float:
+        if not checkpointing:
+            return self.capacity_eps
+        if self.async_mode:
+            return self.capacity_eps * (1.0 - self.async_overhead)
+        return self.capacity_eps * (1.0 - self.ckpt_sync_penalty)
+
+    def downtime_s(self) -> float:
+        return self.detect_s + self.restart_s + self.restore_s
+
+
+def costmodel_from_arch(param_count: int, bound_step_s: float,
+                        tokens_per_step: float, seq_len: int,
+                        n_hosts: int = 64, disk_bw_per_host: float = 1.0e9,
+                        opt_state_bytes_per_param: float = 12.0,
+                        async_mode: bool = False) -> SimCostModel:
+    """Calibrate the simulator for a real training job.
+
+    * one "event" = one sequence (seq_len tokens), matching the data
+      pipeline's event == document semantics;
+    * capacity = sequences/s from the roofline-bound step time;
+    * checkpoint duration = full TrainState over the per-host disk bw.
+    """
+    seqs_per_step = tokens_per_step / seq_len
+    capacity = seqs_per_step / max(bound_step_s, 1e-6)
+    state_bytes = param_count * opt_state_bytes_per_param
+    ckpt_duration = state_bytes / (n_hosts * disk_bw_per_host)
+    return SimCostModel(
+        capacity_eps=capacity,
+        base_latency_s=bound_step_s,
+        ckpt_duration_s=max(ckpt_duration, 0.05),
+        async_mode=async_mode,
+        restore_s=max(ckpt_duration, 0.05),
+    )

@@ -1,0 +1,18 @@
+from repro.utils.trees import (
+    tree_bytes,
+    tree_count,
+    tree_flatten_with_names,
+    tree_allclose,
+    tree_zeros_like,
+)
+from repro.utils.timing import Timer, now
+
+__all__ = [
+    "tree_bytes",
+    "tree_count",
+    "tree_flatten_with_names",
+    "tree_allclose",
+    "tree_zeros_like",
+    "Timer",
+    "now",
+]

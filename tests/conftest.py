@@ -1,0 +1,7 @@
+"""Pytest config: tests run on the default single CPU device (the dry-run
+sets its 512 placeholder devices in its own process — never globally)."""
+import os
+import sys
+
+# keep tests importable without `pip install -e .`
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,173 @@
+"""Khaos core algorithm tests (phases 1-3)."""
+import numpy as np
+import pytest
+
+from repro.config import KhaosConfig
+from repro.core import (AnomalyDetector, OnlineARIMA, QoSModel,
+                        RescalingTracker, WorkloadForecaster, optimize_ci,
+                        select_failure_points, young_daly_interval)
+from repro.data.stream import diurnal_rate, record_workload
+
+
+# -- online ARIMA -------------------------------------------------------------
+
+def test_arima_tracks_trend_and_seasonality():
+    m = OnlineARIMA(p=8, d=1, lr=0.1)
+    errs = []
+    for t in range(800):
+        y = 50 + 0.05 * t + 10 * np.sin(t / 15)
+        _, e = m.update(y)
+        if t > 200:
+            errs.append(abs(e) / max(abs(y), 1e-9))
+    assert np.mean(errs) < 0.02
+
+
+def test_arima_forecast_shape_and_finiteness():
+    m = OnlineARIMA(p=6, d=1)
+    for t in range(100):
+        m.update(100 + np.sin(t / 7))
+    fc = m.forecast(10)
+    assert fc.shape == (10,)
+    assert np.all(np.isfinite(fc))
+
+
+def test_arima_forecast_follows_ramp():
+    m = OnlineARIMA(p=8, d=1, lr=0.1)
+    for t in range(600):
+        m.update(1000 + 5 * t)
+    fc = m.forecast(5)
+    assert fc[-1] > fc[0]          # keeps rising
+    assert abs(fc[0] - (1000 + 5 * 600)) / (1000 + 5 * 600) < 0.25
+
+
+# -- phase 1 -----------------------------------------------------------------
+
+def test_failure_point_selection_spans_throughput_range():
+    rec = record_workload(diurnal_rate(base=1000, amplitude=0.8, period=7200),
+                          duration=7200, seed=0)
+    ss = select_failure_points(rec, m=5, smoothing_window=30)
+    w = ss.smoothed
+    assert len(ss.failure_times) == 5
+    # selected rates approximately cover [min, max]
+    assert ss.failure_rates.min() <= w.min() + 0.15 * (w.max() - w.min())
+    assert ss.failure_rates.max() >= w.max() - 0.15 * (w.max() - w.min())
+    # equidistant levels
+    lv = np.sort(ss.failure_rates)
+    gaps = np.diff(lv)
+    assert gaps.max() < 2.5 * max(gaps.min(), 1e-9)
+
+
+def test_failure_point_time_mode_eq4_literal():
+    rec = record_workload(diurnal_rate(base=1000, period=7200),
+                          duration=7200, seed=1)
+    ss = select_failure_points(rec, m=4, smoothing_window=30, mode="time")
+    f = ss.failure_times
+    assert len(f) == 4
+    gaps = np.diff(np.sort(f))
+    assert np.allclose(gaps, gaps[0], rtol=0.05)       # equidistant timestamps
+
+
+# -- anomaly detector -----------------------------------------------------------
+
+def test_anomaly_detector_measures_disruption():
+    det = AnomalyDetector()
+    rng = np.random.default_rng(0)
+    for t in range(600):
+        thr = 1000 + 30 * np.sin(t / 20) + rng.normal(0, 5)
+        lag = 50 + 5 * np.sin(t / 10) + rng.normal(0, 2)
+        if 400 <= t < 460:
+            thr, lag = 0.0, 50 + 200 * (t - 399)
+        det.observe(t, {"throughput": thr, "consumer_lag": lag},
+                    learn=not (400 <= t < 520))
+    assert det.recoveries, "failure not detected"
+    start, end = det.recoveries[-1]
+    assert 380 <= start <= 420
+    assert (end - start) >= 55
+
+
+def test_anomaly_detector_quiet_on_steady_stream():
+    det = AnomalyDetector(threshold_sigma=5.0)
+    rng = np.random.default_rng(1)
+    for t in range(500):
+        det.observe(t, {"throughput": 1000 + rng.normal(0, 10),
+                        "consumer_lag": 50 + rng.normal(0, 3)})
+    assert not det.recoveries
+
+
+# -- phase 3 models ----------------------------------------------------------
+
+def test_qos_model_fit_quality_and_error_analysis():
+    rng = np.random.default_rng(2)
+    ci = rng.uniform(10, 120, 80)
+    tr = rng.uniform(500, 3000, 80)
+    y = 40 + 1.1 * ci + 0.02 * tr + 1e-4 * ci * tr + rng.normal(0, 1.5, 80)
+    m = QoSModel(degree=2).fit(ci, tr, y)
+    assert m.avg_percent_error(ci, tr, y) < 0.05
+    pred = m.predict(np.array([60.0]), 1500.0)
+    truth = 40 + 1.1 * 60 + 0.02 * 1500 + 1e-4 * 60 * 1500
+    assert abs(pred[0] - truth) / truth < 0.1
+
+
+def test_rescaling_tracker_mean_of_fractions():
+    rt = RescalingTracker(k=3)
+    for obs, pred in [(1.0, 2.0), (2.0, 2.0), (3.0, 2.0), (4.0, 2.0)]:
+        rt.track(obs, pred)
+    assert abs(rt.p - np.mean([1.0, 1.5, 2.0])) < 1e-9   # window of 3
+
+
+def test_eq8_optimizer_prefers_balanced_feasible_ci():
+    rng = np.random.default_rng(3)
+    ci = rng.uniform(10, 120, 100)
+    tr = rng.uniform(500, 3000, 100)
+    lat = 0.3 + 8.0 / ci                                  # low CI -> high latency
+    rec = 60 + 2.0 * ci                                   # high CI -> slow recovery
+    m_l = QoSModel().fit(ci, tr, lat)
+    m_r = QoSModel().fit(ci, tr, rec)
+    res = optimize_ci(m_l, m_r, tr_avg=1500, l_const=1.0, r_const=240,
+                      p=1.0, ci_min=10, ci_max=120)
+    assert res.feasible
+    assert 10 <= res.ci <= 120
+    assert res.q_r < 1 and res.q_l < 1
+    # the objective balances: |Q_R - Q_L| should be small at the optimum
+    assert abs(res.q_r - res.q_l) < 0.25
+
+
+def test_eq8_optimizer_reports_infeasible():
+    rng = np.random.default_rng(4)
+    ci = rng.uniform(10, 120, 50)
+    tr = rng.uniform(500, 3000, 50)
+    m_l = QoSModel().fit(ci, tr, np.full(50, 5.0))    # always above l_const=1
+    m_r = QoSModel().fit(ci, tr, 60 + 2 * ci)
+    res = optimize_ci(m_l, m_r, 1500, 1.0, 240, 1.0, 10, 120)
+    assert not res.feasible and res.ci is None
+
+
+# -- TSF deferral --------------------------------------------------------------
+
+def test_forecaster_defers_on_forecasted_drop():
+    f = WorkloadForecaster(horizon=5, defer_drop_fraction=0.10)
+    # steep relative decline: 5-step-ahead drop is ~25% of the current level
+    for t in range(80):
+        f.observe(3000 - 30.0 * t)
+    assert f.should_defer()
+
+
+def test_forecaster_no_defer_on_stable_load():
+    f = WorkloadForecaster(horizon=5, defer_drop_fraction=0.10)
+    rng = np.random.default_rng(5)
+    for t in range(400):
+        f.observe(2000 + rng.normal(0, 10))
+    assert not f.should_defer()
+
+
+# -- young/daly ----------------------------------------------------------------
+
+def test_young_daly_matches_first_order():
+    w = young_daly_interval(10.0, 86400.0, higher_order=False)
+    assert abs(w - np.sqrt(2 * 10 * 86400)) < 1e-6
+
+
+def test_young_daly_monotone_in_mtbf():
+    a = young_daly_interval(5.0, 3600.0)
+    b = young_daly_interval(5.0, 86400.0)
+    assert b > a

@@ -1,0 +1,90 @@
+"""Fault-tolerance layer: detector, injector, elastic rescale, stragglers."""
+import numpy as np
+import pytest
+
+from repro.config import MeshConfig
+from repro.ft import (FailureInjector, FailureModel, HeartbeatDetector,
+                      StragglerDetector, plan_rescale)
+
+
+def test_heartbeat_detector():
+    det = HeartbeatDetector(num_hosts=4, timeout_s=10.0)
+    det.heartbeat_all(0.0)
+    det.heartbeat(0, 20.0)
+    det.heartbeat(1, 20.0)
+    assert det.failed_hosts(25.0) == [2, 3]
+    assert not det.healthy(25.0)
+
+
+def test_failure_model_mtbf_statistics():
+    fm = FailureModel(mtbf_node_s=86400.0, num_nodes=64, seed=1)
+    gaps = []
+    t = 0.0
+    for _ in range(300):
+        nt = fm.next_failure_after(t)
+        gaps.append(nt - t)
+        t = nt
+    assert abs(np.mean(gaps) - 86400.0 / 64) / (86400.0 / 64) < 0.2
+
+
+def test_failure_model_weibull():
+    fm = FailureModel(mtbf_node_s=86400.0, num_nodes=64,
+                      distribution="weibull", weibull_shape=0.7, seed=2)
+    gaps = [fm.next_failure_after(0.0) for _ in range(500)]
+    assert abs(np.mean(gaps) - 86400.0 / 64) / (86400.0 / 64) < 0.25
+
+
+def test_worst_case_injection_lands_before_ckpt_completion():
+    inj = FailureInjector(epsilon_s=1.0)
+    # interval 60s, ckpt cost 5s, last ckpt at t=0: completions at 65, 125, ...
+    t = inj.worst_case_time(100.0, last_ckpt_t=0.0, interval_s=60.0,
+                            ckpt_cost_s=5.0)
+    assert abs(t - 124.0) < 1e-9      # 120 + 5 - 1
+
+
+def test_rescale_keeps_tp_and_divides_batch():
+    mesh = MeshConfig(multi_pod=False, data=16, model=16)
+    plan = plan_rescale(mesh, hosts_alive=60, chips_per_host=4,
+                        global_batch=256)
+    assert plan.new.model == 16
+    assert plan.new.data <= 15
+    assert 256 % plan.new.data == 0
+    assert plan.batch_ok
+
+
+def test_rescale_multi_pod_degrades_to_single():
+    mesh = MeshConfig(multi_pod=True, data=16, model=16, pods=2)
+    plan = plan_rescale(mesh, hosts_alive=65, chips_per_host=4,
+                        global_batch=256)   # 260 chips: can't fill 2 pods evenly
+    assert plan.new.num_devices <= 260
+    assert plan.new.model == 16
+
+
+def test_rescale_raises_below_tp():
+    mesh = MeshConfig(data=16, model=16)
+    with pytest.raises(ValueError):
+        plan_rescale(mesh, hosts_alive=3, chips_per_host=4)
+
+
+def test_straggler_detector_flags_persistent_slow_host():
+    det = StragglerDetector(num_hosts=4, slow_factor=1.4, patience=4)
+    rng = np.random.default_rng(0)
+    flagged = []
+    for t in range(40):
+        times = {h: 1.0 + rng.normal(0, 0.02) for h in range(4)}
+        if t >= 10:
+            times[2] = 2.5        # host 2 degrades
+        flagged += det.observe_step(float(t), times)
+    assert flagged == [2]
+    assert det.flagged == {2}
+
+
+def test_straggler_detector_ignores_transient_blips():
+    det = StragglerDetector(num_hosts=4, patience=5)
+    rng = np.random.default_rng(1)
+    for t in range(40):
+        times = {h: 1.0 + rng.normal(0, 0.02) for h in range(4)}
+        if t in (10, 20):
+            times[1] = 3.0        # isolated blips
+        det.observe_step(float(t), times)
+    assert not det.flagged

@@ -1,0 +1,91 @@
+"""Roofline HLO walker: trip counts, dot flops, collective accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline import (HloModule, analyze_hlo_text, model_flops,
+                            roofline_terms)
+from repro.config import TRAIN_4K, DECODE_32K
+from repro.configs import get_config
+
+_TOY_HLO = """
+HloModule toy
+
+%body (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,16] get-tuple-element(%p), index=1
+  %w = f32[16,16] constant({...})
+  %dot.1 = f32[8,16] dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,16]) tuple(%ni, %dot.1)
+}
+
+%cond (p2: (s32[], f32[8,16])) -> pred[] {
+  %p2 = (s32[], f32[8,16]) parameter(0)
+  %i2 = s32[] get-tuple-element(%p2), index=0
+  %n = s32[] constant(7)
+  ROOT %cmp = pred[] compare(%i2, %n), direction=LT
+}
+
+ENTRY %main (a: f32[8,16]) -> f32[8,16] {
+  %a = f32[8,16] parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[8,16]) tuple(%zero, %a)
+  %w2 = while((s32[], f32[8,16]) %init), condition=%cond, body=%body
+  %ar = f32[8,16] get-tuple-element(%w2), index=1
+  ROOT %red = f32[8,16] all-reduce(%ar), replica_groups={}, to_apply=%cond
+}
+"""
+
+
+def test_walker_trip_count_multiplies_body_flops():
+    mod = HloModule(_TOY_HLO)
+    costs = mod.cost()
+    # dot: 2*8*16*16 = 4096 flops, x7 trips
+    assert costs.flops == pytest.approx(7 * 4096)
+    # all-reduce operand: 8*16*4 bytes
+    assert costs.collective_bytes == pytest.approx(8 * 16 * 4)
+    assert costs.by_type == {"all-reduce": 8 * 16 * 4}
+
+
+def test_walker_on_real_scanned_program():
+    """Compile a scanned matmul chain and check the walker ~ analytic flops."""
+    L, n = 5, 64
+    ws = jnp.ones((L, n, n), jnp.float32)
+
+    def f(x, ws):
+        def body(x, w):
+            return x @ w, None
+        y, _ = jax.lax.scan(body, x, ws)
+        return y
+
+    hlo = jax.jit(f).lower(jnp.ones((n, n)), ws).compile().as_text()
+    costs = analyze_hlo_text(hlo)
+    analytic = L * 2 * n ** 3
+    assert costs.flops == pytest.approx(analytic, rel=0.01)
+
+
+def test_roofline_terms_dominance():
+    from repro.roofline import HloCosts, PEAK_FLOPS, HBM_BW
+    c = HloCosts(flops=PEAK_FLOPS, bytes=HBM_BW / 10, collective_bytes=0)
+    t = roofline_terms(c)
+    assert t["dominant"] == "compute"
+    assert t["t_compute_s"] == pytest.approx(1.0)
+    assert t["roofline_fraction"] == pytest.approx(1.0)
+
+
+def test_model_flops_train_vs_decode():
+    cfg = get_config("yi-6b")
+    train = model_flops(cfg, TRAIN_4K)
+    decode = model_flops(cfg, DECODE_32K)
+    assert train == pytest.approx(6 * cfg.param_count() * 256 * 4096)
+    assert decode == pytest.approx(2 * cfg.param_count() * 128)
+
+
+def test_model_flops_moe_uses_active_params():
+    cfg = get_config("olmoe-1b-7b")
+    assert model_flops(cfg, TRAIN_4K) == pytest.approx(
+        6 * cfg.active_param_count() * 256 * 4096)

@@ -1,0 +1,64 @@
+"""Sharding levers added during §Perf: SP, moe_megatron, controller gating."""
+import numpy as np
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.config import KhaosConfig, ShardingConfig
+from repro.configs import get_config
+from repro.core import KhaosController, QoSModel
+from repro.sharding import ShardingRules
+
+
+def _rules(arch="yi-6b", multi=False, **scfg):
+    mesh = AbstractMesh((2, 16, 16) if multi else (16, 16),
+                        ("pod", "data", "model") if multi else ("data", "model"))
+    return ShardingRules(get_config(arch), mesh, ShardingConfig(**scfg))
+
+
+def test_sp_shards_hidden_seq_dim():
+    r = _rules(seq_shard_hidden=True)
+    assert r.act_spec("hidden", (256, 4096, 4096)) == P("data", "model", None)
+    # long_500k decode: seq dim 1 not divisible -> falls back cleanly
+    assert r.act_spec("hidden", (1, 1, 2560)) == P(None, None, None)
+
+
+def test_sp_off_by_default():
+    r = _rules()
+    assert r.act_spec("hidden", (256, 4096, 4096)) == P("data", None, None)
+
+
+def test_moe_megatron_expert_ffn_sharding():
+    r = _rules("grok-1-314b", fsdp_min_params=0, moe_megatron=True)
+    up = r.param_spec("layers/moe/w_up", (64, 8, 6144, 32768))
+    down = r.param_spec("layers/moe/w_down", (64, 8, 32768, 6144))
+    assert up == P(None, None, None, ("data", "model"))
+    assert down == P(None, None, ("data", "model"), None)
+
+
+def test_moe_megatron_ignored_when_experts_divide():
+    # olmoe: 64 experts divide tp=16 -> real EP wins over megatron fallback
+    r = _rules("olmoe-1b-7b", fsdp=False, moe_megatron=True)
+    up = r.param_spec("layers/moe/w_up", (16, 64, 2048, 1024))
+    assert up == P(None, "model", None, None)
+
+
+def test_controller_skips_unhealthy_job():
+    rng = np.random.default_rng(0)
+    ci = rng.uniform(10, 120, 40)
+    tr = rng.uniform(500, 2000, 40)
+    ctl = KhaosController(
+        cfg=KhaosConfig(optimization_period=1.0),
+        m_l=QoSModel().fit(ci, tr, 0.5 + 1 / ci),
+        m_r=QoSModel().fit(ci, tr, 50 + ci))
+
+    class Job:
+        t = 100.0
+        def now(self): return self.t
+        def current_ci(self): return 60.0
+        def avg_latency(self, w): return 50.0      # catastrophic (catch-up)
+        def avg_throughput(self, w): return 1000.0
+        def healthy(self): return False
+        def reconfigure(self, ci): raise AssertionError("must not reconfigure")
+
+    d = ctl.maybe_optimize(Job())
+    assert d.kind == "unhealthy"
+    assert not ctl.latency_obs          # poisoned samples not tracked

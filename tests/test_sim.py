@@ -1,0 +1,123 @@
+"""Discrete-event simulator invariants + Khaos-on-sim integration."""
+import numpy as np
+import pytest
+
+from repro.config import KhaosConfig
+from repro.core import (KhaosController, QoSModel, run_profiling,
+                        select_failure_points)
+from repro.data.stream import constant_rate, diurnal_rate, record_workload
+from repro.sim import (SimCostModel, SimDeployment, SimJobHandle,
+                       StreamSimulator, costmodel_from_arch)
+
+
+def test_conservation_no_failures():
+    cost = SimCostModel(capacity_eps=2000.0, ckpt_duration_s=1.0)
+    sim = StreamSimulator(cost, ci_s=60.0, schedule=constant_rate(1000.0))
+    sim.run_until(600.0)
+    assert abs(sim.produced - (sim.consumed + sim.lag)) < 2 * 1000.0
+    assert sim.ckpt_count >= 8
+    lat = np.array(sim.metrics.series("latency").values)
+    assert np.all(lat >= cost.base_latency_s - 1e-9)
+
+
+def test_failure_rolls_back_to_last_checkpoint_and_recovers():
+    cost = SimCostModel(capacity_eps=3000.0, ckpt_duration_s=1.0)
+    sim = StreamSimulator(cost, ci_s=30.0, schedule=constant_rate(1500.0))
+    sim.inject_failure(300.0)
+    sim.run_until(2000.0)
+    assert len(sim.recoveries) == 1
+    r = sim.recoveries[0]
+    # downtime + catch-up at rho=0.5: recovery should exceed plain downtime
+    assert r["recovery_s"] > cost.downtime_s()
+    # job caught up: lag near zero at the end
+    assert sim.lag < 2 * 1500.0
+
+
+def test_recovery_grows_with_ci_at_fixed_load():
+    """The paper's core premise: longer CI -> more lost work -> longer
+    recovery (rows of Table II/III) — under WORST-CASE injection (just
+    before the next checkpoint completes, §III-C)."""
+    from repro.ft.failures import FailureInjector
+    cost = SimCostModel(capacity_eps=2600.0, ckpt_duration_s=1.5)
+    recs = []
+    for ci in (30.0, 240.0):
+        sim = StreamSimulator(cost, ci_s=ci, schedule=constant_rate(2000.0))
+        t = FailureInjector().worst_case_time(ci * 3 + 5.0, 0.0, ci,
+                                              cost.ckpt_duration_s)
+        sim.inject_failure(t)
+        sim.run_until(t + 7000.0)
+        assert sim.recoveries
+        recs.append(sim.recoveries[0]["recovery_s"])
+    assert recs[1] > recs[0]
+
+
+def test_sync_checkpoint_reduces_capacity_and_raises_latency():
+    lo = SimCostModel(capacity_eps=2200.0, ckpt_duration_s=3.0)
+    lats = {}
+    for ci in (10.0, 120.0):
+        sim = StreamSimulator(lo, ci_s=ci, schedule=constant_rate(2000.0))
+        sim.run_until(1200.0)
+        lats[ci] = np.mean(sim.metrics.series("latency").values)
+    assert lats[10.0] > lats[120.0]     # frequent ckpt -> higher latency
+
+
+def test_flink_semantics_reconfigure_no_rollback():
+    cost = SimCostModel(capacity_eps=2000.0, ckpt_duration_s=1.0)
+    sim = StreamSimulator(cost, ci_s=60.0, schedule=constant_rate(1000.0),
+                          flink_semantics=True)
+    sim.run_until(200.0)
+    consumed_before = sim.consumed
+    sim.set_ci(30.0)
+    sim.run_until(400.0)
+    # savepoint: no reprocessing (consumed never decreases)
+    assert sim.consumed >= consumed_before
+    assert sim.policy.interval_s == 30.0
+    # but the restart downtime produced lag that was then drained
+    assert len(sim.metrics.series("latency")) > 0
+
+
+def test_profiling_recovery_monotone_in_ci_on_average():
+    sched = diurnal_rate(base=1500, amplitude=0.4, period=7200, seed=3)
+    rec = record_workload(sched, duration=7200, seed=3)
+    ss = select_failure_points(rec, m=3, smoothing_window=30)
+    cost = SimCostModel(capacity_eps=2600.0, ckpt_duration_s=1.5)
+    prof = run_profiling(lambda ci: SimDeployment(ci, rec, cost, warmup_s=200),
+                         ss, [30, 240], margin=60)
+    # mean over failure points: recovery at CI=240 > at CI=30
+    assert prof.recoveries[:, 1].mean() > prof.recoveries[:, 0].mean()
+    assert np.all(prof.latencies > 0)
+
+
+def test_khaos_controller_on_sim_reconfigures_under_violation():
+    """Integration: controller detects predicted recovery violations and
+    moves the CI; the sim applies it with flink semantics."""
+    rng = np.random.default_rng(0)
+    ci = rng.uniform(10, 300, 120)
+    tr = rng.uniform(800, 2200, 120)
+    m_l = QoSModel().fit(ci, tr, 0.4 + 2.0 / ci)
+    m_r = QoSModel().fit(ci, tr, 80 + 1.2 * ci + 0.02 * tr)
+
+    cfg = KhaosConfig(latency_constraint=1.0, recovery_constraint=240.0,
+                      optimization_period=30.0, ci_min=10, ci_max=300,
+                      reconfig_cooldown=60.0)
+    cost = SimCostModel(capacity_eps=2600.0, ckpt_duration_s=1.0)
+    sim = StreamSimulator(cost, ci_s=290.0, schedule=constant_rate(1800.0))
+    job = SimJobHandle(sim)
+    ctl = KhaosController(cfg=cfg, m_l=m_l, m_r=m_r)
+    while sim.t < 900.0:
+        sim.tick()
+        ctl.maybe_optimize(job)
+    # predicted recovery at CI=290 ~ 80+348+36 >> 240 -> must reconfigure down
+    assert job.reconfigurations, "controller never acted"
+    t0, new_ci = job.reconfigurations[0]
+    assert new_ci < 200.0
+    err = ctl.error_analysis()
+    assert "latency_avg_pct_error" in err
+
+
+def test_costmodel_from_arch():
+    cm = costmodel_from_arch(param_count=6_000_000_000, bound_step_s=2.0,
+                             tokens_per_step=1_048_576, seq_len=4096,
+                             n_hosts=64)
+    assert cm.capacity_eps == pytest.approx(128.0, rel=0.01)
+    assert cm.ckpt_duration_s > 0.5      # 72 GB over 64 GB/s aggregate

@@ -1,16 +1,22 @@
 """E5 (beyond-paper): checkpoint subsystem microbenchmarks on a real model
 state — sync vs async write blocking, incremental delta bytes, int8 codec
-ratio, restore time.  These numbers calibrate the simulator's cost model
-(sim/costmodel.py) for arch-specific CI optimization."""
+ratio, restore time, and whole-*plan* comparisons (full vs delta vs
+multilevel: bytes written + write duration per trigger) through the
+unified ``CheckpointManager``.  These numbers calibrate the simulator's
+cost model (sim/costmodel.py); the final scenario runs the plan optimizer
+against that calibration and shows the (mode, CI) it picks vs the
+full-sync baseline."""
 from __future__ import annotations
 
+import shutil
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import (AsyncCheckpointer, CheckpointStore,
+from repro.checkpoint import (AsyncCheckpointer, CheckpointManager,
+                              CheckpointPlan, CheckpointStore,
                               IncrementalCheckpointer)
 from repro.config import OptimizerConfig
 from repro.configs import get_smoke_config
@@ -77,8 +83,96 @@ def bench_checkpoint(tmpdir: str = "/tmp/repro_bench_ckpt"):
     return rows
 
 
+PLANS = {
+    "full-sync": CheckpointPlan(),
+    "full-async": CheckpointPlan(sync=False),
+    "incr8-sync": CheckpointPlan(mode="incremental", full_every=8),
+    "multilevel": CheckpointPlan(levels=("memory", "local", "remote"),
+                                 local_every=2, remote_every=8),
+    "ml+delta": CheckpointPlan(mode="incremental", full_every=8,
+                               levels=("memory", "local", "remote"),
+                               local_every=1, remote_every=8),
+}
+
+
+def bench_plans(tmpdir: str = "/tmp/repro_bench_ckpt_plans",
+                triggers: int = 16):
+    """Whole-plan accounting: run ``triggers`` checkpoint triggers of a
+    drifting train state through each plan and report total bytes written
+    and mean blocking/write durations — the overhead the optimizer trades
+    against QoS."""
+    state = _mk_state()
+    nbytes = tree_bytes(state)
+    print(f"\n=== Checkpoint plans ({triggers} triggers, "
+          f"state = {nbytes/2**20:.1f} MiB) ===")
+    print(f"{'plan':12s} {'bytes_written':>14s} {'vs_full':>8s} "
+          f"{'write_ms':>9s} {'block_ms':>9s}")
+    rows = []
+    baseline_bytes = None
+    for name, plan in PLANS.items():
+        shutil.rmtree(f"{tmpdir}/{name}", ignore_errors=True)
+        mgr = CheckpointManager(f"{tmpdir}/{name}", plan)
+        cur = state
+        block, writes = [], []
+        for i in range(triggers):
+            cur = jax.tree_util.tree_map(
+                lambda x: x + jnp.asarray(1e-4, x.dtype)
+                if jnp.issubdtype(x.dtype, jnp.floating) else x, cur)
+            rep = mgr.save(i, cur, float(i))
+            block.append(rep.blocking_s)
+            mgr.wait()
+            writes.append(rep.duration_s)
+        st = mgr.stats()
+        total = st["bytes_written"]
+        if baseline_bytes is None:
+            baseline_bytes = total
+        rows.append((name, total, total / baseline_bytes,
+                     1e3 * float(np.mean(writes)),
+                     1e3 * float(np.mean(block))))
+        print(f"{name:12s} {total:>14d} {total/baseline_bytes:>8.3f} "
+              f"{1e3*np.mean(writes):>9.1f} {1e3*np.mean(block):>9.1f}")
+    return rows
+
+
+def bench_optimize_plan():
+    """The acceptance scenario: with latency the binding constraint, the
+    plan optimizer must leave the full-sync baseline for a cheaper
+    mechanism at equal QoS feasibility."""
+    from repro.core import QoSModel, optimize_plan
+    from repro.sim import SimCostModel
+
+    rng = np.random.default_rng(0)
+    ci = rng.uniform(10, 120, 200)
+    tr = rng.uniform(1000, 4000, 200)
+    cost = SimCostModel(capacity_eps=4600.0, ckpt_duration_s=3.0,
+                        ckpt_sync_penalty=0.6)
+    m_l = QoSModel().fit(ci, tr, cost.base_latency_s + 40.0 / ci + tr * 1e-5)
+    m_r = QoSModel().fit(ci, tr, 80.0 + 1.2 * ci + 0.01 * tr)
+    res = optimize_plan(m_l, m_r, tr_avg=2500.0, l_const=1.0, r_const=240.0,
+                        p=1.0, ci_min=10, ci_max=120, cost=cost)
+    print("\n=== Plan optimization (latency-bound scenario) ===")
+    print(f"{'variant':16s} {'feasible':>8s} {'ci':>6s} {'q_l':>6s} "
+          f"{'q_r':>6s} {'objective':>9s} {'overhead':>8s}")
+    for c in res.candidates:
+        ci_s = f"{c.ci:.1f}" if c.ci is not None else "-"
+        print(f"{c.plan.name:16s} {str(c.feasible):>8s} {ci_s:>6s} "
+              f"{c.q_l:>6.3f} {c.q_r:>6.3f} {c.objective:>9.3f} "
+              f"{c.overhead:>8.4f}")
+    b = res.baseline
+    print(f"chosen: {res.plan.name} @ CI={res.ci:.1f}s "
+          f"(overhead {res.overhead:.4f}) vs baseline {b.plan.name} "
+          f"(overhead {b.overhead:.4f})")
+    assert res.plan.name != b.plan.name and res.overhead < b.overhead, \
+        "optimizer failed to beat the full-sync baseline"
+    return res
+
+
 def main():
-    return bench_checkpoint()
+    rows = bench_checkpoint()
+    rows += [(n, ms, f"bytes={b} vs_full={r:.3f}")
+             for n, b, r, ms, _ in bench_plans()]
+    bench_optimize_plan()
+    return rows
 
 
 if __name__ == "__main__":

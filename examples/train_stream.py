@@ -11,7 +11,7 @@ import argparse
 
 import numpy as np
 
-from repro.config import KhaosConfig, OptimizerConfig
+from repro.config import CheckpointPlan, KhaosConfig, OptimizerConfig
 from repro.configs import get_smoke_config
 from repro.core import KhaosController, QoSModel
 from repro.data.stream import EventStream, diurnal_rate
@@ -55,9 +55,14 @@ def main():
 
     cfg = get_smoke_config(args.arch)
     stream = EventStream(schedule=diurnal_rate(base=400.0, period=600.0))
+    # a full checkpoint *plan*: async incremental with an in-RAM level for
+    # cheap task-restart recovery (deltas land on local disk between fulls)
+    plan = CheckpointPlan(interval_s=10.0, mode="incremental", full_every=4,
+                          levels=("memory", "local"), sync=False,
+                          num_shards=2)
     tcfg = TrainerConfig(batch=8, seq_len=32, ckpt_dir="/tmp/repro_train_stream",
-                         ckpt_interval_s=10.0, ckpt_async=True,
-                         time_scale=8.0, detect_s=2.0, restart_s=2.0)
+                         time_scale=8.0, detect_s=2.0, restart_s=2.0,
+                         plan=plan)
     trainer = ResilientTrainer(cfg, tcfg, stream,
                                OptimizerConfig(total_steps=5000, lr=3e-3))
     trainer.inject_failure_at(args.fail_at)
@@ -85,6 +90,9 @@ def main():
           f"loss: {trainer.losses[0]:.3f} -> {summary['final_loss']:.3f}")
     print(f"checkpoints: {summary['checkpoints']}  failures: {summary['failures']}  "
           f"restores: {summary['restores']}")
+    st = summary["ckpt_stats"]
+    print(f"checkpoint plane [{st['plan']}]: {st['bytes_by_kind']} bytes, "
+          f"levels {st['saves_by_level']}, restores {st['restores']}")
     print(f"controller reconfigurations: {job.reconfigurations}")
     assert summary["failures"] >= 1 and summary["restores"] >= 1
     assert summary["final_loss"] < trainer.losses[0], "model should learn"

@@ -1,10 +1,16 @@
-from repro.checkpoint.store import CheckpointStore, CheckpointMeta
-from repro.checkpoint.async_ckpt import AsyncCheckpointer
+from repro.checkpoint.store import CheckpointStore, CheckpointMeta, HAVE_ZSTD
+from repro.checkpoint.async_ckpt import AsyncCheckpointer, BackgroundCommitter
 from repro.checkpoint.incremental import IncrementalCheckpointer
 from repro.checkpoint.multilevel import MultiLevelCheckpointer
 from repro.checkpoint.policy import CheckpointPolicy
+from repro.checkpoint.manager import (CheckpointManager, Checkpointer,
+                                      RestoreReport, SaveReport)
+from repro.config import CheckpointPlan
 
 __all__ = [
     "CheckpointStore", "CheckpointMeta", "AsyncCheckpointer",
-    "IncrementalCheckpointer", "MultiLevelCheckpointer", "CheckpointPolicy",
+    "BackgroundCommitter", "IncrementalCheckpointer",
+    "MultiLevelCheckpointer", "CheckpointPolicy", "CheckpointManager",
+    "Checkpointer", "CheckpointPlan", "SaveReport", "RestoreReport",
+    "HAVE_ZSTD",
 ]

@@ -7,11 +7,16 @@ dropped ('skip').
 Crash-consistency: the underlying store only publishes a manifest after
 all shards land, so a failure mid-write leaves the previous checkpoint as
 the newest valid one.
+
+``BackgroundCommitter`` is the reusable piece (one in-flight commit thunk
++ busy policy + error capture); ``AsyncCheckpointer`` is the legacy
+store-bound wrapper and ``manager.CheckpointManager`` drives the committer
+with composed (delta/multilevel) commit thunks.
 """
 from __future__ import annotations
 
 import threading
-from typing import Any, Optional
+from typing import Any, Callable, Optional
 
 import jax
 import numpy as np
@@ -19,38 +24,38 @@ import numpy as np
 from repro.checkpoint.store import CheckpointStore
 
 
-class AsyncCheckpointer:
-    def __init__(self, store: CheckpointStore, busy_policy: str = "skip"):
+def snapshot_to_host(state: Any) -> Any:
+    """Device -> host copy; on TPU this is the only step-blocking part.
+    np.array(copy=True): np.asarray would ALIAS host-resident arrays and
+    let later in-place mutation corrupt the in-flight snapshot."""
+    return jax.tree_util.tree_map(lambda x: np.array(x, copy=True), state)
+
+
+class BackgroundCommitter:
+    """At most one commit thunk in flight on a daemon thread."""
+
+    def __init__(self, busy_policy: str = "skip"):
         assert busy_policy in ("skip", "block")
-        self.store = store
         self.busy_policy = busy_policy
         self._thread: Optional[threading.Thread] = None
         self._lock = threading.Lock()
-        self.writes = 0
+        self.commits = 0
         self.skips = 0
         self.errors: list = []
 
-    def _snapshot(self, state: Any) -> Any:
-        # device -> host copy; on TPU this is the only step-blocking part.
-        # np.array(copy=True): np.asarray would ALIAS host-resident arrays and
-        # let later in-place mutation corrupt the in-flight snapshot.
-        return jax.tree_util.tree_map(lambda x: np.array(x, copy=True), state)
-
-    def save(self, step: int, state: Any, timestamp: float = 0.0,
-             extra: Optional[dict] = None) -> bool:
-        """Snapshot now, write in background. Returns False if skipped."""
+    def submit(self, thunk: Callable[[], None]) -> bool:
+        """Run ``thunk`` in the background. Returns False if skipped."""
         if self._thread is not None and self._thread.is_alive():
             if self.busy_policy == "skip":
                 self.skips += 1
                 return False
             self._thread.join()
-        snap = self._snapshot(state)
 
         def work():
             try:
-                self.store.save(step, snap, timestamp, extra)
+                thunk()
                 with self._lock:
-                    self.writes += 1
+                    self.commits += 1
             except Exception as e:   # noqa: BLE001
                 with self._lock:
                     self.errors.append(repr(e))
@@ -66,3 +71,49 @@ class AsyncCheckpointer:
     @property
     def busy(self) -> bool:
         return self._thread is not None and self._thread.is_alive()
+
+
+class AsyncCheckpointer:
+    def __init__(self, store: CheckpointStore, busy_policy: str = "skip"):
+        self.store = store
+        self._committer = BackgroundCommitter(busy_policy)
+
+    @property
+    def busy_policy(self) -> str:
+        return self._committer.busy_policy
+
+    def _snapshot(self, state: Any) -> Any:
+        return snapshot_to_host(state)
+
+    def save(self, step: int, state: Any, timestamp: float = 0.0,
+             extra: Optional[dict] = None) -> bool:
+        """Snapshot now, write in background. Returns False if skipped."""
+        if self._committer.busy and self._committer.busy_policy == "skip":
+            self._committer.skips += 1
+            return False
+        snap = self._snapshot(state)
+        return self._committer.submit(
+            lambda: self.store.save(step, snap, timestamp, extra))
+
+    def wait(self) -> None:
+        self._committer.wait()
+
+    @property
+    def busy(self) -> bool:
+        return self._committer.busy
+
+    @property
+    def writes(self) -> int:
+        return self._committer.commits
+
+    @property
+    def skips(self) -> int:
+        return self._committer.skips
+
+    @property
+    def errors(self) -> list:
+        return self._committer.errors
+
+    def stats(self) -> dict:
+        return {"writes": self.writes, "skips": self.skips,
+                "errors": len(self.errors)}

@@ -1,19 +1,30 @@
 """Incremental (delta) checkpointing.
 
-Between full checkpoints, only the (zstd-compressed) delta vs the last
-*full* checkpoint is persisted — optimizer-adjacent tensors change slowly,
-so deltas compress hard.  Two modes:
+Between full checkpoints, only the compressed delta vs the last *full*
+checkpoint is persisted — optimizer-adjacent tensors change slowly, so
+deltas compress hard.  Two encodings:
 
-  * ``lossless`` (default): delta = new - base, raw bytes zstd-compressed;
-    restore is bit-exact.
+  * ``lossless`` (default): delta = new - base (float32) plus an XOR
+    residual between the predicted and true bytes — the subtraction makes
+    slowly-drifting tensors compress hard, the residual makes restore
+    BIT-exact even where float rounding perturbs the reconstruction.
+    Non-float leaves store the XOR of raw bytes (zeros when unchanged).
   * ``int8``: per-group int8 quantized delta (the ``kernels/ckpt_delta``
     Pallas kernel implements the encode on-TPU; host fallback is its
     ref.py oracle).  Lossy — used as a cheap level-1 in multi-level
     schemes (paper-cited [21]); never for the level-2 full snapshots.
 
+Compression: zstd when ``zstandard`` is installed, stdlib zlib otherwise.
+The codec actually used is recorded in each delta manifest so restore picks
+the matching decompressor even if the environment changed in between.
+
 Chain layout: full_0, delta_1..delta_{k-1}, full_k, ...; restore loads the
 newest full plus its newest delta (deltas are vs the base full, not
 chained, so restore reads at most two objects).
+
+The module-level ``write_delta``/``apply_delta``/``newest_delta_step``
+functions are the reusable layer: ``IncrementalCheckpointer`` (legacy API)
+and ``manager.CheckpointManager`` (unified plane) both compose them.
 """
 from __future__ import annotations
 
@@ -22,21 +33,151 @@ import os
 from typing import Any, Optional
 
 import numpy as np
-import zstandard as zstd
 
 import jax
 
-from repro.checkpoint.store import CheckpointStore
+from repro.checkpoint.store import (CheckpointStore, fresh_tmp_dir,
+                                    get_compressor, get_decompressor,
+                                    publish_dir_atomic, write_json_atomic)
 from repro.utils.trees import tree_flatten_with_names
+
+
+def delta_dir(directory: str, step: int) -> str:
+    return os.path.join(directory, f"delta_{step:010d}")
+
+
+def write_delta(directory: str, step: int, state_np: Any, base: Any,
+                base_step: int, timestamp: float = 0.0,
+                extra: Optional[dict] = None, mode: str = "lossless",
+                codec: str = "auto", level: int = 3) -> tuple[str, int]:
+    """Encode + atomically publish one delta checkpoint.
+
+    Returns (path, payload_bytes).  The delta manifest records the codec
+    and mode so ``apply_delta`` is self-describing.
+    """
+    codec_name, compress = get_compressor(codec, level)
+    blobs: dict[str, bytes] = {}
+    meta = {"base_step": base_step, "step": step, "timestamp": timestamp,
+            "mode": mode, "codec": codec_name, "scheme": "sub+xor",
+            "extra": extra or {}}
+    base_leaves = dict(tree_flatten_with_names(base))
+    for name, leaf in tree_flatten_with_names(state_np):
+        b = base_leaves[name]
+        key = name.replace("/", "::")
+        if mode == "lossless":
+            if np.issubdtype(leaf.dtype, np.floating):
+                delta = leaf.astype(np.float32) - b.astype(np.float32)
+                pred = (b.astype(np.float32) + delta).astype(leaf.dtype)
+                resid = np.frombuffer(leaf.tobytes(), np.uint8) \
+                    ^ np.frombuffer(pred.tobytes(), np.uint8)
+                blobs[key] = compress(delta.tobytes())
+                blobs[key + "::r"] = compress(resid.tobytes())
+            else:
+                xored = np.frombuffer(leaf.tobytes(), np.uint8) \
+                    ^ np.frombuffer(b.tobytes(), np.uint8)
+                blobs[key] = compress(xored.tobytes())
+            continue
+        # int8 group-quantized delta (host-side oracle of kernels/ckpt_delta)
+        from repro.kernels.ckpt_delta.ref import encode_ref
+        delta = leaf.astype(np.float32) - b.astype(np.float32)
+        q, scales = encode_ref(delta.reshape(-1))
+        blobs[name.replace("/", "::") + "::q"] = compress(q.tobytes())
+        blobs[name.replace("/", "::") + "::s"] = compress(scales.tobytes())
+    path = delta_dir(directory, step)
+    tmp = fresh_tmp_dir(path)
+    nbytes = 0
+    for k, blob in blobs.items():
+        with open(os.path.join(tmp, k.replace("::", "@") + ".bin"), "wb") as f:
+            f.write(blob)
+        nbytes += len(blob)
+    write_json_atomic(os.path.join(tmp, "delta_manifest.json"), meta)
+    publish_dir_atomic(tmp, path)
+    return path, nbytes
+
+
+def read_delta_manifest(directory: str, step: int) -> Optional[dict]:
+    mpath = os.path.join(delta_dir(directory, step), "delta_manifest.json")
+    if not os.path.exists(mpath):
+        return None
+    try:
+        with open(mpath) as f:
+            return json.load(f)
+    except (json.JSONDecodeError, OSError):
+        return None
+
+
+def newest_delta_step(directory: str) -> Optional[int]:
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("delta_") and not name.endswith(".tmp"):
+            step = int(name.split("_")[1])
+            if read_delta_manifest(directory, step) is not None:
+                steps.append(step)
+    return max(steps) if steps else None
+
+
+def apply_delta(directory: str, step: int, base_state: Any) -> Any:
+    """Apply the delta at ``step`` on top of ``base_state`` (the restored
+    base full snapshot).  Codec and mode come from the delta manifest."""
+    meta = read_delta_manifest(directory, step)
+    if meta is None:
+        raise FileNotFoundError(f"delta {step} is corrupt or missing")
+    # pre-refactor manifests carry no codec/scheme fields: they were
+    # written with the then-unconditional zstd, float deltas had no XOR
+    # residual (handled below by the missing @r.bin) and non-float leaves
+    # stored raw bytes rather than an XOR vs the base
+    decompress = get_decompressor(meta.get("codec", "zstd"))
+    mode = meta.get("mode", "lossless")
+    xor_ints = meta.get("scheme") == "sub+xor"
+    ddir = delta_dir(directory, step)
+    out = []
+    names = [n for n, _ in tree_flatten_with_names(base_state)]
+    leaves = jax.tree_util.tree_leaves(base_state)
+    for name, leaf in zip(names, leaves):
+        leaf = np.asarray(leaf)
+        key = name.replace("/", "@")
+        if mode == "lossless":
+            with open(os.path.join(ddir, key + ".bin"), "rb") as f:
+                raw = decompress(f.read())
+            if np.issubdtype(leaf.dtype, np.floating):
+                delta = np.frombuffer(raw, np.float32).reshape(leaf.shape)
+                pred = (leaf.astype(np.float32) + delta).astype(leaf.dtype)
+                rpath = os.path.join(ddir, key + "@r.bin")
+                if os.path.exists(rpath):        # bit-exactness correction
+                    with open(rpath, "rb") as f:
+                        resid = np.frombuffer(decompress(f.read()), np.uint8)
+                    exact = np.frombuffer(pred.tobytes(), np.uint8) ^ resid
+                    pred = np.frombuffer(exact.tobytes(),
+                                         leaf.dtype).reshape(leaf.shape)
+                out.append(pred)
+            elif xor_ints:
+                xored = np.frombuffer(raw, np.uint8)
+                base_b = np.frombuffer(leaf.tobytes(), np.uint8)
+                out.append(np.frombuffer((xored ^ base_b).tobytes(),
+                                         leaf.dtype).reshape(leaf.shape))
+            else:   # legacy scheme stored the raw leaf bytes
+                out.append(np.frombuffer(raw, leaf.dtype).reshape(leaf.shape))
+        else:
+            from repro.kernels.ckpt_delta.ref import decode_ref
+            with open(os.path.join(ddir, key + "@q.bin"), "rb") as f:
+                q = np.frombuffer(decompress(f.read()), np.int8)
+            with open(os.path.join(ddir, key + "@s.bin"), "rb") as f:
+                s = np.frombuffer(decompress(f.read()), np.float32)
+            delta = decode_ref(q, s)[:leaf.size].reshape(leaf.shape)
+            out.append((leaf.astype(np.float32) + delta).astype(leaf.dtype))
+    treedef = jax.tree_util.tree_structure(base_state)
+    return jax.tree_util.tree_unflatten(treedef, out)
 
 
 class IncrementalCheckpointer:
     def __init__(self, store: CheckpointStore, full_every: int = 8,
-                 mode: str = "lossless", zstd_level: int = 3):
+                 mode: str = "lossless", zstd_level: int = 3,
+                 codec: str = "auto"):
         assert mode in ("lossless", "int8")
         self.store = store
         self.full_every = full_every
         self.mode = mode
+        self.codec = codec
         self.zstd_level = zstd_level
         self._count = 0
         self._base: Optional[Any] = None
@@ -45,9 +186,6 @@ class IncrementalCheckpointer:
         self.bytes_written_delta = 0
 
     # ------------------------------------------------------------------
-    def _delta_dir(self, step: int) -> str:
-        return os.path.join(self.store.directory, f"delta_{step:010d}")
-
     def save(self, step: int, state: Any, timestamp: float = 0.0,
              extra: Optional[dict] = None) -> str:
         state_np = jax.tree_util.tree_map(np.asarray, state)
@@ -58,57 +196,17 @@ class IncrementalCheckpointer:
             self._base_step = step
             self.bytes_written_full += self.store.total_bytes(step)
         else:
-            path = self._save_delta(step, state_np, timestamp, extra or {})
+            path, nbytes = write_delta(
+                self.store.directory, step, state_np, self._base,
+                self._base_step, timestamp, extra or {}, self.mode,
+                self.codec, self.zstd_level)
+            self.bytes_written_delta += nbytes
         self._count += 1
-        return path
-
-    def _save_delta(self, step: int, state_np: Any, timestamp: float,
-                    extra: dict) -> str:
-        cctx = zstd.ZstdCompressor(level=self.zstd_level)
-        blobs = {}
-        meta = {"base_step": self._base_step, "step": step,
-                "timestamp": timestamp, "mode": self.mode, "extra": extra}
-        base_leaves = dict(tree_flatten_with_names(self._base))
-        for name, leaf in tree_flatten_with_names(state_np):
-            base = base_leaves[name]
-            if self.mode == "lossless":
-                delta = (leaf.astype(np.float32) - base.astype(np.float32)
-                         if np.issubdtype(leaf.dtype, np.floating) else leaf)
-                blobs[name.replace("/", "::")] = cctx.compress(delta.tobytes())
-                continue
-            # int8 group-quantized delta (host-side oracle of kernels/ckpt_delta)
-            from repro.kernels.ckpt_delta.ref import encode_ref
-            delta = leaf.astype(np.float32) - base.astype(np.float32)
-            q, scales = encode_ref(delta.reshape(-1))
-            blobs[name.replace("/", "::") + "::q"] = cctx.compress(q.tobytes())
-            blobs[name.replace("/", "::") + "::s"] = cctx.compress(scales.tobytes())
-        path = self._delta_dir(step)
-        tmp = path + ".tmp"
-        os.makedirs(tmp, exist_ok=True)
-        nbytes = 0
-        for k, blob in blobs.items():
-            fp = os.path.join(tmp, k.replace("::", "@") + ".bin")
-            with open(fp, "wb") as f:
-                f.write(blob)
-            nbytes += len(blob)
-        with open(os.path.join(tmp, "delta_manifest.json"), "w") as f:
-            json.dump(meta, f)
-        if os.path.exists(path):
-            import shutil
-            shutil.rmtree(path)
-        os.rename(tmp, path)
-        self.bytes_written_delta += nbytes
         return path
 
     # ------------------------------------------------------------------
     def newest_delta(self) -> Optional[int]:
-        steps = []
-        for name in os.listdir(self.store.directory):
-            if name.startswith("delta_") and not name.endswith(".tmp"):
-                if os.path.exists(os.path.join(self.store.directory, name,
-                                               "delta_manifest.json")):
-                    steps.append(int(name.split("_")[1]))
-        return max(steps) if steps else None
+        return newest_delta_step(self.store.directory)
 
     def restore(self, treedef_like: Any) -> tuple[Any, int]:
         """Restore newest state (full + newest applicable delta).
@@ -120,33 +218,12 @@ class IncrementalCheckpointer:
         dstep = self.newest_delta()
         if dstep is None or dstep <= full_step:
             return state, full_step
-        ddir = self._delta_dir(dstep)
-        with open(os.path.join(ddir, "delta_manifest.json")) as f:
-            meta = json.load(f)
-        if meta["base_step"] != full_step:
+        meta = read_delta_manifest(self.store.directory, dstep)
+        if meta is None or meta["base_step"] != full_step:
             return state, full_step   # delta belongs to an older chain
-        dctx = zstd.ZstdDecompressor()
-        out = []
-        names = [n for n, _ in tree_flatten_with_names(state)]
-        leaves = jax.tree_util.tree_leaves(state)
-        for name, leaf in zip(names, leaves):
-            leaf = np.asarray(leaf)
-            key = name.replace("/", "@")
-            if self.mode == "lossless":
-                fp = os.path.join(ddir, key + ".bin")
-                raw = dctx.decompress(open(fp, "rb").read())
-                if np.issubdtype(leaf.dtype, np.floating):
-                    delta = np.frombuffer(raw, np.float32).reshape(leaf.shape)
-                    out.append((leaf.astype(np.float32) + delta).astype(leaf.dtype))
-                else:
-                    out.append(np.frombuffer(raw, leaf.dtype).reshape(leaf.shape))
-            else:
-                from repro.kernels.ckpt_delta.ref import decode_ref
-                q = np.frombuffer(dctx.decompress(
-                    open(os.path.join(ddir, key + "@q.bin"), "rb").read()), np.int8)
-                s = np.frombuffer(dctx.decompress(
-                    open(os.path.join(ddir, key + "@s.bin"), "rb").read()), np.float32)
-                delta = decode_ref(q, s)[:leaf.size].reshape(leaf.shape)
-                out.append((leaf.astype(np.float32) + delta).astype(leaf.dtype))
-        treedef = jax.tree_util.tree_structure(state)
-        return jax.tree_util.tree_unflatten(treedef, out), dstep
+        return apply_delta(self.store.directory, dstep, state), dstep
+
+    def stats(self) -> dict:
+        return {"saves": self._count,
+                "bytes_written_full": self.bytes_written_full,
+                "bytes_written_delta": self.bytes_written_delta}

@@ -1,0 +1,306 @@
+"""Unified checkpoint plane: one ``Checkpointer`` protocol, one manager.
+
+Before this module existed the repo had four checkpointer implementations
+with incompatible interfaces (store/incremental/multilevel/async) and the
+trainer, simulator and controller each only knew the plain full-snapshot
+path.  ``CheckpointManager`` composes those pieces as *layers* behind a
+single protocol, configured by ``config.CheckpointPlan``:
+
+        trigger            CheckpointPolicy.due(t)   (the Khaos CI knob)
+           |
+        encode             full snapshot, or delta vs the last full
+           |                 (lossless, or int8 via the kernels/ckpt_delta
+           |                  Pallas codec with its ref.py host fallback)
+           |
+        compress           zstd when installed, zlib otherwise; the codec
+           |                 used is recorded in the delta manifest
+           |
+        level routing      memory  — in-RAM snapshot, every trigger
+           |               local   — node-local store, every local_every-th
+           |               remote  — durable store, every remote_every-th
+           |                 (remote only ever receives FULL snapshots;
+           |                  deltas stay with their base full's level)
+           |
+        commit             sync (blocks the step stream) or async via a
+                           BackgroundCommitter (double-buffered, at most
+                           one write in flight, skip/block busy policy)
+
+    restore(treedef, failure_kind) walks the levels that survive the
+    failure kind (multilevel.LEVEL_COVERAGE) newest-step-first, applies
+    the newest matching delta on top of its base full, and reports which
+    (level, kind) served the recovery — the controller prices exactly this
+    path when it optimizes over plans.
+
+Every save/restore returns a report carrying bytes + durations so the
+trainer's metrics, the simulator's cost model and ``bench_ckpt`` all
+account the same quantities.
+"""
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Any, Optional, Protocol, runtime_checkable
+
+import jax
+import numpy as np
+
+from repro.checkpoint.async_ckpt import BackgroundCommitter, snapshot_to_host
+from repro.checkpoint.incremental import (apply_delta, newest_delta_step,
+                                          read_delta_manifest, write_delta)
+from repro.checkpoint.multilevel import allowed_levels
+from repro.checkpoint.policy import CheckpointPolicy
+from repro.checkpoint.store import CheckpointStore
+from repro.config import CheckpointPlan
+
+
+@dataclass
+class SaveReport:
+    """What one save() actually did (all byte/duration accounting flows
+    from here into metrics, the simulator calibration and benchmarks)."""
+    step: int
+    kind: str                       # full | delta | skipped
+    levels: tuple = ()              # levels written this trigger
+    bytes_written: int = 0
+    duration_s: float = 0.0         # total write work (wall)
+    blocking_s: float = 0.0         # portion that blocked the caller
+    paths: tuple = ()
+    synchronous: bool = True
+
+    def __bool__(self) -> bool:     # truthy iff something was persisted
+        return self.kind != "skipped"
+
+
+@dataclass
+class RestoreReport:
+    state: Any
+    step: int
+    level: str                      # memory | local | remote
+    kind: str                       # memory | full | full+delta
+    duration_s: float
+    extra: dict = field(default_factory=dict)
+
+
+@runtime_checkable
+class Checkpointer(Protocol):
+    """The one interface all three planes (trainer, simulator cost
+    accounting, controller) talk to."""
+
+    def save(self, step: int, state: Any, timestamp: float = 0.0,
+             extra: Optional[dict] = None) -> SaveReport: ...
+
+    def restore(self, treedef_like: Any,
+                failure_kind: str = "task") -> RestoreReport: ...
+
+    def stats(self) -> dict: ...
+
+
+class CheckpointManager:
+    """Executes a ``CheckpointPlan``; the single checkpoint entry point."""
+
+    def __init__(self, directory: str, plan: CheckpointPlan,
+                 policy: Optional[CheckpointPolicy] = None):
+        self.directory = directory
+        self.plan = plan
+        self.policy = policy or CheckpointPolicy(plan.interval_s)
+        os.makedirs(directory, exist_ok=True)
+        self.stores: dict[str, CheckpointStore] = {}
+        for level in plan.disk_levels:
+            self.stores[level] = CheckpointStore(
+                os.path.join(directory, level),
+                num_shards=plan.num_shards, keep=plan.keep)
+        # first disk level is the primary: it anchors the delta chain
+        self.primary_level: Optional[str] = (plan.disk_levels[0]
+                                             if plan.disk_levels else None)
+        self._memory: Optional[tuple[int, Any, dict]] = None   # newest only
+        self._base: Optional[Any] = None       # last full snapshot (host)
+        self._base_step: Optional[int] = None
+        self._count = 0
+        self._committer = (None if plan.sync
+                           else BackgroundCommitter(plan.busy_policy))
+        # accounting
+        self.bytes_by_kind = {"full": 0, "delta": 0}
+        self.saves_by_level = {l: 0 for l in ("memory", "local", "remote")}
+        self.skips = 0
+        self.restores: list[tuple[int, str, str]] = []
+
+    # -- save ---------------------------------------------------------------
+    def _kind(self) -> str:
+        if self._base is None:     # no live base: the chain must restart
+            return "full"
+        return "full" if self.plan.is_full_trigger(self._count) else "delta"
+
+    def save(self, step: int, state: Any, timestamp: float = 0.0,
+             extra: Optional[dict] = None) -> SaveReport:
+        extra = extra or {}
+        if self._committer is not None and self._committer.busy:
+            if self.plan.busy_policy == "skip":
+                self.skips += 1
+                self._count += 1          # the trigger happened; cadence moves on
+                self.policy.mark(timestamp)
+                return SaveReport(step, "skipped", synchronous=False)
+            self._committer.wait()
+
+        t0 = time.monotonic()
+        kind = self._kind()
+        levels = [l for l, _ in self.plan.levels_due(self._count)
+                  if l == "memory" or l in self.stores]
+        # a real copy when the snapshot outlives this call (async write in
+        # flight, or parked at the memory level / as the delta base) —
+        # np.asarray would alias host arrays the caller may mutate
+        need_copy = (self._committer is not None or "memory" in levels
+                     or self.plan.mode == "incremental")
+        snap = (snapshot_to_host(state) if need_copy
+                else jax.tree_util.tree_map(np.asarray, state))
+        if "memory" in levels:
+            # the memory level always holds the decoded newest state — a
+            # task restart restores from RAM without touching the codec path
+            self._memory = (step, snap, dict(extra))
+            self.saves_by_level["memory"] += 1
+        if kind == "full":
+            self._base, self._base_step = snap, step
+        base, base_step = self._base, self._base_step
+        self._count += 1
+
+        disk = [l for l in levels if l in self.stores]
+        report = SaveReport(step, kind, tuple(levels), synchronous=self._committer is None)
+
+        def commit() -> None:
+            nbytes, paths = 0, []
+            for level in disk:
+                store = self.stores[level]
+                # remote only ever receives fulls; a delta whose base full
+                # is missing at a level would be unrestorable there
+                write_full = (kind == "full" or level == "remote"
+                              or store.newest() != base_step)
+                if write_full:
+                    paths.append(store.save(step, snap, timestamp,
+                                            {**extra, "kind": "full"}))
+                    nbytes += store.total_bytes(step)
+                    self.bytes_by_kind["full"] += store.total_bytes(step)
+                else:
+                    p, n = write_delta(store.directory, step, snap, base,
+                                       base_step, timestamp, extra,
+                                       self.plan.delta_encoding,
+                                       self.plan.codec)
+                    paths.append(p)
+                    nbytes += n
+                    self.bytes_by_kind["delta"] += n
+                self.saves_by_level[level] += 1
+            report.bytes_written = nbytes
+            report.paths = tuple(paths)
+            report.duration_s = time.monotonic() - t0
+
+        if self._committer is None:
+            commit()
+            report.blocking_s = report.duration_s
+        else:
+            self._committer.submit(commit)
+            report.blocking_s = time.monotonic() - t0   # snapshot only
+        self.policy.mark(timestamp)
+        return report
+
+    # -- restore ------------------------------------------------------------
+    def _disk_candidate(self, level: str) -> Optional[tuple[int, int]]:
+        """(restore_step, base_full_step) for a disk level, or None."""
+        store = self.stores.get(level)
+        if store is None:
+            return None
+        full = store.newest()
+        if full is None:
+            return None
+        dstep = newest_delta_step(store.directory)
+        if dstep is not None and dstep > full:
+            meta = read_delta_manifest(store.directory, dstep)
+            if meta is not None and meta["base_step"] == full:
+                return dstep, full
+        return full, full
+
+    def restore(self, treedef_like: Any,
+                failure_kind: str = "task") -> RestoreReport:
+        self.wait()
+        t0 = time.monotonic()
+        allowed = allowed_levels(failure_kind)
+        candidates: list[tuple[int, int, str]] = []   # (step, speed, level)
+        speed = {"memory": 2, "local": 1, "remote": 0}
+        if "memory" in allowed and self._memory is not None:
+            candidates.append((self._memory[0], speed["memory"], "memory"))
+        for level in ("local", "remote"):
+            if level in allowed:
+                cand = self._disk_candidate(level)
+                if cand is not None:
+                    candidates.append((cand[0], speed[level], level))
+        if not candidates:
+            raise FileNotFoundError(
+                f"no checkpoint survives a {failure_kind} failure")
+        step, _, level = max(candidates)
+        if level == "memory":
+            mstep, snap, extra = self._memory
+            state = jax.tree_util.tree_map(lambda x: np.array(x, copy=True),
+                                           snap)
+            report = RestoreReport(state, mstep, "memory", "memory",
+                                   time.monotonic() - t0, dict(extra))
+        else:
+            store = self.stores[level]
+            restore_step, full_step = self._disk_candidate(level)
+            state, extra = store.restore(treedef_like, full_step)
+            kind = "full"
+            if restore_step > full_step:
+                meta = read_delta_manifest(store.directory, restore_step)
+                state = apply_delta(store.directory, restore_step, state)
+                extra = meta.get("extra", extra)
+                kind = "full+delta"
+            report = RestoreReport(state, restore_step, level, kind,
+                                   time.monotonic() - t0, extra)
+        self.restores.append((report.step, report.level, report.kind))
+        return report
+
+    # -- lifecycle / failure hooks -----------------------------------------
+    def wait(self) -> None:
+        """Drain any in-flight async commit."""
+        if self._committer is not None:
+            self._committer.wait()
+
+    def on_failure(self, failure_kind: str) -> None:
+        """Apply a failure's destruction to the levels it wipes out."""
+        if failure_kind in ("node", "cluster"):
+            self._memory = None
+            self._base = None     # host RAM gone: next save must be a full
+            self._base_step = None
+        if failure_kind == "cluster" and "local" in self.stores:
+            # the sim's cluster failure loses node-local disks too; real
+            # deployments re-point the store at an empty scratch dir
+            import shutil
+            shutil.rmtree(self.stores["local"].directory, ignore_errors=True)
+            os.makedirs(self.stores["local"].directory, exist_ok=True)
+
+    def newest_step(self) -> Optional[int]:
+        try:
+            return self.restore_candidates()[0][0]
+        except IndexError:
+            return None
+
+    def restore_candidates(self) -> list[tuple[int, str]]:
+        """(step, level) restore options, best first (newest, then fastest)."""
+        out = []
+        if self._memory is not None:
+            out.append((self._memory[0], 2, "memory"))
+        for level in self.stores:
+            cand = self._disk_candidate(level)
+            if cand is not None:
+                out.append((cand[0], {"local": 1, "remote": 0}[level], level))
+        return [(s, l) for s, _, l in sorted(out, reverse=True)]
+
+    def stats(self) -> dict:
+        errors = (list(self._committer.errors)
+                  if self._committer is not None else [])
+        return {
+            "saves": self._count,
+            "skips": self.skips,
+            "bytes_by_kind": dict(self.bytes_by_kind),
+            "bytes_written": sum(self.bytes_by_kind.values()),
+            "saves_by_level": dict(self.saves_by_level),
+            "restores": list(self.restores),
+            "async_errors": errors,
+            "plan": self.plan.name,
+        }

@@ -91,3 +91,13 @@ class MultiLevelCheckpointer:
         """Node loss wipes the in-memory level (and, in the sim, local disk
         is handled by the caller's cost model)."""
         self._memory.clear()
+
+    def stats(self) -> dict:
+        return {"saves": self._count,
+                "saves_by_level": dict(self.saves_by_level)}
+
+
+def allowed_levels(failure_kind: str) -> tuple[str, ...]:
+    """Levels that survive ``failure_kind``, fastest-to-restore first."""
+    min_level = LEVEL_COVERAGE[failure_kind]
+    return _LEVELS[_LEVELS.index(min_level):]

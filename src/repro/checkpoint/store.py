@@ -26,13 +26,89 @@ import os
 import shutil
 import zlib
 from dataclasses import dataclass
-from typing import Any, Optional
+from typing import Any, Callable, Optional
 
 import numpy as np
 
 from repro.utils.trees import tree_flatten_with_names
 
 import jax
+
+
+# ---------------------------------------------------------------------------
+# Compression codecs (zstd preferred, zlib always available)
+# ---------------------------------------------------------------------------
+
+try:
+    import zstandard as _zstd
+    HAVE_ZSTD = True
+except ImportError:          # offline environments: stdlib fallback
+    _zstd = None
+    HAVE_ZSTD = False
+
+
+def resolve_codec(name: str = "auto") -> str:
+    """Map a requested codec name to an available one."""
+    if name in ("auto", "zstd"):
+        return "zstd" if HAVE_ZSTD else "zlib"
+    if name != "zlib":
+        raise ValueError(f"unknown codec {name!r}")
+    return "zlib"
+
+
+def get_compressor(name: str = "auto", level: int = 3
+                   ) -> tuple[str, Callable[[bytes], bytes]]:
+    """Returns (resolved_codec_name, compress_fn).  The resolved name must
+    be recorded in the manifest so restore can pick the matching codec."""
+    codec = resolve_codec(name)
+    if codec == "zstd":
+        cctx = _zstd.ZstdCompressor(level=level)
+        return codec, cctx.compress
+    return codec, lambda data: zlib.compress(data, level)
+
+
+def get_decompressor(name: str) -> Callable[[bytes], bytes]:
+    """Decompressor for a codec name read back from a manifest."""
+    codec = resolve_codec(name)
+    if codec == "zstd":
+        if not HAVE_ZSTD:
+            raise RuntimeError("checkpoint was written with zstd but "
+                               "zstandard is not installed")
+        return _zstd.ZstdDecompressor().decompress
+    return zlib.decompress
+
+
+# ---------------------------------------------------------------------------
+# Atomic-publish helpers (shared by the full-snapshot store, the delta
+# writer and anything else that commits a directory of files at once)
+# ---------------------------------------------------------------------------
+
+def write_json_atomic(path: str, obj: dict) -> None:
+    """Write JSON via temp-file + rename; the rename is the commit point."""
+    with open(path + ".part", "w") as f:
+        json.dump(obj, f)
+    os.rename(path + ".part", path)
+
+
+def publish_dir_atomic(tmp: str, path: str) -> None:
+    """Atomically publish a fully-written temp directory at ``path``.
+
+    If ``path`` already exists (same step re-saved after a rollback) the old
+    copy is superseded; a crash between the rmtree and the rename leaves no
+    manifest at ``path`` so older checkpoints still win.
+    """
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.rename(tmp, path)
+
+
+def fresh_tmp_dir(path: str) -> str:
+    """Create (or recreate) the scratch dir a checkpoint is staged in."""
+    tmp = path + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    return tmp
 
 
 @dataclass
@@ -64,6 +140,8 @@ class CheckpointStore:
         self.directory = directory
         self.num_shards = num_shards
         self.keep = keep
+        self.saves = 0
+        self.bytes_written = 0
         os.makedirs(directory, exist_ok=True)
 
     # -- save ---------------------------------------------------------------
@@ -73,10 +151,7 @@ class CheckpointStore:
         assign = _assign_shards(leaves, self.num_shards)
         name = f"step_{step:010d}"
         path = os.path.join(self.directory, name)
-        tmp = path + ".tmp"
-        if os.path.exists(tmp):
-            shutil.rmtree(tmp)
-        os.makedirs(tmp)
+        tmp = fresh_tmp_dir(path)
 
         checksums = {}
         for j in range(self.num_shards):
@@ -96,17 +171,15 @@ class CheckpointStore:
             "shapes": {n: list(v.shape) for n, v in leaves},
             "extra": extra or {},
         }
-        mpath = os.path.join(tmp, "manifest.json")
-        with open(mpath + ".part", "w") as f:
-            json.dump(manifest, f)
-        os.rename(mpath + ".part", mpath)      # commit within tmp
-        if os.path.exists(path):
-            # same step re-saved after a rollback: supersede the old copy
-            # (a crash here leaves no manifest -> old ckpts still win)
-            shutil.rmtree(path)
-        os.rename(tmp, path)                   # atomic publish
+        write_json_atomic(os.path.join(tmp, "manifest.json"), manifest)
+        publish_dir_atomic(tmp, path)
+        self.saves += 1
+        self.bytes_written += self.total_bytes(step)
         self._gc()
         return path
+
+    def stats(self) -> dict:
+        return {"saves": self.saves, "bytes_written": self.bytes_written}
 
     # -- introspection --------------------------------------------------------
     def _valid(self, name: str) -> Optional[dict]:

@@ -272,6 +272,76 @@ class OptimizerConfig:
 
 
 @dataclass(frozen=True)
+class CheckpointPlan:
+    """Complete description of the checkpoint *mechanism* + cadence.
+
+    This is the unit the Khaos optimizer searches over: not just the
+    interval (the paper's CI) but the whole plane configuration — full vs
+    incremental encoding, sync vs async commit, and which storage levels
+    participate.  ``checkpoint.manager.CheckpointManager`` executes a plan;
+    ``sim.costmodel`` prices one; ``core.ci_optimizer.optimize_plan``
+    searches the cross-product of CI grid x plan variants.
+    """
+    interval_s: float = 60.0          # CI — the Khaos-controlled cadence knob
+    mode: str = "full"                # full | incremental
+    full_every: int = 8               # full snapshot every N triggers (incremental)
+    delta_encoding: str = "lossless"  # lossless | int8 (Pallas ckpt_delta codec)
+    codec: str = "auto"               # auto | zstd | zlib (auto: zstd if installed)
+    levels: Sequence[str] = ("local",)   # subset of {memory, local, remote}
+    local_every: int = 1              # write local level every N triggers
+    remote_every: int = 8             # write remote level every N triggers
+    sync: bool = True                 # sync commit vs background-thread commit
+    busy_policy: str = "skip"         # async: skip | block when a write is in flight
+    num_shards: int = 4
+    keep: int = 3
+
+    def __post_init__(self) -> None:
+        assert self.mode in ("full", "incremental"), self.mode
+        assert self.delta_encoding in ("lossless", "int8"), self.delta_encoding
+        assert self.busy_policy in ("skip", "block"), self.busy_policy
+        unknown = set(self.levels) - {"memory", "local", "remote"}
+        assert not unknown, f"unknown checkpoint levels {unknown}"
+        assert self.levels, "a plan needs at least one level"
+        assert min(self.full_every, self.local_every, self.remote_every) >= 1, \
+            "cadences are every-Nth-trigger counts and must be >= 1"
+
+    def is_full_trigger(self, trigger_index: int) -> bool:
+        return self.mode == "full" or trigger_index % self.full_every == 0
+
+    def levels_due(self, trigger_index: int) -> list:
+        """The (level, kind) writes trigger number ``trigger_index``
+        performs: memory on every trigger, local at ``local_every`` (delta
+        between fulls in incremental mode), remote at ``remote_every``
+        (always a full).  The single source of routing truth — executed by
+        ``checkpoint.manager.CheckpointManager`` and priced by
+        ``sim.costmodel``."""
+        full = self.is_full_trigger(trigger_index)
+        out = []
+        for level in self.levels:
+            if level == "memory":
+                out.append(("memory", "full"))
+            elif level == "local" and trigger_index % self.local_every == 0:
+                out.append(("local", "full" if full else "delta"))
+            elif level == "remote" and trigger_index % self.remote_every == 0:
+                out.append(("remote", "full"))
+        return out
+
+    @property
+    def disk_levels(self) -> tuple[str, ...]:
+        return tuple(l for l in self.levels if l in ("local", "remote"))
+
+    @property
+    def name(self) -> str:
+        """Short human tag, e.g. 'incr8-async-mlr' — used in Decisions,
+        benchmark tables and event logs."""
+        parts = ["full" if self.mode == "full" else f"incr{self.full_every}"]
+        parts.append("sync" if self.sync else "async")
+        if tuple(self.levels) != ("local",):
+            parts.append("".join(l[0] for l in self.levels))
+        return "-".join(parts)
+
+
+@dataclass(frozen=True)
 class CheckpointConfig:
     directory: str = "/tmp/repro_ckpt"
     interval_seconds: float = 60.0      # the Khaos-controlled knob
@@ -280,6 +350,17 @@ class CheckpointConfig:
     incremental: bool = False           # delta+int8 encode vs last full ckpt
     full_every: int = 8                 # full checkpoint every N incrementals
     keep: int = 3
+
+    def to_plan(self) -> CheckpointPlan:
+        """Lower the legacy job-config block onto the unified plan."""
+        return CheckpointPlan(
+            interval_s=self.interval_seconds,
+            mode="incremental" if self.incremental else "full",
+            full_every=self.full_every,
+            delta_encoding="int8" if self.incremental else "lossless",
+            levels=tuple(self.levels),
+            sync=self.mode != "async",
+            keep=self.keep)
 
 
 @dataclass(frozen=True)

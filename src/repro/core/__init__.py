@@ -18,7 +18,9 @@ from repro.core.anomaly import AnomalyDetector
 from repro.core.steady_state import select_failure_points, SteadyState
 from repro.core.qos_models import QoSModel, RescalingTracker
 from repro.core.forecast import WorkloadForecaster
-from repro.core.ci_optimizer import optimize_ci
+from repro.core.ci_optimizer import (optimize_ci, optimize_plan,
+                                     default_plan_variants, PlanCandidate,
+                                     PlanOptimization)
 from repro.core.controller import KhaosController
 from repro.core.young_daly import young_daly_interval
 from repro.core.profiler import run_profiling, ProfilingResult
@@ -26,6 +28,7 @@ from repro.core.profiler import run_profiling, ProfilingResult
 __all__ = [
     "OnlineARIMA", "AnomalyDetector", "select_failure_points", "SteadyState",
     "QoSModel", "RescalingTracker", "WorkloadForecaster", "optimize_ci",
-    "KhaosController", "young_daly_interval",
+    "optimize_plan", "default_plan_variants", "PlanCandidate",
+    "PlanOptimization", "KhaosController", "young_daly_interval",
     "run_profiling", "ProfilingResult",
 ]

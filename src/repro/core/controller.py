@@ -3,17 +3,21 @@
 Monitors the production job for violations of the two QoS constraints
 (average end-to-end latency vs ``l_const``; predicted worst-case recovery
 time vs ``r_const``), defers reconfiguration when the TSF expects the
-workload to drop >10%, and otherwise solves Eq. 8 for a new CI.
+workload to drop >10%, and otherwise solves Eq. 8 for a new CI — or, when
+a cost model is attached (``cost``), for a new *checkpoint plan*: the
+search then spans mechanism variants (incremental encoding, async commit,
+multi-level routing) in addition to the interval, and a Decision can carry
+"switch to incr8-async at CI=42s" instead of just a number.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Optional, Protocol
+from typing import Any, Optional, Protocol
 
 import numpy as np
 
-from repro.config import KhaosConfig
-from repro.core.ci_optimizer import optimize_ci
+from repro.config import CheckpointPlan, KhaosConfig
+from repro.core.ci_optimizer import optimize_ci, optimize_plan
 from repro.core.forecast import WorkloadForecaster
 from repro.core.qos_models import QoSModel, RescalingTracker
 
@@ -35,6 +39,10 @@ class JobHandle(Protocol):
         """Controlled reconfiguration: checkpoint-now, then apply the CI."""
         ...
 
+    # Optional extensions (duck-typed; SimJobHandle implements both):
+    #   current_plan() -> CheckpointPlan
+    #   reconfigure_plan(plan: CheckpointPlan) -> None
+
 
 @dataclass
 class Decision:
@@ -44,6 +52,7 @@ class Decision:
     tr_avg: float
     predicted_recovery: float
     new_ci: Optional[float] = None
+    new_plan: Optional[CheckpointPlan] = None
 
 
 @dataclass
@@ -53,9 +62,16 @@ class KhaosController:
     m_r: QoSModel
     forecaster: WorkloadForecaster = None
     rescaler: RescalingTracker = None
+    # mechanism optimization: attach a sim.costmodel.SimCostModel to let
+    # Eq. 8 search checkpoint-plan variants, not just the CI grid
+    cost: Optional[Any] = None
+    plan_variants: Optional[list] = None
+    mtbf_s: float = 3600.0
     decisions: list = field(default_factory=list)
     _last_reconfig_t: float = -1e18
     _last_opt_t: float = -1e18
+    _last_plan_name: Optional[str] = None   # fallback when the handle has
+                                            # no current_plan()
     # error-analysis tracking (Tables II(a)/III(a))
     latency_obs: list = field(default_factory=list)    # (ci, tr, observed)
     recovery_obs: list = field(default_factory=list)
@@ -122,6 +138,10 @@ class KhaosController:
         if t - self._last_reconfig_t < self.cfg.reconfig_cooldown:
             return self._decide(t, "cooldown", lat, tr_avg, pred_rec)
 
+        if self.cost is not None:
+            return self._optimize_mechanism(job, t, lat, tr_avg, ci_now,
+                                            pred_rec)
+
         res = optimize_ci(self.m_l, self.m_r, tr_avg,
                           self.cfg.latency_constraint,
                           self.cfg.recovery_constraint,
@@ -136,8 +156,44 @@ class KhaosController:
         self._last_reconfig_t = t
         return self._decide(t, "reconfigure", lat, tr_avg, pred_rec, res.ci)
 
-    def _decide(self, t, kind, lat, tr, rec, new_ci=None) -> Decision:
-        d = Decision(t, kind, lat, tr, rec, new_ci)
+    def _optimize_mechanism(self, job: JobHandle, t, lat, tr_avg, ci_now,
+                            pred_rec) -> Decision:
+        """Eq. 8 over (CI x plan variants); actuates a plan switch when the
+        job handle supports it, otherwise falls back to the CI knob."""
+        res = optimize_plan(self.m_l, self.m_r, tr_avg,
+                            self.cfg.latency_constraint,
+                            self.cfg.recovery_constraint,
+                            self.rescaler.p,
+                            self.cfg.ci_min, self.cfg.ci_max,
+                            self.cost, variants=self.plan_variants,
+                            mtbf_s=self.mtbf_s)
+        if not res.feasible or res.plan is None:
+            return self._decide(t, "infeasible", lat, tr_avg, pred_rec)
+        current_plan = getattr(job, "current_plan", lambda: None)()
+        current_name = (current_plan.name if current_plan is not None
+                        else self._last_plan_name)
+        same_mechanism = current_name is not None \
+            and res.plan.name == current_name
+        reconfigure_plan = getattr(job, "reconfigure_plan", None)
+        if reconfigure_plan is None:
+            # handle only exposes the CI knob: actuate (and report) CI only
+            if abs(res.ci - ci_now) < 1.0:
+                return self._decide(t, "none", lat, tr_avg, pred_rec)
+            job.reconfigure(res.ci)
+            self._last_reconfig_t = t
+            return self._decide(t, "reconfigure", lat, tr_avg, pred_rec,
+                                res.ci)
+        if same_mechanism and abs(res.ci - ci_now) < 1.0:
+            return self._decide(t, "none", lat, tr_avg, pred_rec)
+        reconfigure_plan(res.plan)
+        self._last_plan_name = res.plan.name
+        self._last_reconfig_t = t
+        return self._decide(t, "reconfigure", lat, tr_avg, pred_rec, res.ci,
+                            res.plan)
+
+    def _decide(self, t, kind, lat, tr, rec, new_ci=None,
+                new_plan=None) -> Decision:
+        d = Decision(t, kind, lat, tr, rec, new_ci, new_plan)
         self.decisions.append(d)
         return d
 

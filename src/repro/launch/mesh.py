@@ -27,3 +27,17 @@ def make_test_mesh(data: int = 2, model: int = 2, pods: int = 0):
     if pods:
         return jax.make_mesh((pods, data, model), ("pod", "data", "model"))
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_abstract_mesh(shape, axis_names):
+    """Version-compatible ``AbstractMesh`` construction.
+
+    JAX >= 0.5 takes split (axis_sizes, axis_names) args; 0.4.x takes a
+    single tuple of (name, size) pairs.  Sharding-rule logic only needs
+    ``.shape``/``.axis_names``, which both constructions provide.
+    """
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(tuple(shape), tuple(axis_names))
+    except TypeError:
+        return AbstractMesh(tuple(zip(axis_names, shape)))

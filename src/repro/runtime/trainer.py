@@ -2,9 +2,11 @@
 supervises.
 
 Wires together: streaming batcher (consumer-lag semantics) -> jit'd
-train_step -> checkpoint policy/store (sync or async, atomically committed
-WITH the stream cursor for exactly-once) -> failure injection + restart
-loop -> metrics -> optional Khaos controller.
+train_step -> the unified checkpoint plane (one ``CheckpointManager``
+executing a ``CheckpointPlan``: full or delta encoding, memory/local/remote
+level routing, sync or async commit — atomically committed WITH the stream
+cursor for exactly-once) -> failure injection + failure-kind-aware restore
+-> metrics -> optional Khaos controller.
 
 Time: the trainer runs on a *virtual clock* driven by measured step wall
 times (scaled by ``time_scale``), so a 2-hour streaming experiment runs in
@@ -20,8 +22,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import AsyncCheckpointer, CheckpointPolicy, CheckpointStore
-from repro.config import ModelConfig, OptimizerConfig
+from repro.checkpoint import CheckpointManager
+from repro.config import CheckpointPlan, ModelConfig, OptimizerConfig
 from repro.data.pipeline import StreamingBatcher
 from repro.data.stream import EventStream
 from repro.ft.failures import InjectedFailure
@@ -41,6 +43,16 @@ class TrainerConfig:
     time_scale: float = 1.0        # virtual seconds per wall second of compute
     detect_s: float = 5.0          # simulated detection timeout after a crash
     restart_s: float = 2.0
+    # Full mechanism description; when set it wins over the legacy
+    # ckpt_interval_s/ckpt_async/num_shards trio above.
+    plan: Optional[CheckpointPlan] = None
+
+    def resolved_plan(self) -> CheckpointPlan:
+        if self.plan is not None:
+            return self.plan
+        return CheckpointPlan(interval_s=self.ckpt_interval_s,
+                              sync=not self.ckpt_async,
+                              num_shards=self.num_shards)
 
 
 class ResilientTrainer:
@@ -54,9 +66,8 @@ class ResilientTrainer:
         self.stream = stream
         self.batcher = StreamingBatcher(stream, tcfg.batch, tcfg.seq_len,
                                         model_cfg.vocab_size, seed=seed)
-        self.store = CheckpointStore(tcfg.ckpt_dir, num_shards=tcfg.num_shards)
-        self.async_ckpt = AsyncCheckpointer(self.store) if tcfg.ckpt_async else None
-        self.policy = CheckpointPolicy(tcfg.ckpt_interval_s)
+        self.ckpt = CheckpointManager(tcfg.ckpt_dir, tcfg.resolved_plan())
+        self.policy = self.ckpt.policy   # the Khaos CI knob lives here
         self.metrics = MetricsStore()
         self.step_fn = jax.jit(zoo.make_train_step(model_cfg, self.optimizer,
                                                    self.opt_cfg))
@@ -79,8 +90,8 @@ class ResilientTrainer:
         self._measured_step_s: Optional[float] = None
 
     # ------------------------------------------------------------------
-    def inject_failure_at(self, t: float) -> None:
-        self.failure_schedule.append(t)
+    def inject_failure_at(self, t: float, kind: str = "node") -> None:
+        self.failure_schedule.append((t, kind))
         self.failure_schedule.sort()
 
     def set_ci(self, interval_s: float) -> None:
@@ -90,27 +101,28 @@ class ResilientTrainer:
                             "ci": interval_s})
 
     # ------------------------------------------------------------------
-    def _checkpoint(self) -> None:
+    def _checkpoint(self) -> float:
+        """Run one checkpoint trigger; returns the blocking duration."""
         extra = {"pipeline": self.batcher.state_dict(), "t": self.t}
         step = int(self.state["step"])
-        if self.async_ckpt is not None:
-            self.async_ckpt.save(step, self.state, self.t, extra)
-        else:
-            self.store.save(step, self.state, self.t, extra)
-        self.policy.mark(self.t)
-        self.events.append({"t": self.t, "event": "checkpoint", "step": step})
+        report = self.ckpt.save(step, self.state, self.t, extra)
+        self.events.append({"t": self.t, "event": "checkpoint", "step": step,
+                            "kind": report.kind,
+                            "levels": list(report.levels)})
+        return report.blocking_s
 
-    def _restore(self) -> None:
-        if self.async_ckpt is not None:
-            self.async_ckpt.wait()
-        newest = self.store.newest()
-        if newest is None:
+    def _restore(self, failure_kind: str = "node") -> None:
+        self.ckpt.on_failure(failure_kind)
+        try:
+            report = self.ckpt.restore(self.state, failure_kind)
+        except FileNotFoundError:
             self.events.append({"t": self.t, "event": "restore_fresh"})
             return
-        self.state, extra = self.store.restore(self.state, newest)
-        self.state = jax.tree_util.tree_map(jnp.asarray, self.state)
-        self.batcher.restore(extra["pipeline"])
-        self.events.append({"t": self.t, "event": "restore", "step": newest})
+        self.state = jax.tree_util.tree_map(jnp.asarray, report.state)
+        self.batcher.restore(report.extra["pipeline"])
+        self.events.append({"t": self.t, "event": "restore",
+                            "step": report.step, "level": report.level,
+                            "kind": report.kind})
 
     # ------------------------------------------------------------------
     def run(self, duration_s: float,
@@ -122,25 +134,25 @@ class ResilientTrainer:
             try:
                 self._run_until_failure(t_end, on_second)
                 break
-            except InjectedFailure:
-                self.events.append({"t": self.t, "event": "failure"})
+            except InjectedFailure as failure:
+                self.events.append({"t": self.t, "event": "failure",
+                                    "kind": failure.kind})
                 # downtime: detection + restart; lag accrues on the stream
                 self.t += self.tcfg.detect_s + self.tcfg.restart_s
                 self.stream.produce_until(self.t)
-                self._restore()
+                self._restore(failure.kind)
         return self.summary()
 
     def _run_until_failure(self, t_end: float, on_second) -> None:
         while self.t < t_end:
-            if self.failure_schedule and self.t >= self.failure_schedule[0]:
-                self.failure_schedule.pop(0)
-                raise InjectedFailure(t=self.t)
+            if self.failure_schedule and self.t >= self.failure_schedule[0][0]:
+                _, kind = self.failure_schedule.pop(0)
+                raise InjectedFailure(kind=kind, t=self.t)
             self.stream.produce_until(self.t)
             if self.policy.due(self.t):
-                w0 = time.monotonic()
-                self._checkpoint()
-                if self.async_ckpt is None:
-                    self.t += (time.monotonic() - w0) * self.tcfg.time_scale
+                # only the blocking part (sync write, or async snapshot)
+                # advances the virtual job clock
+                self.t += self._checkpoint() * self.tcfg.time_scale
             batch = self.batcher.next_batch()
             if batch is None:
                 self.t += 0.05        # idle: stream underrun
@@ -164,6 +176,7 @@ class ResilientTrainer:
 
     # ------------------------------------------------------------------
     def summary(self) -> dict:
+        self.ckpt.wait()
         return {
             "final_step": int(self.state["step"]),
             "final_loss": self.losses[-1] if self.losses else float("nan"),
@@ -172,4 +185,5 @@ class ResilientTrainer:
             "failures": sum(1 for e in self.events if e["event"] == "failure"),
             "restores": sum(1 for e in self.events if e["event"] == "restore"),
             "measured_step_s": self._measured_step_s,
+            "ckpt_stats": self.ckpt.stats(),
         }

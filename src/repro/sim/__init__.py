@@ -1,5 +1,5 @@
-from repro.sim.costmodel import SimCostModel, costmodel_from_arch
+from repro.sim.costmodel import SimCostModel, costmodel_from_arch, levels_due
 from repro.sim.simulator import StreamSimulator, SimDeployment, SimJobHandle
 
-__all__ = ["SimCostModel", "costmodel_from_arch", "StreamSimulator",
-           "SimDeployment", "SimJobHandle"]
+__all__ = ["SimCostModel", "costmodel_from_arch", "levels_due",
+           "StreamSimulator", "SimDeployment", "SimJobHandle"]

@@ -6,35 +6,150 @@ Two calibration sources:
     from the TrainState size and step capacity from the dry-run roofline
     record (bound_step_s), so the same simulator answers "what CI should a
     grok-1 training job on 2 pods use?".
+
+The model prices the whole checkpoint *plane*, not just one write: per-kind
+durations (full snapshot vs compressed delta — calibrate the fractions with
+``benchmarks/bench_ckpt.py``), per-level write/restore factors (in-RAM
+snapshot vs node-local disk vs durable remote store) and the async commit
+tax.  ``write_duration``/``restore_duration``/``plan_*`` are the single
+source the simulator, the plan optimizer and the controller all price a
+``CheckpointPlan`` with; ``ckpt_duration_s`` remains the full-sync-local
+reference point so existing calibrations keep their meaning.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, replace
+from dataclasses import dataclass
 from typing import Optional
+
+from repro.config import CheckpointPlan
+
+
+def levels_due(plan: CheckpointPlan, trigger_index: int
+               ) -> list[tuple[str, str]]:
+    """Which (level, kind) writes trigger number ``trigger_index`` performs
+    — the routing itself lives on the plan (``CheckpointPlan.levels_due``)
+    so the manager executes and this model prices the SAME schedule.  The
+    model idealizes away runtime self-healing (a delta upgraded to a full
+    after an async skip or a post-failure base reset)."""
+    return plan.levels_due(trigger_index)
 
 
 @dataclass(frozen=True)
 class SimCostModel:
     capacity_eps: float = 3000.0      # events/s the job sustains at steady state
     base_latency_s: float = 0.45      # floor end-to-end latency
-    ckpt_duration_s: float = 2.5      # sync write duration (bytes / bw)
+    ckpt_duration_s: float = 2.5      # full sync local write duration (bytes / bw)
     ckpt_sync_penalty: float = 1.0    # fraction of capacity lost while writing (sync)
     async_mode: bool = False
     async_overhead: float = 0.12      # capacity fraction lost while async write in flight
     detect_s: float = 50.0            # failure detection timeout (Flink default)
     restart_s: float = 30.0           # scheduler/restart/init time
-    restore_s: float = 10.0           # state restore time
+    restore_s: float = 10.0           # full local state restore time
     reconfig_restart_s: float = 30.0  # controlled restart (savepoint -> restart)
+    # -- checkpoint-plane structure (full vs delta, per-level costs) --------
+    delta_fraction: float = 0.15      # lossless delta bytes / full bytes
+    delta_int8_fraction: float = 0.05 # int8 group-quantized delta fraction
+    memory_write_factor: float = 0.02 # RAM snapshot vs local disk write
+    remote_write_factor: float = 4.0  # durable remote store vs local disk
+    memory_restore_factor: float = 0.05
+    remote_restore_factor: float = 4.0
+    delta_apply_factor: float = 0.25  # delta decode+apply, fraction of restore_s
 
-    def effective_capacity(self, checkpointing: bool) -> float:
+    # -- legacy single-knob interface ---------------------------------------
+    def effective_capacity(self, checkpointing: bool,
+                           sync: Optional[bool] = None) -> float:
         if not checkpointing:
             return self.capacity_eps
-        if self.async_mode:
+        if sync is None:
+            sync = not self.async_mode
+        if not sync:
             return self.capacity_eps * (1.0 - self.async_overhead)
         return self.capacity_eps * (1.0 - self.ckpt_sync_penalty)
 
     def downtime_s(self) -> float:
         return self.detect_s + self.restart_s + self.restore_s
+
+    # -- per-kind / per-level pricing ---------------------------------------
+    def write_duration(self, kind: str = "full", level: str = "local",
+                       encoding: str = "lossless") -> float:
+        """Seconds one write of ``kind`` takes at ``level``."""
+        d = self.ckpt_duration_s * {"memory": self.memory_write_factor,
+                                    "local": 1.0,
+                                    "remote": self.remote_write_factor}[level]
+        if kind == "delta":
+            d *= (self.delta_int8_fraction if encoding == "int8"
+                  else self.delta_fraction)
+        return d
+
+    def restore_duration(self, level: str = "local",
+                         with_delta: bool = False) -> float:
+        d = self.restore_s * {"memory": self.memory_restore_factor,
+                              "local": 1.0,
+                              "remote": self.remote_restore_factor}[level]
+        if with_delta:
+            d += self.restore_s * self.delta_apply_factor
+        return d
+
+    # -- plan pricing --------------------------------------------------------
+    def trigger_write_duration(self, plan: CheckpointPlan,
+                               trigger_index: int) -> float:
+        """Total write seconds for trigger number ``trigger_index``."""
+        return sum(self.write_duration(kind, level, plan.delta_encoding)
+                   for level, kind in levels_due(plan, trigger_index))
+
+    def avg_write_duration(self, plan: CheckpointPlan) -> float:
+        """Steady-state average write seconds per checkpoint trigger."""
+        import math
+        period = max(1, math.lcm(max(plan.full_every, 1),
+                                 max(plan.local_every, 1),
+                                 max(plan.remote_every, 1)))
+        return sum(self.trigger_write_duration(plan, i)
+                   for i in range(period)) / period
+
+    def plan_overhead_fraction(self, plan: CheckpointPlan,
+                               ci_s: Optional[float] = None) -> float:
+        """Steady-state fraction of capacity spent on checkpointing: the
+        write duty cycle scaled by the sync pause (or the async tax over
+        the write window)."""
+        ci = ci_s if ci_s is not None else plan.interval_s
+        duty = self.avg_write_duration(plan) / max(ci, 1e-9)
+        tax = self.ckpt_sync_penalty if plan.sync else self.async_overhead
+        return min(1.0, duty * tax)
+
+    def surviving_levels(self, plan: CheckpointPlan,
+                         failure_kind: str) -> tuple[str, ...]:
+        from repro.checkpoint.multilevel import allowed_levels
+        return tuple(l for l in allowed_levels(failure_kind)
+                     if l in plan.levels)
+
+    def restore_level(self, plan: CheckpointPlan,
+                      failure_kind: str) -> Optional[str]:
+        """The fastest level that survives ``failure_kind`` under the plan
+        (restore walks newest-first, and faster levels are written at least
+        as often as slower ones)."""
+        surviving = self.surviving_levels(plan, failure_kind)
+        return surviving[0] if surviving else None
+
+    def plan_downtime_s(self, plan: CheckpointPlan, failure_kind: str = "node"
+                        ) -> float:
+        level = self.restore_level(plan, failure_kind)
+        if level is None:
+            # nothing survives: model a cold restart at the worst price
+            return self.detect_s + self.restart_s + self.restore_duration("remote")
+        with_delta = plan.mode == "incremental" and level != "memory"
+        return (self.detect_s + self.restart_s
+                + self.restore_duration(level, with_delta))
+
+    def plan_lost_work_multiplier(self, plan: CheckpointPlan,
+                                  failure_kind: str = "node") -> float:
+        """Lost work after a failure, as a multiple of the base CI: the
+        cadence of the fastest *surviving* level (a cluster failure falls
+        back to the remote level's every-Nth-trigger fulls)."""
+        level = self.restore_level(plan, failure_kind)
+        if level is None:
+            return float("inf")
+        return {"memory": 1.0, "local": float(plan.local_every),
+                "remote": float(plan.remote_every)}[level]
 
 
 def costmodel_from_arch(param_count: int, bound_step_s: float,

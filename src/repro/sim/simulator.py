@@ -10,23 +10,34 @@ Models exactly the dynamics the paper measures:
     at the latest offset again (lag back to steady state);
   * controlled reconfiguration (savepoint + restart, no offset rollback).
 
+The checkpoint plane is a full ``CheckpointPlan``: each trigger writes the
+levels due at that trigger (memory/local/remote, full or delta per the
+plan's cadences — the same routing ``CheckpointManager`` executes) with
+per-kind durations from the cost model, offsets are tracked per level, and
+a failure rolls back to the newest offset on a level that *survives its
+kind* — so an incremental or multi-level plan prices differently from the
+full-sync baseline, which is exactly what the plan optimizer searches over.
+
 The same engine backs Phase-2 profiling deployments (``SimDeployment``),
 the paper's static-CI baselines and the Khaos-controlled runs (via
 ``SimJobHandle`` which implements core.controller.JobHandle).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Callable, Optional
 
 import numpy as np
 
 from repro.checkpoint.policy import CheckpointPolicy
+from repro.config import CheckpointPlan
 from repro.core.anomaly import AnomalyDetector
 from repro.data.stream import RateSchedule, WorkloadRecording
 from repro.ft.failures import FailureInjector
 from repro.metrics import MetricsStore
-from repro.sim.costmodel import SimCostModel
+from repro.sim.costmodel import SimCostModel, levels_due
+
+_LEVEL_SPEED = {"memory": 2, "local": 1, "remote": 0}
 
 
 @dataclass
@@ -40,11 +51,15 @@ class StreamSimulator:
                  recording: Optional[WorkloadRecording] = None,
                  schedule: Optional[RateSchedule] = None,
                  t0: float = 0.0, seed: int = 0,
-                 flink_semantics: bool = True):
+                 flink_semantics: bool = True,
+                 plan: Optional[CheckpointPlan] = None):
         assert recording is not None or schedule is not None
         self.cost = cost
         self.recording = recording
         self.schedule = schedule
+        # the mechanism half of the plan; ci_s remains the cadence knob
+        self.plan = replace(plan or CheckpointPlan(sync=not cost.async_mode),
+                            interval_s=ci_s)
         self.policy = CheckpointPolicy(ci_s)
         self.policy.reset(t0)
         self.flink_semantics = flink_semantics
@@ -53,11 +68,14 @@ class StreamSimulator:
         self.lag = 0.0
         self.produced = 0.0
         self.consumed = 0.0
-        # checkpoint machinery
-        self.ckpt_in_progress: Optional[tuple[float, float]] = None  # (end_t, offset)
+        # checkpoint machinery: per-level completed offsets + one in-flight
+        # composite write (end_t, offset, levels written this trigger)
+        self.ckpt_in_progress: Optional[tuple[float, float, tuple]] = None
+        self.offset_by_level: dict[str, float] = {l: 0.0 for l in self.plan.levels}
         self.last_ckpt_offset = 0.0
         self.last_ckpt_completed_t = t0
         self.ckpt_count = 0
+        self.save_count = 0            # trigger index (drives level cadences)
         # failure machinery
         self.down_until: Optional[float] = None
         self.pending_restore_offset: Optional[float] = None
@@ -79,13 +97,26 @@ class StreamSimulator:
     def set_ci(self, ci_s: float) -> None:
         """Hot CI change (TPU semantics) or controlled restart (Flink)."""
         self.policy.set_interval(ci_s, self.t)
+        self.plan = replace(self.plan, interval_s=ci_s)
         if self.flink_semantics:
             # savepoint immediately, restart; no offset rollback
             self.ckpt_in_progress = None
             self.last_ckpt_offset = self.consumed
+            self.offset_by_level = {l: self.consumed for l in self.plan.levels}
             self.last_ckpt_completed_t = self.t
             self.down_until = self.t + self.cost.reconfig_restart_s
             self.pending_restore_offset = self.consumed  # savepoint: nothing lost
+
+    def set_plan(self, plan: CheckpointPlan) -> None:
+        """Controlled mechanism switch (savepoint + restart under Flink
+        semantics): the Khaos actuation when the optimizer changes the
+        checkpoint *mode*, not just the interval."""
+        old_offsets = self.offset_by_level
+        self.ckpt_in_progress = None   # in-flight write dies with the switch
+        self.plan = plan
+        self.offset_by_level = {l: old_offsets.get(l, 0.0) for l in plan.levels}
+        self.save_count = 0
+        self.set_ci(plan.interval_s)
 
     # ------------------------------------------------------------------
     def tick(self) -> dict:
@@ -116,23 +147,33 @@ class StreamSimulator:
             processed = 0.0
         else:
             checkpointing = False
-            # checkpoint completion
+            # checkpoint completion: commit the offset at every level the
+            # trigger wrote
             if self.ckpt_in_progress is not None:
-                end_t, offset = self.ckpt_in_progress
+                end_t, offset, levels = self.ckpt_in_progress
                 if t >= end_t:
-                    self.last_ckpt_offset = offset
+                    for level in levels:
+                        self.offset_by_level[level] = offset
+                    self.last_ckpt_offset = max(self.last_ckpt_offset, offset)
                     self.last_ckpt_completed_t = t
                     self.ckpt_in_progress = None
                     self.ckpt_count += 1
                 else:
                     checkpointing = True
-            # checkpoint start
+            # checkpoint start: the levels due at this trigger index define
+            # the composite write's duration (full vs delta, per level)
             if self.ckpt_in_progress is None and self.policy.due(t):
                 self.policy.mark(t)
+                due = levels_due(self.plan, self.save_count)
+                duration = max(cost.trigger_write_duration(self.plan,
+                                                           self.save_count),
+                               1e-3)
+                self.save_count += 1
                 # barrier semantics: snapshot the offset at start
-                self.ckpt_in_progress = (t + cost.ckpt_duration_s, self.consumed)
+                self.ckpt_in_progress = (t + duration, self.consumed,
+                                         tuple(l for l, _ in due))
                 checkpointing = True
-            mu = cost.effective_capacity(checkpointing)
+            mu = cost.effective_capacity(checkpointing, sync=self.plan.sync)
             processed = min(self.lag + lam, mu)
             self.lag = max(0.0, self.lag + lam - processed)
             self.consumed += processed
@@ -163,10 +204,31 @@ class StreamSimulator:
         if self.down_until is not None:
             return   # already down
         self.ckpt_in_progress = None   # in-flight checkpoint dies with the job
-        self.down_until = ev.t + self.cost.downtime_s()
-        self.pending_restore_offset = self.last_ckpt_offset
+        # roll back to the newest offset on a level that survives this
+        # failure kind (ties: fastest level restores)
+        surviving = self.cost.surviving_levels(self.plan, ev.kind)
+        candidates = [(self.offset_by_level[l], _LEVEL_SPEED[l], l)
+                      for l in surviving]
+        if candidates:
+            offset, _, level = max(candidates)
+            with_delta = self.plan.mode == "incremental" and level != "memory"
+            restore_s = self.cost.restore_duration(level, with_delta)
+        else:
+            # nothing survives: cold restart, reprocess everything
+            offset, level = 0.0, None
+            restore_s = self.cost.restore_duration("remote")
+        # the failure destroys the levels it covers
+        for wiped in ("memory",) if ev.kind == "node" else \
+                     ("memory", "local") if ev.kind == "cluster" else ():
+            if wiped in self.offset_by_level:
+                self.offset_by_level[wiped] = 0.0
+        self.down_until = ev.t + self.cost.detect_s + self.cost.restart_s \
+            + restore_s
+        self.pending_restore_offset = offset
         self._active_failure = {"t_start": ev.t, "kind": ev.kind,
-                                "ci": self.policy.interval_s}
+                                "ci": self.policy.interval_s,
+                                "restore_level": level,
+                                "plan": self.plan.name}
 
     def run_until(self, t_end: float,
                   on_tick: Optional[Callable[[dict], None]] = None) -> None:
@@ -260,12 +322,16 @@ class SimJobHandle:
     def __init__(self, sim: StreamSimulator):
         self.sim = sim
         self.reconfigurations: list[tuple[float, float]] = []
+        self.plan_changes: list[tuple[float, str]] = []
 
     def now(self) -> float:
         return self.sim.t
 
     def current_ci(self) -> float:
         return self.sim.policy.interval_s
+
+    def current_plan(self) -> CheckpointPlan:
+        return self.sim.plan
 
     def avg_latency(self, window_s: float) -> float:
         return self.sim.metrics.series("latency").mean_over(
@@ -281,3 +347,9 @@ class SimJobHandle:
     def reconfigure(self, new_ci: float) -> None:
         self.reconfigurations.append((self.sim.t, new_ci))
         self.sim.set_ci(new_ci)
+
+    def reconfigure_plan(self, plan: CheckpointPlan) -> None:
+        """Mechanism switch: one controlled restart applies mode + CI."""
+        self.reconfigurations.append((self.sim.t, plan.interval_s))
+        self.plan_changes.append((self.sim.t, plan.name))
+        self.sim.set_plan(plan)

@@ -3,7 +3,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # offline env: fixed-seed fallback below
+    HAVE_HYPOTHESIS = False
 
 from repro.kernels.ckpt_delta.ops import delta_decode, delta_encode
 from repro.kernels.ckpt_delta.ref import GROUP, decode_ref, encode_ref
@@ -114,9 +119,7 @@ def test_ckpt_delta_kernel_vs_ref(n):
     np.testing.assert_allclose(np.asarray(d), dr, atol=1e-6)
 
 
-@settings(max_examples=25, deadline=None)
-@given(n=st.integers(8, 5000), scale=st.floats(1e-4, 1e3), seed=st.integers(0, 2**16))
-def test_ckpt_delta_roundtrip_error_bound(n, scale, seed):
+def _check_ckpt_delta_roundtrip_error_bound(n, scale, seed):
     """Property: |delta - decode(encode(delta))| <= group_scale/2 elementwise."""
     rng = np.random.default_rng(seed)
     delta = (rng.standard_normal(n) * scale).astype(np.float32)
@@ -124,3 +127,17 @@ def test_ckpt_delta_roundtrip_error_bound(n, scale, seed):
     rec = decode_ref(q, s)[:n]
     group_scales = np.repeat(s, GROUP)[:n]
     assert np.all(np.abs(delta - rec) <= group_scales / 2 + 1e-9)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(n=st.integers(8, 5000), scale=st.floats(1e-4, 1e3),
+           seed=st.integers(0, 2**16))
+    def test_ckpt_delta_roundtrip_error_bound(n, scale, seed):
+        _check_ckpt_delta_roundtrip_error_bound(n, scale, seed)
+else:
+    @pytest.mark.parametrize("n,scale,seed", [
+        (8, 1e-4, 0), (1023, 0.3, 7), (1024, 1.0, 42), (1025, 17.0, 123),
+        (4096, 1e3, 2**16), (5000, 2.5, 31337)])
+    def test_ckpt_delta_roundtrip_error_bound(n, scale, seed):
+        _check_ckpt_delta_roundtrip_error_bound(n, scale, seed)

@@ -1,16 +1,18 @@
 """Sharding levers added during §Perf: SP, moe_megatron, controller gating."""
 import numpy as np
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.config import KhaosConfig, ShardingConfig
 from repro.configs import get_config
 from repro.core import KhaosController, QoSModel
+from repro.launch.mesh import make_abstract_mesh
 from repro.sharding import ShardingRules
 
 
 def _rules(arch="yi-6b", multi=False, **scfg):
-    mesh = AbstractMesh((2, 16, 16) if multi else (16, 16),
-                        ("pod", "data", "model") if multi else ("data", "model"))
+    mesh = make_abstract_mesh(
+        (2, 16, 16) if multi else (16, 16),
+        ("pod", "data", "model") if multi else ("data", "model"))
     return ShardingRules(get_config(arch), mesh, ShardingConfig(**scfg))
 
 

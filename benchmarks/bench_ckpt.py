@@ -1,13 +1,31 @@
 """E5 (beyond-paper): checkpoint subsystem microbenchmarks on a real model
-state — sync vs async write blocking, incremental delta bytes, int8 codec
-ratio, restore time, and whole-*plan* comparisons (full vs delta vs
-multilevel: bytes written + write duration per trigger) through the
-unified ``CheckpointManager``.  These numbers calibrate the simulator's
-cost model (sim/costmodel.py); the final scenario runs the plan optimizer
-against that calibration and shows the (mode, CI) it picks vs the
-full-sync baseline."""
+state, measuring the pipelined save path stage by stage:
+
+    trigger -> chunked D2H transfer || delta encode || compress || write
+
+i.e. the ``ChunkedHostSnapshot`` first-chunk sync is the only blocking
+cost (reported as ``blocking_s`` and compared against the monolithic
+``snapshot_to_host`` deep copy it replaced), while the remaining chunks
+stream to the leaf-parallel encode/compress/write workers on the io pool.
+
+Besides the printed tables, ``main`` emits a ``BENCH_ckpt.json``
+calibration artifact (schema "bench_ckpt/1": state bytes, full write
+seconds, restore seconds, measured delta byte fractions, and the per-byte
+host encode CPU of the delta path) that
+``sim.costmodel.SimCostModel.from_calibration`` loads — closing the loop
+so the Khaos plan optimizer prices checkpoint mechanisms with measured
+numbers instead of the hand-set ``delta_fraction``/level defaults.  The
+final scenario runs the plan optimizer against that calibration and shows
+the (mode, CI) it picks vs the full-sync baseline.
+
+``smoke()`` (wired as ``benchmarks/run.py --smoke``) runs the same flow on
+a tiny state and validates the emitted artifact's schema — a
+tier-1-adjacent check that the calibration loop stays loadable.
+"""
 from __future__ import annotations
 
+import json
+import os
 import shutil
 import time
 
@@ -18,10 +36,13 @@ import numpy as np
 from repro.checkpoint import (AsyncCheckpointer, CheckpointManager,
                               CheckpointPlan, CheckpointStore,
                               IncrementalCheckpointer)
+from repro.checkpoint.async_ckpt import snapshot_to_host
 from repro.config import OptimizerConfig
 from repro.configs import get_smoke_config
 from repro.models import zoo
 from repro.optim import make_optimizer
+from repro.sim import SimCostModel
+from repro.sim.costmodel import CALIBRATION_KEYS
 from repro.utils.trees import tree_bytes
 
 
@@ -36,31 +57,49 @@ def _mk_state(scale: int = 4):
             "step": jnp.zeros((), jnp.int32)}
 
 
-def bench_checkpoint(tmpdir: str = "/tmp/repro_bench_ckpt"):
-    import shutil
+def _bump(state):
+    return jax.tree_util.tree_map(
+        lambda x: x + jnp.asarray(1e-4, x.dtype)
+        if jnp.issubdtype(x.dtype, jnp.floating) else x, state)
+
+
+def bench_checkpoint(tmpdir: str = "/tmp/repro_bench_ckpt", scale: int = 4):
+    """Single-mechanism microbenchmarks; returns (rows, measurements) where
+    measurements feed the calibration artifact."""
     shutil.rmtree(tmpdir, ignore_errors=True)
-    state = _mk_state()
+    state = _mk_state(scale)
+    jax.block_until_ready(state)   # don't bill pending init compute to the copy
     nbytes = tree_bytes(state)
     print(f"\n=== Checkpoint subsystem (state = {nbytes/2**20:.1f} MiB) ===")
     rows = []
+    meas = {"state_bytes": nbytes}
+
+    t0 = time.monotonic()
+    snapshot_to_host(state)
+    meas["snapshot_full_copy_s"] = time.monotonic() - t0
+    rows.append(("ckpt_snapshot_full_copy", meas["snapshot_full_copy_s"] * 1e6,
+                 "monolithic D2H deep copy (pre-pipeline blocking cost)"))
 
     store = CheckpointStore(tmpdir + "/sync", num_shards=4)
     t0 = time.monotonic()
     store.save(1, state)
     sync_s = time.monotonic() - t0
+    meas["full_write_s"] = sync_s
     rows.append(("ckpt_sync_save", sync_s * 1e6, f"{nbytes/sync_s/2**20:.0f} MiB/s"))
 
     ac = AsyncCheckpointer(CheckpointStore(tmpdir + "/async", num_shards=4))
     t0 = time.monotonic()
     ac.save(1, state)
-    block_s = time.monotonic() - t0     # only the snapshot blocks
+    block_s = time.monotonic() - t0     # only the chunked snapshot blocks
     ac.wait()
+    meas["async_blocking_s"] = block_s
     rows.append(("ckpt_async_block", block_s * 1e6,
                  f"{block_s/sync_s:.3f}x of sync"))
 
     t0 = time.monotonic()
     restored, _ = store.restore(state)
     restore_s = time.monotonic() - t0
+    meas["restore_s"] = restore_s
     rows.append(("ckpt_restore", restore_s * 1e6, f"{nbytes/restore_s/2**20:.0f} MiB/s"))
 
     for mode in ("lossless", "int8"):
@@ -68,25 +107,26 @@ def bench_checkpoint(tmpdir: str = "/tmp/repro_bench_ckpt"):
                                                       num_shards=2),
                                       full_every=8, mode=mode)
         inc.save(0, state)
-        bumped = jax.tree_util.tree_map(
-            lambda x: x + jnp.asarray(1e-4, x.dtype)
-            if jnp.issubdtype(x.dtype, jnp.floating) else x, state)
+        bumped = _bump(state)
         t0 = time.monotonic()
         inc.save(1, bumped)
         dt = time.monotonic() - t0
         ratio = inc.bytes_written_delta / max(inc.bytes_written_full, 1)
+        meas[f"delta_fraction_{mode}"] = ratio
         rows.append((f"ckpt_incr_{mode}", dt * 1e6,
                      f"delta/full bytes = {ratio:.4f}"))
 
     for name, us, derived in rows:
         print(f"{name},{us:.0f},{derived}")
-    return rows
+    return rows, meas
 
 
 PLANS = {
     "full-sync": CheckpointPlan(),
     "full-async": CheckpointPlan(sync=False),
     "incr8-sync": CheckpointPlan(mode="incremental", full_every=8),
+    "incr8-async": CheckpointPlan(mode="incremental", full_every=8,
+                                  sync=False, busy_policy="block"),
     "multilevel": CheckpointPlan(levels=("memory", "local", "remote"),
                                  local_every=2, remote_every=8),
     "ml+delta": CheckpointPlan(mode="incremental", full_every=8,
@@ -96,42 +136,112 @@ PLANS = {
 
 
 def bench_plans(tmpdir: str = "/tmp/repro_bench_ckpt_plans",
-                triggers: int = 16):
+                triggers: int = 16, scale: int = 4):
     """Whole-plan accounting: run ``triggers`` checkpoint triggers of a
-    drifting train state through each plan and report total bytes written
-    and mean blocking/write durations — the overhead the optimizer trades
-    against QoS."""
-    state = _mk_state()
+    drifting train state through each plan and report total bytes written,
+    mean blocking/write durations and delta-encode CPU seconds — the
+    overhead the optimizer trades against QoS.  Returns (rows, per-plan
+    stats dict for the calibration artifact)."""
+    state = _mk_state(scale)
     nbytes = tree_bytes(state)
     print(f"\n=== Checkpoint plans ({triggers} triggers, "
           f"state = {nbytes/2**20:.1f} MiB) ===")
     print(f"{'plan':12s} {'bytes_written':>14s} {'vs_full':>8s} "
-          f"{'write_ms':>9s} {'block_ms':>9s}")
+          f"{'write_ms':>9s} {'block_ms':>9s} {'encode_ms':>9s}")
     rows = []
+    plan_stats: dict[str, dict] = {}
     baseline_bytes = None
     for name, plan in PLANS.items():
         shutil.rmtree(f"{tmpdir}/{name}", ignore_errors=True)
         mgr = CheckpointManager(f"{tmpdir}/{name}", plan)
         cur = state
-        block, writes = [], []
+        block, writes, encode, deltas = [], [], [], 0
         for i in range(triggers):
-            cur = jax.tree_util.tree_map(
-                lambda x: x + jnp.asarray(1e-4, x.dtype)
-                if jnp.issubdtype(x.dtype, jnp.floating) else x, cur)
+            cur = _bump(cur)
             rep = mgr.save(i, cur, float(i))
             block.append(rep.blocking_s)
             mgr.wait()
             writes.append(rep.duration_s)
+            encode.append(rep.encode_s)
+            deltas += rep.kind == "delta"
         st = mgr.stats()
         total = st["bytes_written"]
         if baseline_bytes is None:
             baseline_bytes = total
+        plan_stats[name] = {
+            "bytes_per_trigger": total / triggers,
+            "write_s": float(np.mean(writes)),
+            "blocking_s": float(np.mean(block)),
+            "encode_cpu_s": float(np.sum(encode)),
+            "delta_triggers": deltas,
+            "bytes_by_kind": st["bytes_by_kind"],
+        }
         rows.append((name, total, total / baseline_bytes,
                      1e3 * float(np.mean(writes)),
                      1e3 * float(np.mean(block))))
         print(f"{name:12s} {total:>14d} {total/baseline_bytes:>8.3f} "
-              f"{1e3*np.mean(writes):>9.1f} {1e3*np.mean(block):>9.1f}")
-    return rows
+              f"{1e3*np.mean(writes):>9.1f} {1e3*np.mean(block):>9.1f} "
+              f"{1e3*np.sum(encode):>9.1f}")
+    return rows, plan_stats
+
+
+# ---------------------------------------------------------------------------
+# calibration artifact (BENCH_ckpt.json  <->  SimCostModel.from_calibration)
+# ---------------------------------------------------------------------------
+
+def build_calibration(meas: dict, plan_stats: dict) -> dict:
+    """Assemble the "bench_ckpt/1" artifact from the measured tables."""
+    incr = plan_stats.get("incr8-sync", {})
+    encode_per_byte = 0.0
+    if incr.get("delta_triggers"):
+        encode_per_byte = incr["encode_cpu_s"] / (
+            meas["state_bytes"] * incr["delta_triggers"])
+    return {
+        "schema": "bench_ckpt/1",
+        "state_bytes": meas["state_bytes"],
+        "full_write_s": meas["full_write_s"],
+        "restore_s": meas["restore_s"],
+        "delta_fraction": meas["delta_fraction_lossless"],
+        "delta_int8_fraction": meas["delta_fraction_int8"],
+        "delta_encode_s_per_byte": encode_per_byte,
+        "snapshot_full_copy_s": meas["snapshot_full_copy_s"],
+        "async_blocking_s": meas["async_blocking_s"],
+        "plans": plan_stats,
+    }
+
+
+def validate_calibration(cal: dict) -> None:
+    """Schema check for the artifact (the ``run.py --smoke`` gate).
+    Key/schema-version checking is delegated to the consumer
+    (``SimCostModel.from_calibration``) so the contract lives in one
+    place; the numeric and plans-table checks below are bench-side only."""
+    SimCostModel.from_calibration(cal)      # raises ValueError on mismatch
+    for k in CALIBRATION_KEYS[1:]:
+        if not isinstance(cal[k], (int, float)) or cal[k] < 0:
+            raise ValueError(f"{k} must be a non-negative number, "
+                             f"got {cal[k]!r}")
+    if cal["state_bytes"] <= 0:
+        raise ValueError("state_bytes must be positive")
+    if not isinstance(cal.get("plans"), dict) or not cal["plans"]:
+        raise ValueError("plans table missing or empty")
+    for name, st in cal["plans"].items():
+        for k in ("bytes_per_trigger", "write_s", "blocking_s",
+                  "encode_cpu_s"):
+            if k not in st:
+                raise ValueError(f"plan {name!r} missing {k}")
+
+
+def emit_calibration(path: str, meas: dict, plan_stats: dict) -> dict:
+    cal = build_calibration(meas, plan_stats)
+    validate_calibration(cal)
+    with open(path, "w") as f:
+        json.dump(cal, f, indent=2)
+    print(f"\ncalibration artifact -> {path}")
+    speedup = cal["snapshot_full_copy_s"] / max(cal["async_blocking_s"], 1e-9)
+    print(f"async blocking {cal['async_blocking_s']*1e3:.1f} ms vs "
+          f"monolithic snapshot {cal['snapshot_full_copy_s']*1e3:.1f} ms "
+          f"({speedup:.1f}x lower)")
+    return cal
 
 
 def bench_optimize_plan():
@@ -139,7 +249,6 @@ def bench_optimize_plan():
     plan optimizer must leave the full-sync baseline for a cheaper
     mechanism at equal QoS feasibility."""
     from repro.core import QoSModel, optimize_plan
-    from repro.sim import SimCostModel
 
     rng = np.random.default_rng(0)
     ci = rng.uniform(10, 120, 200)
@@ -167,12 +276,65 @@ def bench_optimize_plan():
     return res
 
 
-def main():
-    rows = bench_checkpoint()
+def bench_calibrated_optimize(cal: dict):
+    """Run the same optimizer scenario with the MEASURED cost model — the
+    end of the calibration loop.  With the host encode CPU priced, delta
+    plans only win when their encode actually beats the write they save."""
+    from repro.core import QoSModel, optimize_plan
+
+    cost = SimCostModel.from_calibration(cal, capacity_eps=4600.0,
+                                         ckpt_sync_penalty=0.6)
+    rng = np.random.default_rng(0)
+    ci = rng.uniform(10, 120, 200)
+    tr = rng.uniform(1000, 4000, 200)
+    m_l = QoSModel().fit(ci, tr, cost.base_latency_s + 40.0 / ci + tr * 1e-5)
+    m_r = QoSModel().fit(ci, tr, 80.0 + 1.2 * ci + 0.01 * tr)
+    res = optimize_plan(m_l, m_r, tr_avg=2500.0, l_const=1.0, r_const=240.0,
+                        p=1.0, ci_min=10, ci_max=120, cost=cost)
+    print("\n=== Plan optimization (calibrated cost model) ===")
+    print(f"measured: full_write={cost.ckpt_duration_s*1e3:.1f}ms "
+          f"delta_fraction={cost.delta_fraction:.4f} "
+          f"encode={cost.delta_encode_s_per_byte * cost.state_bytes*1e3:.1f}"
+          f"ms/trigger")
+    if res.plan is not None:
+        print(f"chosen: {res.plan.name} @ CI={res.ci:.1f}s "
+              f"(overhead {res.overhead:.4f})")
+    else:
+        print("no feasible plan under the measured cost model")
+    return res
+
+
+def main(out: str = "BENCH_ckpt.json"):
+    rows, meas = bench_checkpoint()
+    plan_rows, plan_stats = bench_plans()
     rows += [(n, ms, f"bytes={b} vs_full={r:.3f}")
-             for n, b, r, ms, _ in bench_plans()]
+             for n, b, r, ms, _ in plan_rows]
+    cal = emit_calibration(out, meas, plan_stats)
     bench_optimize_plan()
+    bench_calibrated_optimize(cal)
     return rows
+
+
+def smoke(tmpdir: str = "/tmp/repro_bench_ckpt_smoke") -> dict:
+    """Tiny-state end-to-end check of the calibration loop: run the plan
+    bench, emit BENCH_ckpt.json, validate its schema and load it back
+    through ``SimCostModel.from_calibration``."""
+    shutil.rmtree(tmpdir, ignore_errors=True)
+    os.makedirs(tmpdir, exist_ok=True)
+    _, meas = bench_checkpoint(tmpdir + "/micro", scale=1)
+    _, plan_stats = bench_plans(tmpdir + "/plans", triggers=6, scale=1)
+    path = os.path.join(tmpdir, "BENCH_ckpt.json")
+    cal = emit_calibration(path, meas, plan_stats)
+    with open(path) as f:
+        validate_calibration(json.load(f))
+    cost = SimCostModel.from_calibration(path, capacity_eps=3000.0)
+    assert cost.state_bytes > 0 and cost.ckpt_duration_s > 0
+    assert cost.write_duration("delta") <= cost.write_duration("full") \
+        or cost.delta_encode_s_per_byte > 0
+    print(f"smoke OK: {path} validates and loads "
+          f"(delta_fraction={cost.delta_fraction:.4f}, "
+          f"encode_s_per_byte={cost.delta_encode_s_per_byte:.3e})")
+    return cal
 
 
 if __name__ == "__main__":

@@ -3,11 +3,17 @@
   E1  IoT-Vehicles analogue  (paper Table II, Fig. 2a/2c, Fig. 3a)
   E2  YSB analogue           (paper Table III, Fig. 2b/2d, Fig. 3b)
   E4  recovery/latency vs CI (paper §III-C premise)
-  E5  checkpoint subsystem   (beyond-paper; calibrates sim cost model)
+  E5  checkpoint subsystem   (beyond-paper; emits the BENCH_ckpt.json
+                              calibration artifact the sim cost model loads)
   E6  kernel validation      (oracle timings + interpret-mode allclose)
   E7  dry-run / roofline     (reads experiments/dryrun.json)
 
-Usage: PYTHONPATH=src python -m benchmarks.run [--quick]
+Usage: PYTHONPATH=src python -m benchmarks.run [--quick | --smoke]
+
+``--smoke`` is the tier-1-adjacent CI check: it runs only the E5
+checkpoint bench on a tiny state and validates that the emitted
+BENCH_ckpt.json matches the "bench_ckpt/1" schema and loads through
+``SimCostModel.from_calibration`` — exiting non-zero on any mismatch.
 """
 from __future__ import annotations
 
@@ -20,9 +26,21 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="single repetition for E1/E2 (default: median of 3)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-state bench_ckpt + BENCH_ckpt.json schema "
+                         "validation only (tier-1-adjacent check)")
     args = ap.parse_args()
 
     t0 = time.monotonic()
+    if args.smoke:
+        from benchmarks import bench_ckpt
+        try:
+            bench_ckpt.smoke()
+        except (ValueError, AssertionError) as e:
+            print(f"SMOKE FAILED: {e}", file=sys.stderr)
+            sys.exit(1)
+        print(f"smoke done in {time.monotonic() - t0:.0f}s")
+        return
     from benchmarks import (bench_ckpt, bench_dryrun, bench_kernels,
                             bench_khaos_training, bench_recovery,
                             bench_tables)

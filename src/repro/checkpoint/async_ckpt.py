@@ -1,8 +1,10 @@
-"""Asynchronous checkpointing: the device->host snapshot is taken
-synchronously (cheap), the disk write runs on a background thread so the
-training step stream is not blocked — double-buffered: at most one write
-in flight; a new snapshot while busy either blocks ('block') or is
-dropped ('skip').
+"""Asynchronous checkpointing: the blocking part of a save shrinks to the
+chunked snapshot's first-chunk device sync (plus eager copies of any
+mutable host leaves — see ``pipeline.ChunkedHostSnapshot``); the remaining
+device->host chunks transfer in the background and the disk write runs on
+a background thread consuming them, so the training step stream is not
+blocked — double-buffered: at most one write in flight; a new snapshot
+while busy either blocks ('block') or is dropped ('skip').
 
 Crash-consistency: the underlying store only publishes a manifest after
 all shards land, so a failure mid-write leaves the previous checkpoint as
@@ -21,13 +23,16 @@ from typing import Any, Callable, Optional
 import jax
 import numpy as np
 
+from repro.checkpoint.pipeline import ChunkedHostSnapshot
 from repro.checkpoint.store import CheckpointStore
 
 
 def snapshot_to_host(state: Any) -> Any:
-    """Device -> host copy; on TPU this is the only step-blocking part.
-    np.array(copy=True): np.asarray would ALIAS host-resident arrays and
-    let later in-place mutation corrupt the in-flight snapshot."""
+    """Monolithic device -> host copy (the pre-pipeline blocking cost; kept
+    as the reference point ``bench_ckpt`` compares the chunked snapshot
+    against).  np.array(copy=True): np.asarray would ALIAS host-resident
+    arrays and let later in-place mutation corrupt the in-flight
+    snapshot."""
     return jax.tree_util.tree_map(lambda x: np.array(x, copy=True), state)
 
 
@@ -83,7 +88,9 @@ class AsyncCheckpointer:
         return self._committer.busy_policy
 
     def _snapshot(self, state: Any) -> Any:
-        return snapshot_to_host(state)
+        # chunked: mutable host leaves copy now, device chunks stream to
+        # the background write through the transfer pool
+        return ChunkedHostSnapshot(state)
 
     def save(self, step: int, state: Any, timestamp: float = 0.0,
              extra: Optional[dict] = None) -> bool:

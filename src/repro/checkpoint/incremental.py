@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import json
 import os
+import time
 from typing import Any, Optional
 
 import numpy as np
@@ -46,53 +47,100 @@ def delta_dir(directory: str, step: int) -> str:
     return os.path.join(directory, f"delta_{step:010d}")
 
 
+def _encode_leaf_blobs(key: str, leaf: np.ndarray, b: np.ndarray,
+                       mode: str, compress) -> dict[str, bytes]:
+    """blob-key -> compressed payload for one leaf (runs on an io worker)."""
+    blobs: dict[str, bytes] = {}
+    if mode == "lossless":
+        if leaf.dtype == np.float32:
+            # fused sub+XOR-residual scheme — host oracle of the
+            # kernels/ckpt_delta lossless Pallas kernel; identical bytes
+            from repro.kernels.ckpt_delta.ref import lossless_encode_ref
+            delta, resid = lossless_encode_ref(leaf, b)
+            blobs[key] = compress(delta.tobytes())
+            blobs[key + "::r"] = compress(resid.tobytes())
+        elif np.issubdtype(leaf.dtype, np.floating):
+            delta = leaf.astype(np.float32) - b.astype(np.float32)
+            pred = (b.astype(np.float32) + delta).astype(leaf.dtype)
+            resid = np.frombuffer(leaf.tobytes(), np.uint8) \
+                ^ np.frombuffer(pred.tobytes(), np.uint8)
+            blobs[key] = compress(delta.tobytes())
+            blobs[key + "::r"] = compress(resid.tobytes())
+        else:
+            xored = np.frombuffer(leaf.tobytes(), np.uint8) \
+                ^ np.frombuffer(b.tobytes(), np.uint8)
+            blobs[key] = compress(xored.tobytes())
+        return blobs
+    # int8 group-quantized delta (host-side oracle of kernels/ckpt_delta)
+    from repro.kernels.ckpt_delta.ref import encode_ref
+    delta = leaf.astype(np.float32) - b.astype(np.float32)
+    q, scales = encode_ref(delta.reshape(-1))
+    blobs[key + "::q"] = compress(q.tobytes())
+    blobs[key + "::s"] = compress(scales.tobytes())
+    return blobs
+
+
 def write_delta(directory: str, step: int, state_np: Any, base: Any,
                 base_step: int, timestamp: float = 0.0,
                 extra: Optional[dict] = None, mode: str = "lossless",
-                codec: str = "auto", level: int = 3) -> tuple[str, int]:
+                codec: str = "auto", level: int = 3
+                ) -> tuple[str, int, float]:
     """Encode + atomically publish one delta checkpoint.
 
-    Returns (path, payload_bytes).  The delta manifest records the codec
-    and mode so ``apply_delta`` is self-describing.
+    Leaves are encoded/compressed/written concurrently on the shared
+    ``pipeline.io_pool``; ``state_np`` and ``base`` may be pytrees or
+    ``pipeline.LeafSource``s (a chunked snapshot still transferring from
+    the device overlaps its D2H with the encode of already-landed leaves).
+    An unchanged leaf (raw bytes equal to the base's) is recorded as a
+    ``"zero"`` marker in the manifest instead of compressing and writing a
+    full-size all-zeros blob.
+
+    Returns (path, payload_bytes, encode_cpu_s) where ``encode_cpu_s``
+    sums per-worker CPU seconds spent encoding+compressing — the quantity
+    ``SimCostModel.delta_encode_s_per_byte`` is calibrated from.  The
+    delta manifest records the codec and mode so ``apply_delta`` is
+    self-describing.
     """
+    from repro.checkpoint.pipeline import as_leaf_source, io_pool
+
     codec_name, compress = get_compressor(codec, level)
-    blobs: dict[str, bytes] = {}
-    meta = {"base_step": base_step, "step": step, "timestamp": timestamp,
-            "mode": mode, "codec": codec_name, "scheme": "sub+xor",
-            "extra": extra or {}}
-    base_leaves = dict(tree_flatten_with_names(base))
-    for name, leaf in tree_flatten_with_names(state_np):
-        b = base_leaves[name]
-        key = name.replace("/", "::")
-        if mode == "lossless":
-            if np.issubdtype(leaf.dtype, np.floating):
-                delta = leaf.astype(np.float32) - b.astype(np.float32)
-                pred = (b.astype(np.float32) + delta).astype(leaf.dtype)
-                resid = np.frombuffer(leaf.tobytes(), np.uint8) \
-                    ^ np.frombuffer(pred.tobytes(), np.uint8)
-                blobs[key] = compress(delta.tobytes())
-                blobs[key + "::r"] = compress(resid.tobytes())
-            else:
-                xored = np.frombuffer(leaf.tobytes(), np.uint8) \
-                    ^ np.frombuffer(b.tobytes(), np.uint8)
-                blobs[key] = compress(xored.tobytes())
-            continue
-        # int8 group-quantized delta (host-side oracle of kernels/ckpt_delta)
-        from repro.kernels.ckpt_delta.ref import encode_ref
-        delta = leaf.astype(np.float32) - b.astype(np.float32)
-        q, scales = encode_ref(delta.reshape(-1))
-        blobs[name.replace("/", "::") + "::q"] = compress(q.tobytes())
-        blobs[name.replace("/", "::") + "::s"] = compress(scales.tobytes())
+    src = as_leaf_source(state_np)
+    base_src = as_leaf_source(base)
     path = delta_dir(directory, step)
     tmp = fresh_tmp_dir(path)
-    nbytes = 0
-    for k, blob in blobs.items():
-        with open(os.path.join(tmp, k.replace("::", "@") + ".bin"), "wb") as f:
-            f.write(blob)
-        nbytes += len(blob)
+
+    def encode_leaf(name: str) -> tuple[str, int, float, bool]:
+        leaf = np.asarray(src.get(name))
+        b = np.asarray(base_src.get(name))
+        key = name.replace("/", "::")
+        t0 = time.thread_time()
+        # skip-zero fast path: byte-level equality, compared through u8
+        # views (reshape keeps 0-d leaves viewable) so no copies are made
+        if leaf.dtype == b.dtype and leaf.shape == b.shape and \
+                np.array_equal(leaf.reshape(-1).view(np.uint8),
+                               b.reshape(-1).view(np.uint8)):
+            return key, 0, time.thread_time() - t0, True
+        blobs = _encode_leaf_blobs(key, leaf, b, mode, compress)
+        cpu_s = time.thread_time() - t0
+        nbytes = 0
+        for k, blob in blobs.items():
+            with open(os.path.join(tmp, k.replace("::", "@") + ".bin"),
+                      "wb") as f:
+                f.write(blob)
+            nbytes += len(blob)
+        return key, nbytes, cpu_s, False
+
+    futures = [io_pool().submit(encode_leaf, n) for n in src.names]
+    results = [f.result() for f in futures]
+    nbytes = sum(n for _, n, _, _ in results)
+    encode_cpu_s = sum(c for _, _, c, _ in results)
+    meta = {"base_step": base_step, "step": step, "timestamp": timestamp,
+            "mode": mode, "codec": codec_name, "scheme": "sub+xor",
+            "zero": [k for k, _, _, z in results if z],
+            "extra": extra or {}}
     write_json_atomic(os.path.join(tmp, "delta_manifest.json"), meta)
     publish_dir_atomic(tmp, path)
-    return path, nbytes
+    return path, nbytes, encode_cpu_s
 
 
 def read_delta_manifest(directory: str, step: int) -> Optional[dict]:
@@ -116,55 +164,75 @@ def newest_delta_step(directory: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def _decode_leaf(ddir: str, name: str, leaf: np.ndarray, mode: str,
+                 xor_ints: bool, zero: frozenset, decompress) -> np.ndarray:
+    """Read + decompress + decode one leaf (runs on an io worker)."""
+    key = name.replace("/", "@")
+    if name.replace("/", "::") in zero:     # unchanged leaf: base as-is
+        return leaf
+    if mode == "lossless":
+        with open(os.path.join(ddir, key + ".bin"), "rb") as f:
+            raw = decompress(f.read())
+        if leaf.dtype == np.float32:
+            delta = np.frombuffer(raw, np.float32)
+            rpath = os.path.join(ddir, key + "@r.bin")
+            if os.path.exists(rpath):        # bit-exactness correction
+                from repro.kernels.ckpt_delta.ref import lossless_decode_ref
+                with open(rpath, "rb") as f:
+                    resid = np.frombuffer(decompress(f.read()), np.uint32)
+                return lossless_decode_ref(leaf, delta,
+                                           resid).reshape(leaf.shape)
+            return (leaf.reshape(-1) + delta).reshape(leaf.shape)
+        if np.issubdtype(leaf.dtype, np.floating):
+            delta = np.frombuffer(raw, np.float32).reshape(leaf.shape)
+            pred = (leaf.astype(np.float32) + delta).astype(leaf.dtype)
+            rpath = os.path.join(ddir, key + "@r.bin")
+            if os.path.exists(rpath):        # bit-exactness correction
+                with open(rpath, "rb") as f:
+                    resid = np.frombuffer(decompress(f.read()), np.uint8)
+                exact = np.frombuffer(pred.tobytes(), np.uint8) ^ resid
+                pred = np.frombuffer(exact.tobytes(),
+                                     leaf.dtype).reshape(leaf.shape)
+            return pred
+        if xor_ints:
+            xored = np.frombuffer(raw, np.uint8)
+            base_b = np.frombuffer(leaf.tobytes(), np.uint8)
+            return np.frombuffer((xored ^ base_b).tobytes(),
+                                 leaf.dtype).reshape(leaf.shape)
+        # legacy scheme stored the raw leaf bytes
+        return np.frombuffer(raw, leaf.dtype).reshape(leaf.shape)
+    from repro.kernels.ckpt_delta.ref import decode_ref
+    with open(os.path.join(ddir, key + "@q.bin"), "rb") as f:
+        q = np.frombuffer(decompress(f.read()), np.int8)
+    with open(os.path.join(ddir, key + "@s.bin"), "rb") as f:
+        s = np.frombuffer(decompress(f.read()), np.float32)
+    delta = decode_ref(q, s)[:leaf.size].reshape(leaf.shape)
+    return (leaf.astype(np.float32) + delta).astype(leaf.dtype)
+
+
 def apply_delta(directory: str, step: int, base_state: Any) -> Any:
     """Apply the delta at ``step`` on top of ``base_state`` (the restored
-    base full snapshot).  Codec and mode come from the delta manifest."""
+    base full snapshot).  Codec and mode come from the delta manifest;
+    leaves decode concurrently (mirror of the pipelined write path)."""
     meta = read_delta_manifest(directory, step)
     if meta is None:
         raise FileNotFoundError(f"delta {step} is corrupt or missing")
-    # pre-refactor manifests carry no codec/scheme fields: they were
+    # pre-refactor manifests carry no codec/scheme/zero fields: they were
     # written with the then-unconditional zstd, float deltas had no XOR
     # residual (handled below by the missing @r.bin) and non-float leaves
     # stored raw bytes rather than an XOR vs the base
     decompress = get_decompressor(meta.get("codec", "zstd"))
     mode = meta.get("mode", "lossless")
     xor_ints = meta.get("scheme") == "sub+xor"
+    zero = frozenset(meta.get("zero", ()))
     ddir = delta_dir(directory, step)
-    out = []
     names = [n for n, _ in tree_flatten_with_names(base_state)]
-    leaves = jax.tree_util.tree_leaves(base_state)
-    for name, leaf in zip(names, leaves):
-        leaf = np.asarray(leaf)
-        key = name.replace("/", "@")
-        if mode == "lossless":
-            with open(os.path.join(ddir, key + ".bin"), "rb") as f:
-                raw = decompress(f.read())
-            if np.issubdtype(leaf.dtype, np.floating):
-                delta = np.frombuffer(raw, np.float32).reshape(leaf.shape)
-                pred = (leaf.astype(np.float32) + delta).astype(leaf.dtype)
-                rpath = os.path.join(ddir, key + "@r.bin")
-                if os.path.exists(rpath):        # bit-exactness correction
-                    with open(rpath, "rb") as f:
-                        resid = np.frombuffer(decompress(f.read()), np.uint8)
-                    exact = np.frombuffer(pred.tobytes(), np.uint8) ^ resid
-                    pred = np.frombuffer(exact.tobytes(),
-                                         leaf.dtype).reshape(leaf.shape)
-                out.append(pred)
-            elif xor_ints:
-                xored = np.frombuffer(raw, np.uint8)
-                base_b = np.frombuffer(leaf.tobytes(), np.uint8)
-                out.append(np.frombuffer((xored ^ base_b).tobytes(),
-                                         leaf.dtype).reshape(leaf.shape))
-            else:   # legacy scheme stored the raw leaf bytes
-                out.append(np.frombuffer(raw, leaf.dtype).reshape(leaf.shape))
-        else:
-            from repro.kernels.ckpt_delta.ref import decode_ref
-            with open(os.path.join(ddir, key + "@q.bin"), "rb") as f:
-                q = np.frombuffer(decompress(f.read()), np.int8)
-            with open(os.path.join(ddir, key + "@s.bin"), "rb") as f:
-                s = np.frombuffer(decompress(f.read()), np.float32)
-            delta = decode_ref(q, s)[:leaf.size].reshape(leaf.shape)
-            out.append((leaf.astype(np.float32) + delta).astype(leaf.dtype))
+    leaves = [np.asarray(l) for l in jax.tree_util.tree_leaves(base_state)]
+    from repro.checkpoint.pipeline import io_pool
+    futures = [io_pool().submit(_decode_leaf, ddir, name, leaf, mode,
+                                xor_ints, zero, decompress)
+               for name, leaf in zip(names, leaves)]
+    out = [f.result() for f in futures]
     treedef = jax.tree_util.tree_structure(base_state)
     return jax.tree_util.tree_unflatten(treedef, out)
 
@@ -196,7 +264,7 @@ class IncrementalCheckpointer:
             self._base_step = step
             self.bytes_written_full += self.store.total_bytes(step)
         else:
-            path, nbytes = write_delta(
+            path, nbytes, _ = write_delta(
                 self.store.directory, step, state_np, self._base,
                 self._base_step, timestamp, extra or {}, self.mode,
                 self.codec, self.zstd_level)

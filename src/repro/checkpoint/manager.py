@@ -8,9 +8,18 @@ single protocol, configured by ``config.CheckpointPlan``:
 
         trigger            CheckpointPolicy.due(t)   (the Khaos CI knob)
            |
+        snapshot           chunked D2H transfer (pipeline.ChunkedHost-
+           |               Snapshot): mutable host leaves copy eagerly,
+           |               device chunks stream on the transfer pool —
+           |               only the first chunk's device sync blocks
+           |
         encode             full snapshot, or delta vs the last full
-           |                 (lossless, or int8 via the kernels/ckpt_delta
-           |                  Pallas codec with its ref.py host fallback)
+           |                 (lossless sub+XOR-residual or int8, both with
+           |                  a kernels/ckpt_delta Pallas codec and its
+           |                  ref.py host oracle), leaf-parallel on the
+           |                  io pool, overlapped with the D2H stream;
+           |                  unchanged leaves short-circuit to a "zero"
+           |                  manifest marker
            |
         compress           zstd when installed, zlib otherwise; the codec
            |                 used is recorded in the delta manifest
@@ -23,7 +32,9 @@ single protocol, configured by ``config.CheckpointPlan``:
            |
         commit             sync (blocks the step stream) or async via a
                            BackgroundCommitter (double-buffered, at most
-                           one write in flight, skip/block busy policy)
+                           one write in flight, skip/block busy policy);
+                           shards write concurrently on the io pool either
+                           way
 
     restore(treedef, failure_kind) walks the levels that survive the
     failure kind (multilevel.LEVEL_COVERAGE) newest-step-first, applies
@@ -45,10 +56,11 @@ from typing import Any, Optional, Protocol, runtime_checkable
 import jax
 import numpy as np
 
-from repro.checkpoint.async_ckpt import BackgroundCommitter, snapshot_to_host
+from repro.checkpoint.async_ckpt import BackgroundCommitter
 from repro.checkpoint.incremental import (apply_delta, newest_delta_step,
                                           read_delta_manifest, write_delta)
 from repro.checkpoint.multilevel import allowed_levels
+from repro.checkpoint.pipeline import ChunkedHostSnapshot, PlainLeafSource
 from repro.checkpoint.policy import CheckpointPolicy
 from repro.checkpoint.store import CheckpointStore
 from repro.config import CheckpointPlan
@@ -64,6 +76,7 @@ class SaveReport:
     bytes_written: int = 0
     duration_s: float = 0.0         # total write work (wall)
     blocking_s: float = 0.0         # portion that blocked the caller
+    encode_s: float = 0.0           # delta encode+compress CPU seconds
     paths: tuple = ()
     synchronous: bool = True
 
@@ -147,14 +160,18 @@ class CheckpointManager:
                   if l == "memory" or l in self.stores]
         # a real copy when the snapshot outlives this call (async write in
         # flight, or parked at the memory level / as the delta base) —
-        # np.asarray would alias host arrays the caller may mutate
+        # aliasing host arrays the caller may mutate would corrupt it.
+        # ChunkedHostSnapshot copies only the mutable host leaves up front;
+        # immutable device chunks stream to the io workers in background,
+        # so blocking_s is the first chunk's device sync, not the full copy
         need_copy = (self._committer is not None or "memory" in levels
                      or self.plan.mode == "incremental")
-        snap = (snapshot_to_host(state) if need_copy
-                else jax.tree_util.tree_map(np.asarray, state))
+        snap = (ChunkedHostSnapshot(state, self.plan.chunk_bytes)
+                if need_copy else PlainLeafSource(state))
         if "memory" in levels:
-            # the memory level always holds the decoded newest state — a
-            # task restart restores from RAM without touching the codec path
+            # the memory level always holds the decoded newest state (as a
+            # possibly-still-transferring snapshot source) — a task restart
+            # restores from RAM without touching the codec path
             self._memory = (step, snap, dict(extra))
             self.saves_by_level["memory"] += 1
         if kind == "full":
@@ -166,7 +183,7 @@ class CheckpointManager:
         report = SaveReport(step, kind, tuple(levels), synchronous=self._committer is None)
 
         def commit() -> None:
-            nbytes, paths = 0, []
+            nbytes, paths, encode_s = 0, [], 0.0
             for level in disk:
                 store = self.stores[level]
                 # remote only ever receives fulls; a delta whose base full
@@ -176,18 +193,22 @@ class CheckpointManager:
                 if write_full:
                     paths.append(store.save(step, snap, timestamp,
                                             {**extra, "kind": "full"}))
-                    nbytes += store.total_bytes(step)
-                    self.bytes_by_kind["full"] += store.total_bytes(step)
+                    n = store.total_bytes(step)
+                    nbytes += n
+                    self.bytes_by_kind["full"] += n
                 else:
-                    p, n = write_delta(store.directory, step, snap, base,
-                                       base_step, timestamp, extra,
-                                       self.plan.delta_encoding,
-                                       self.plan.codec)
+                    p, n, enc = write_delta(store.directory, step, snap,
+                                            base, base_step, timestamp,
+                                            extra,
+                                            self.plan.delta_encoding,
+                                            self.plan.codec)
                     paths.append(p)
                     nbytes += n
+                    encode_s += enc
                     self.bytes_by_kind["delta"] += n
                 self.saves_by_level[level] += 1
             report.bytes_written = nbytes
+            report.encode_s = encode_s
             report.paths = tuple(paths)
             report.duration_s = time.monotonic() - t0
 
@@ -236,8 +257,9 @@ class CheckpointManager:
         step, _, level = max(candidates)
         if level == "memory":
             mstep, snap, extra = self._memory
+            # deep copy so the caller can't corrupt the parked snapshot
             state = jax.tree_util.tree_map(lambda x: np.array(x, copy=True),
-                                           snap)
+                                           snap.as_pytree())
             report = RestoreReport(state, mstep, "memory", "memory",
                                    time.monotonic() - t0, dict(extra))
         else:

@@ -1,0 +1,202 @@
+"""Pipelined checkpoint hot path: chunked device->host transfer feeding a
+parallel compression/write worker pool.
+
+The pre-pipeline save path was serial end-to-end: a monolithic
+``snapshot_to_host`` deep copy of the whole state blocked the step stream,
+then every leaf was encoded and compressed one after another on the commit
+thread.  This module breaks that into overlapping stages:
+
+    trigger -> chunked D2H transfer  ||  encode  ||  compress  ||  write
+
+  * ``ChunkedHostSnapshot`` partitions the state's leaves into byte-bounded
+    chunks.  Mutable host leaves (``np.ndarray``) are deep-copied eagerly —
+    the caller may mutate them in place the moment ``save()`` returns, so
+    their copy IS the blocking cost (this is the aliasing hazard the
+    pipeline must preserve; see the race test in test_checkpoint_plane).
+    Immutable ``jax.Array`` leaves only need their references grabbed: the
+    first chunk is materialized synchronously (the device sync), the rest
+    transfer on a background pool while downstream encode/compress/write
+    workers consume whatever chunks have landed.  The caveat: deferred
+    transfer relies on JAX immutability, so states updated with donated
+    buffers (``donate_argnums``) must snapshot before the donating step
+    runs — the in-repo trainer does not donate.
+
+  * ``LeafSource`` is the uniform interface the parallel writers consume:
+    leaf names/specs are known immediately (shard planning needs no bytes),
+    ``get(name)`` blocks until that leaf's bytes are host-resident.  A
+    plain pytree wraps into ``PlainLeafSource`` so every existing call
+    site keeps working.
+
+  * Two pools, deliberately: transfer tasks (D2H) run on ``transfer_pool``
+    and compression/write tasks on ``io_pool``.  IO tasks wait on transfer
+    futures, never the reverse, so sharing one pool could not deadlock —
+    but separating them keeps a slow zlib encode from starving the
+    device->host stream that feeds it.
+"""
+from __future__ import annotations
+
+import os
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.utils.trees import tree_flatten_with_names
+
+DEFAULT_CHUNK_BYTES = 4 << 20     # D2H granularity: first chunk = blocking
+
+_pool_lock = threading.Lock()
+_transfer_pool: Optional[ThreadPoolExecutor] = None
+_io_pool: Optional[ThreadPoolExecutor] = None
+
+
+def transfer_pool() -> ThreadPoolExecutor:
+    """Background device->host chunk transfers (small: D2H is one link)."""
+    global _transfer_pool
+    with _pool_lock:
+        if _transfer_pool is None:
+            _transfer_pool = ThreadPoolExecutor(
+                max_workers=2, thread_name_prefix="ckpt-d2h")
+        return _transfer_pool
+
+
+def io_pool() -> ThreadPoolExecutor:
+    """Shared encode/compress/write workers for all checkpoint stores."""
+    global _io_pool
+    with _pool_lock:
+        if _io_pool is None:
+            _io_pool = ThreadPoolExecutor(
+                max_workers=min(8, max(2, (os.cpu_count() or 2))),
+                thread_name_prefix="ckpt-io")
+        return _io_pool
+
+
+class LeafSource:
+    """Leaf-level access to a checkpoint state for the pipelined writers.
+
+    ``names``/``spec`` are available immediately so shard assignment and
+    manifests never wait on bytes; ``get(name)`` blocks until that leaf is
+    host-resident.
+    """
+
+    names: list
+    treedef: Any
+
+    def spec(self, name: str) -> tuple[tuple, np.dtype]:
+        raise NotImplementedError
+
+    def nbytes(self, name: str) -> int:
+        shape, dtype = self.spec(name)
+        return int(np.prod(shape, dtype=np.int64)) * dtype.itemsize if shape \
+            else dtype.itemsize
+
+    def get(self, name: str) -> np.ndarray:
+        raise NotImplementedError
+
+    def wait(self) -> None:
+        """Block until every leaf is host-resident."""
+
+    def as_pytree(self) -> Any:
+        self.wait()
+        return jax.tree_util.tree_unflatten(
+            self.treedef, [self.get(n) for n in self.names])
+
+
+class PlainLeafSource(LeafSource):
+    """A fully host-resident pytree (no copy — leaves may alias the
+    caller's arrays; use ``ChunkedHostSnapshot`` when the snapshot must
+    survive in-place mutation)."""
+
+    def __init__(self, state: Any):
+        named = tree_flatten_with_names(state)
+        self.treedef = jax.tree_util.tree_structure(state)
+        self.names = [n for n, _ in named]
+        self._leaves = {n: np.asarray(l) for n, l in named}
+
+    def spec(self, name: str) -> tuple[tuple, np.dtype]:
+        leaf = self._leaves[name]
+        return tuple(leaf.shape), leaf.dtype
+
+    def get(self, name: str) -> np.ndarray:
+        return self._leaves[name]
+
+
+class ChunkedHostSnapshot(LeafSource):
+    """Point-in-time host snapshot with chunked, overlapped D2H transfer.
+
+    Blocking work (done in ``__init__``): deep-copy of every mutable host
+    leaf + synchronous materialization of the first device chunk (the
+    device sync).  Everything else lands on ``transfer_pool`` and is pulled
+    by ``get``/``wait``.
+    """
+
+    def __init__(self, state: Any, chunk_bytes: int = DEFAULT_CHUNK_BYTES,
+                 defer_device: bool = True):
+        named = tree_flatten_with_names(state)
+        self.treedef = jax.tree_util.tree_structure(state)
+        self.names = [n for n, _ in named]
+        self._spec: dict[str, tuple[tuple, np.dtype]] = {}
+        self._leaves: dict[str, np.ndarray] = {}
+        self._future_of: dict[str, Future] = {}
+
+        deferred: list[tuple[str, Any]] = []
+        for name, leaf in named:
+            if defer_device and isinstance(leaf, jax.Array):
+                # immutable: a reference is as good as a copy until the
+                # transfer worker reads it
+                self._spec[name] = (tuple(leaf.shape), np.dtype(leaf.dtype))
+                deferred.append((name, leaf))
+            else:
+                # mutable host memory (or cheap scalar): copy NOW — the
+                # caller may mutate it the moment save() returns
+                arr = np.array(leaf, copy=True)
+                self._spec[name] = (tuple(arr.shape), arr.dtype)
+                self._leaves[name] = arr
+
+        # byte-bounded chunks over the deferred device leaves
+        chunks: list[list[tuple[str, Any]]] = []
+        cur, cur_bytes = [], 0
+        for name, leaf in deferred:
+            cur.append((name, leaf))
+            cur_bytes += self.nbytes(name)
+            if cur_bytes >= chunk_bytes:
+                chunks.append(cur)
+                cur, cur_bytes = [], 0
+        if cur:
+            chunks.append(cur)
+
+        if chunks:      # first chunk synchronously: the device sync point
+            self._leaves.update(self._materialize(chunks[0]))
+        pool = transfer_pool()
+        for chunk in chunks[1:]:
+            fut = pool.submit(self._materialize, chunk)
+            for name, _ in chunk:
+                self._future_of[name] = fut
+
+    @staticmethod
+    def _materialize(chunk: list) -> dict[str, np.ndarray]:
+        # np.asarray on a jax.Array is the D2H copy (on the CPU backend it
+        # may alias the immutable buffer, which is equally safe)
+        return {name: np.asarray(leaf) for name, leaf in chunk}
+
+    def spec(self, name: str) -> tuple[tuple, np.dtype]:
+        return self._spec[name]
+
+    def get(self, name: str) -> np.ndarray:
+        fut = self._future_of.get(name)
+        if fut is not None:
+            return fut.result()[name]
+        return self._leaves[name]
+
+    def wait(self) -> None:
+        for fut in self._future_of.values():
+            fut.result()
+
+
+def as_leaf_source(state: Any) -> LeafSource:
+    """Adapt ``state`` (pytree or LeafSource) for the pipelined writers."""
+    if isinstance(state, LeafSource):
+        return state
+    return PlainLeafSource(state)

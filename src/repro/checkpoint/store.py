@@ -6,9 +6,11 @@ Layout (one directory per checkpoint):
         shard_00000.npz ... shard_000HH.npz    # per-host leaf groups
         manifest.json                          # written LAST = commit marker
 
-Atomicity: shards are written first, then the manifest (with per-shard
-CRC32 checksums and the full tree spec) is written to a temp file and
-renamed into place.  A checkpoint without a valid manifest (or with a
+Atomicity: shards are written first (concurrently, on the shared
+``pipeline.io_pool`` — save accepts a still-transferring chunked snapshot
+and each shard worker blocks only on the chunks holding its own leaves),
+then the manifest (with per-shard CRC32 checksums and the full tree spec)
+is written to a temp file and renamed into place.  A checkpoint without a valid manifest (or with a
 checksum mismatch) is invisible to ``newest``/``restore`` — crash-during-
 write simply falls back to the previous checkpoint.
 
@@ -62,8 +64,9 @@ def get_compressor(name: str = "auto", level: int = 3
     be recorded in the manifest so restore can pick the matching codec."""
     codec = resolve_codec(name)
     if codec == "zstd":
-        cctx = _zstd.ZstdCompressor(level=level)
-        return codec, cctx.compress
+        # fresh context per call: the pipelined writers compress leaves
+        # concurrently on the io pool and zstd contexts are not thread-safe
+        return codec, lambda data: _zstd.ZstdCompressor(level=level).compress(data)
     return codec, lambda data: zlib.compress(data, level)
 
 
@@ -74,7 +77,7 @@ def get_decompressor(name: str) -> Callable[[bytes], bytes]:
         if not HAVE_ZSTD:
             raise RuntimeError("checkpoint was written with zstd but "
                                "zstandard is not installed")
-        return _zstd.ZstdDecompressor().decompress
+        return lambda data: _zstd.ZstdDecompressor().decompress(data)
     return zlib.decompress
 
 
@@ -123,9 +126,9 @@ class CheckpointMeta:
         return f"step_{self.step:010d}"
 
 
-def _assign_shards(leaves: list[tuple[str, np.ndarray]], num_shards: int):
+def _assign_shards(sizes_by_name: list[tuple[str, int]], num_shards: int):
     """Greedy balanced bin-packing of leaves into shards by bytes."""
-    sizes = sorted(((l.nbytes, name) for name, l in leaves), reverse=True)
+    sizes = sorted(((nb, name) for name, nb in sizes_by_name), reverse=True)
     loads = [0] * num_shards
     assign: dict[str, int] = {}
     for nbytes, name in sizes:
@@ -147,28 +150,43 @@ class CheckpointStore:
     # -- save ---------------------------------------------------------------
     def save(self, step: int, state: Any, timestamp: float = 0.0,
              extra: Optional[dict] = None) -> str:
-        leaves = [(n, np.asarray(v)) for n, v in tree_flatten_with_names(state)]
-        assign = _assign_shards(leaves, self.num_shards)
+        """Write one checkpoint.  ``state`` is a pytree or a
+        ``pipeline.LeafSource`` (e.g. a chunked snapshot still transferring
+        from the device): shards are planned from leaf specs alone, then
+        written concurrently on the io pool — each shard worker starts as
+        soon as the chunks holding its leaves have landed, overlapping D2H
+        with serialization.  The manifest is written only after every shard
+        has, so the commit-marker invariant is untouched."""
+        from repro.checkpoint.pipeline import as_leaf_source, io_pool
+
+        src = as_leaf_source(state)
+        assign = _assign_shards([(n, src.nbytes(n)) for n in src.names],
+                                self.num_shards)
         name = f"step_{step:010d}"
         path = os.path.join(self.directory, name)
         tmp = fresh_tmp_dir(path)
 
-        checksums = {}
-        for j in range(self.num_shards):
-            shard = {n.replace("/", "::"): v for (n, v) in leaves if assign[n] == j}
+        def write_shard(j: int) -> tuple[str, int]:
+            shard = {n.replace("/", "::"): np.asarray(src.get(n))
+                     for n in src.names if assign[n] == j}
             fpath = os.path.join(tmp, f"shard_{j:05d}.npz")
             np.savez(fpath, **shard)
             with open(fpath, "rb") as f:
-                checksums[f"shard_{j:05d}.npz"] = zlib.crc32(f.read())
+                return f"shard_{j:05d}.npz", zlib.crc32(f.read())
 
+        futures = [io_pool().submit(write_shard, j)
+                   for j in range(self.num_shards)]
+        checksums = dict(f.result() for f in futures)
+
+        specs = {n: src.spec(n) for n in src.names}
         manifest = {
             "step": step,
             "timestamp": timestamp,
             "num_shards": self.num_shards,
             "assign": assign,
             "checksums": checksums,
-            "dtypes": {n: str(v.dtype) for n, v in leaves},
-            "shapes": {n: list(v.shape) for n, v in leaves},
+            "dtypes": {n: str(dt) for n, (_, dt) in specs.items()},
+            "shapes": {n: list(shape) for n, (shape, _) in specs.items()},
             "extra": extra or {},
         }
         write_json_atomic(os.path.join(tmp, "manifest.json"), manifest)
@@ -223,12 +241,17 @@ class CheckpointStore:
         manifest = self._valid(name)
         if manifest is None:
             raise FileNotFoundError(f"checkpoint {name} is corrupt or missing")
-        data: dict[str, np.ndarray] = {}
-        for j in range(manifest["num_shards"]):
+        from repro.checkpoint.pipeline import io_pool
+
+        def load_shard(j: int) -> dict[str, np.ndarray]:
             fpath = os.path.join(self.directory, name, f"shard_{j:05d}.npz")
             with np.load(fpath) as z:
-                for k in z.files:
-                    data[k.replace("::", "/")] = z[k]
+                return {k.replace("::", "/"): z[k] for k in z.files}
+
+        data: dict[str, np.ndarray] = {}
+        for fut in [io_pool().submit(load_shard, j)
+                    for j in range(manifest["num_shards"])]:
+            data.update(fut.result())
         names = [n for n, _ in tree_flatten_with_names(treedef_like)]
         missing = [n for n in names if n not in data]
         if missing:

@@ -294,6 +294,8 @@ class CheckpointPlan:
     busy_policy: str = "skip"         # async: skip | block when a write is in flight
     num_shards: int = 4
     keep: int = 3
+    chunk_bytes: int = 4 << 20        # D2H transfer granularity of the pipelined
+                                      # snapshot (first chunk = the blocking sync)
 
     def __post_init__(self) -> None:
         assert self.mode in ("full", "incremental"), self.mode
@@ -304,6 +306,7 @@ class CheckpointPlan:
         assert self.levels, "a plan needs at least one level"
         assert min(self.full_every, self.local_every, self.remote_every) >= 1, \
             "cadences are every-Nth-trigger counts and must be >= 1"
+        assert self.chunk_bytes >= 1, "chunk_bytes must be positive"
 
     def is_full_trigger(self, trigger_index: int) -> bool:
         return self.mode == "full" or trigger_index % self.full_every == 0

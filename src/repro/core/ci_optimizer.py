@@ -15,6 +15,12 @@ the fitted M_L/M_R surfaces — measured under the full-sync baseline — are
 re-priced per variant with the cost model's duty-cycle and restore-path
 deltas, so a Decision can switch mode ("go incremental with full_every=8")
 when latency is the binding constraint, not only stretch the interval.
+
+The search is only as honest as the cost model it prices against: pass a
+``SimCostModel.from_calibration("BENCH_ckpt.json")`` (measured delta
+fractions AND the per-byte host encode CPU) rather than defaults, or the
+optimizer will happily pick a delta plan whose encode cost exceeds its
+write win on small states.
 """
 from __future__ import annotations
 

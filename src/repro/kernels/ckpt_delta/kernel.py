@@ -1,17 +1,29 @@
-"""Incremental-checkpoint delta codec kernel (TPU Pallas).
+"""Incremental-checkpoint delta codec kernels (TPU Pallas).
 
-Fused on-device encode: delta = new - base, per-group symmetric int8
-quantization (group = 1024 elements).  Runs as part of the async snapshot
-so only int8 payload + fp32 scales cross the device->host link — an ~3.5x
-cut of checkpoint bytes *before* host-side zstd (this is the level-1 codec
-in the multi-level scheme, and the same payload format the cross-pod
-gradient compressor uses).
+Two fused on-device encoders, both running as part of the async snapshot
+so less (or cheaper-to-compress) data crosses the device->host link:
+
+  * int8 (lossy): delta = new - base, per-group symmetric int8
+    quantization (group = 1024 elements) — an ~3.5x cut of checkpoint
+    bytes *before* host-side zstd (the level-1 codec in the multi-level
+    scheme, and the same payload format the cross-pod gradient compressor
+    uses).
+
+  * lossless sub+XOR-residual: delta = new - base (fp32) plus the XOR of
+    the true and predicted bit patterns (bitcast to uint32).  The
+    subtraction makes slowly-drifting tensors compress hard and the
+    residual makes restore BIT-exact where float rounding perturbs
+    base + delta; fusing both on device removes the float math + byte-XOR
+    the host CPU used to do per leaf (``ref.py`` is the host oracle and
+    the fallback ``checkpoint/incremental.py`` uses off-accelerator).
 
   new, base  (N,)        viewed as (N/G, G); block (bg, G)
-  q          (N,) int8   block (bg, G)
-  scale      (N/G,) f32  block (bg,)
+  q          (N,) int8   block (bg, G)          [int8 encode]
+  scale      (N/G,) f32  block (bg,)            [int8 encode]
+  delta      (N,) f32    block (bg, G)          [lossless encode]
+  resid      (N,) u32    block (bg, G)          [lossless encode]
 
-VMEM per step: 3 * bg * G fp32 (8 x 1024 -> 96 KB).
+VMEM per step: 3-4 * bg * G fp32 (8 x 1024 -> 96-128 KB).
 """
 from __future__ import annotations
 
@@ -50,9 +62,7 @@ def delta_encode_fwd(new: jax.Array, base: jax.Array, *, block_groups: int = 8,
     new, n = _pad_to_groups(new.reshape(-1))
     base, _ = _pad_to_groups(base.reshape(-1))
     ng = new.shape[0] // GROUP
-    bg = min(block_groups, ng)
-    while ng % bg != 0:
-        bg -= 1
+    bg = _grid_block(ng, block_groups)
     new2 = new.reshape(ng, GROUP)
     base2 = base.reshape(ng, GROUP)
     q, s = pl.pallas_call(
@@ -70,13 +80,83 @@ def delta_encode_fwd(new: jax.Array, base: jax.Array, *, block_groups: int = 8,
     return q.reshape(-1), s   # padded to a multiple of GROUP; decode+slice
 
 
+def _lossless_encode_kernel(new_ref, base_ref, d_ref, r_ref):
+    new = new_ref[...]
+    base = base_ref[...]
+    d = new - base
+    pred = base + d          # what decode will reconstruct, same rounding
+    d_ref[...] = d
+    r_ref[...] = (jax.lax.bitcast_convert_type(new, jnp.uint32)
+                  ^ jax.lax.bitcast_convert_type(pred, jnp.uint32))
+
+
+def _lossless_decode_kernel(base_ref, d_ref, r_ref, out_ref):
+    pred = base_ref[...] + d_ref[...]
+    bits = jax.lax.bitcast_convert_type(pred, jnp.uint32) ^ r_ref[...]
+    out_ref[...] = jax.lax.bitcast_convert_type(bits, jnp.float32)
+
+
+def _grid_block(ng: int, block_groups: int) -> int:
+    bg = min(block_groups, ng)
+    while ng % bg != 0:
+        bg -= 1
+    return bg
+
+
+def lossless_encode_fwd(new: jax.Array, base: jax.Array, *,
+                        block_groups: int = 8, interpret: bool = False):
+    """Fused lossless encode: (f32 delta, u32 XOR residual), padded to a
+    multiple of GROUP (zero padding encodes to zero delta + zero residual,
+    so the padding compresses away)."""
+    new, n = _pad_to_groups(new.reshape(-1).astype(jnp.float32))
+    base, _ = _pad_to_groups(base.reshape(-1).astype(jnp.float32))
+    ng = new.shape[0] // GROUP
+    bg = _grid_block(ng, block_groups)
+    d, r = pl.pallas_call(
+        _lossless_encode_kernel,
+        grid=(ng // bg,),
+        in_specs=[pl.BlockSpec((bg, GROUP), lambda i: (i, 0)),
+                  pl.BlockSpec((bg, GROUP), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((bg, GROUP), lambda i: (i, 0)),
+                   pl.BlockSpec((bg, GROUP), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((ng, GROUP), jnp.float32),
+                   jax.ShapeDtypeStruct((ng, GROUP), jnp.uint32)],
+        interpret=interpret,
+    )(new.reshape(ng, GROUP), base.reshape(ng, GROUP))
+    del n
+    return d.reshape(-1), r.reshape(-1)
+
+
+def lossless_decode_fwd(base: jax.Array, delta: jax.Array, resid: jax.Array,
+                        *, block_groups: int = 8,
+                        interpret: bool = False) -> jax.Array:
+    """Exact inverse of ``lossless_encode_fwd`` (returns the original f32
+    bit patterns; caller slices to the unpadded leaf size)."""
+    base, n = _pad_to_groups(base.reshape(-1).astype(jnp.float32))
+    delta, _ = _pad_to_groups(delta.reshape(-1).astype(jnp.float32))
+    resid, _ = _pad_to_groups(resid.reshape(-1).astype(jnp.uint32))
+    ng = base.shape[0] // GROUP
+    bg = _grid_block(ng, block_groups)
+    out = pl.pallas_call(
+        _lossless_decode_kernel,
+        grid=(ng // bg,),
+        in_specs=[pl.BlockSpec((bg, GROUP), lambda i: (i, 0)),
+                  pl.BlockSpec((bg, GROUP), lambda i: (i, 0)),
+                  pl.BlockSpec((bg, GROUP), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bg, GROUP), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((ng, GROUP), jnp.float32),
+        interpret=interpret,
+    )(base.reshape(ng, GROUP), delta.reshape(ng, GROUP),
+      resid.reshape(ng, GROUP))
+    del n
+    return out.reshape(-1)
+
+
 def delta_decode_fwd(q: jax.Array, scales: jax.Array, *, block_groups: int = 8,
                      interpret: bool = False) -> jax.Array:
     qp, n = _pad_to_groups(q.reshape(-1))
     ng = qp.shape[0] // GROUP
-    bg = min(block_groups, ng)
-    while ng % bg != 0:
-        bg -= 1
+    bg = _grid_block(ng, block_groups)
     d = pl.pallas_call(
         _decode_kernel,
         grid=(ng // bg,),

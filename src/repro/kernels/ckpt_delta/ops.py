@@ -5,7 +5,10 @@ from functools import partial
 
 import jax
 
-from repro.kernels.ckpt_delta.kernel import delta_decode_fwd, delta_encode_fwd
+from repro.kernels.ckpt_delta.kernel import (delta_decode_fwd,
+                                             delta_encode_fwd,
+                                             lossless_decode_fwd,
+                                             lossless_encode_fwd)
 
 
 @partial(jax.jit, static_argnames=("block_groups", "interpret"))
@@ -20,3 +23,19 @@ def delta_decode(q, scales, *, block_groups: int = 8, interpret: bool = False):
     """Inverse of delta_encode (returns fp32 delta)."""
     return delta_decode_fwd(q, scales, block_groups=block_groups,
                             interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("block_groups", "interpret"))
+def lossless_encode(new, base, *, block_groups: int = 8,
+                    interpret: bool = False):
+    """Fused lossless encode: (f32 delta, u32 XOR residual) vs base."""
+    return lossless_encode_fwd(new, base, block_groups=block_groups,
+                               interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("block_groups", "interpret"))
+def lossless_decode(base, delta, resid, *, block_groups: int = 8,
+                    interpret: bool = False):
+    """Bit-exact inverse of lossless_encode (returns the original f32)."""
+    return lossless_decode_fwd(base, delta, resid, block_groups=block_groups,
+                               interpret=interpret)

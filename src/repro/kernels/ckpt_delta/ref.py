@@ -23,3 +23,32 @@ def encode_ref(delta: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
 def decode_ref(q: np.ndarray, scales: np.ndarray) -> np.ndarray:
     q = np.asarray(q, np.int8).reshape(-1, GROUP)
     return (q.astype(np.float32) * np.asarray(scales, np.float32)[:, None]).reshape(-1)
+
+
+def lossless_encode_ref(new: np.ndarray, base: np.ndarray
+                        ) -> tuple[np.ndarray, np.ndarray]:
+    """Host oracle for the fused lossless sub+XOR-residual encode (f32).
+
+    Returns (delta f32, residual u32): delta = new - base, residual =
+    bits(new) ^ bits(base + delta) — exactly what the Pallas kernel emits,
+    and the vectorized host path ``checkpoint/incremental.py`` writes when
+    the state is already off-accelerator.  The u32 residual's little-endian
+    bytes equal the legacy per-byte u8 XOR, so on-disk blobs stay
+    compatible in both directions.
+    """
+    new = np.ascontiguousarray(new, np.float32).reshape(-1)
+    base = np.ascontiguousarray(base, np.float32).reshape(-1)
+    delta = new - base
+    pred = base + delta
+    resid = new.view(np.uint32) ^ pred.view(np.uint32)
+    return delta, resid
+
+
+def lossless_decode_ref(base: np.ndarray, delta: np.ndarray,
+                        resid: np.ndarray) -> np.ndarray:
+    """Bit-exact inverse of ``lossless_encode_ref`` (returns f32)."""
+    base = np.ascontiguousarray(base, np.float32).reshape(-1)
+    pred = base + np.ascontiguousarray(delta, np.float32).reshape(-1)
+    bits = pred.view(np.uint32) ^ np.ascontiguousarray(
+        resid, np.uint32).reshape(-1)
+    return bits.view(np.float32)

@@ -8,20 +8,37 @@ Two calibration sources:
     grok-1 training job on 2 pods use?".
 
 The model prices the whole checkpoint *plane*, not just one write: per-kind
-durations (full snapshot vs compressed delta — calibrate the fractions with
-``benchmarks/bench_ckpt.py``), per-level write/restore factors (in-RAM
-snapshot vs node-local disk vs durable remote store) and the async commit
-tax.  ``write_duration``/``restore_duration``/``plan_*`` are the single
-source the simulator, the plan optimizer and the controller all price a
+durations (full snapshot vs compressed delta), per-level write/restore
+factors (in-RAM snapshot vs node-local disk vs durable remote store), the
+async commit tax, AND the host CPU an incremental trigger burns encoding +
+compressing the delta (``delta_encode_s_per_byte * state_bytes`` — on
+small states the encode can exceed the write win, so an uncalibrated model
+over-recommends delta plans).  Instead of hand-setting those knobs, load
+them from the artifact ``benchmarks/bench_ckpt.py`` measures:
+
+    cost = SimCostModel.from_calibration("BENCH_ckpt.json",
+                                         capacity_eps=3000.0)
+
+``write_duration``/``restore_duration``/``plan_*`` are the single source
+the simulator, the plan optimizer and the controller all price a
 ``CheckpointPlan`` with; ``ckpt_duration_s`` remains the full-sync-local
 reference point so existing calibrations keep their meaning.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Optional
+import json
+import os
+from dataclasses import dataclass, fields
+from typing import Any, Optional, Union
 
 from repro.config import CheckpointPlan
+
+#: required keys of the BENCH_ckpt.json calibration artifact (schema
+#: "bench_ckpt/1", written by benchmarks/bench_ckpt.py and validated by
+#: ``benchmarks/run.py --smoke``)
+CALIBRATION_KEYS = ("schema", "state_bytes", "full_write_s", "restore_s",
+                    "delta_fraction", "delta_int8_fraction",
+                    "delta_encode_s_per_byte")
 
 
 def levels_due(plan: CheckpointPlan, trigger_index: int
@@ -54,6 +71,43 @@ class SimCostModel:
     memory_restore_factor: float = 0.05
     remote_restore_factor: float = 4.0
     delta_apply_factor: float = 0.25  # delta decode+apply, fraction of restore_s
+    # -- measured host-CPU cost of the delta encode (calibrated) ------------
+    delta_encode_s_per_byte: float = 0.0   # encode+compress CPU s per STATE byte
+    state_bytes: float = 0.0               # full state size the above scales by
+
+    # -- calibration ---------------------------------------------------------
+    @classmethod
+    def from_calibration(cls, source: Union[str, "os.PathLike[str]", dict],
+                         **overrides: Any) -> "SimCostModel":
+        """Build a cost model from ``benchmarks/bench_ckpt.py``'s
+        ``BENCH_ckpt.json`` artifact (path or already-loaded dict),
+        replacing the hand-set ``delta_fraction``/level knobs with the
+        measured ones.  ``overrides`` pass through any field the artifact
+        does not cover (``capacity_eps``, ``detect_s``, ...)."""
+        if isinstance(source, dict):
+            cal = source
+        else:
+            with open(source) as f:
+                cal = json.load(f)
+        missing = [k for k in CALIBRATION_KEYS if k not in cal]
+        if missing:
+            raise ValueError(f"calibration artifact missing keys {missing}")
+        if cal["schema"] != "bench_ckpt/1":
+            raise ValueError(f"unknown calibration schema {cal['schema']!r}")
+        kw: dict[str, Any] = {
+            "ckpt_duration_s": float(cal["full_write_s"]),
+            "restore_s": float(cal["restore_s"]),
+            "delta_fraction": float(cal["delta_fraction"]),
+            "delta_int8_fraction": float(cal["delta_int8_fraction"]),
+            "delta_encode_s_per_byte": float(cal["delta_encode_s_per_byte"]),
+            "state_bytes": float(cal["state_bytes"]),
+        }
+        known = {f.name for f in fields(cls)}
+        unknown = set(overrides) - known
+        if unknown:
+            raise TypeError(f"unknown SimCostModel fields {sorted(unknown)}")
+        kw.update(overrides)
+        return cls(**kw)
 
     # -- legacy single-knob interface ---------------------------------------
     def effective_capacity(self, checkpointing: bool,
@@ -72,13 +126,18 @@ class SimCostModel:
     # -- per-kind / per-level pricing ---------------------------------------
     def write_duration(self, kind: str = "full", level: str = "local",
                        encoding: str = "lossless") -> float:
-        """Seconds one write of ``kind`` takes at ``level``."""
+        """Seconds one write of ``kind`` takes at ``level``.  A delta write
+        additionally pays the host encode+compress CPU (which reads the
+        whole state regardless of how small the delta compresses) — priced
+        so ``optimize_plan`` stops recommending delta plans whose encode
+        exceeds the write win."""
         d = self.ckpt_duration_s * {"memory": self.memory_write_factor,
                                     "local": 1.0,
                                     "remote": self.remote_write_factor}[level]
         if kind == "delta":
             d *= (self.delta_int8_fraction if encoding == "int8"
                   else self.delta_fraction)
+            d += self.delta_encode_s_per_byte * self.state_bytes
         return d
 
     def restore_duration(self, level: str = "local",

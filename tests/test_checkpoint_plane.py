@@ -191,6 +191,161 @@ def test_nothing_survives_raises(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# pipelined save path: aliasing isolation, blocking budget, zero markers
+# ---------------------------------------------------------------------------
+
+def test_pipelined_async_restore_bit_exact_under_inplace_mutation(tmp_path):
+    """The aliasing hazard the chunked snapshot must preserve: mutable host
+    arrays are deep-copied before save() returns, so an in-place mutation
+    racing the in-flight background write never leaks into the restore."""
+    plan = CheckpointPlan(sync=False, busy_policy="block", num_shards=2,
+                          chunk_bytes=1 << 16)
+    mgr = CheckpointManager(str(tmp_path), plan)
+    rng = np.random.default_rng(0)
+    state = {"w": rng.standard_normal((512, 512)).astype(np.float32),
+             "b": rng.standard_normal((512,)).astype(np.float32)}
+    want = {k: v.copy() for k, v in state.items()}
+    mgr.save(3, state, 0.0)
+    state["w"] *= -1.0          # racing in-place mutation
+    state["b"][:] = 0.0
+    mgr.wait()
+    assert mgr.stats()["async_errors"] == []
+    rep = mgr.restore({"w": np.zeros((512, 512), np.float32),
+                       "b": np.zeros((512,), np.float32)}, "node")
+    assert rep.step == 3 and _bit_exact(rep.state, want)
+
+
+def test_chunked_snapshot_source_matches_state():
+    """ChunkedHostSnapshot materializes jax leaves chunk by chunk in the
+    background but as_pytree()/get() must reproduce the state bit-exactly
+    and survive later mutation of host leaves."""
+    import jax.numpy as jnp
+
+    from repro.checkpoint import ChunkedHostSnapshot
+    rng = np.random.default_rng(1)
+    state = {"dev": jnp.asarray(rng.standard_normal((64, 1024))
+                                .astype(np.float32)),
+             "host": rng.standard_normal((256,)).astype(np.float32),
+             "step": np.int32(9)}
+    want_host = state["host"].copy()
+    snap = ChunkedHostSnapshot(state, chunk_bytes=16 << 10)
+    state["host"][:] = -1.0
+    got = snap.as_pytree()
+    assert _bit_exact(got["dev"], state["dev"])
+    assert _bit_exact(got["host"], want_host)
+    assert int(got["step"]) == 9
+    assert snap.spec("dev") == ((64, 1024), np.dtype(np.float32))
+
+
+def test_async_incremental_blocking_below_half_duration(tmp_path):
+    """Regression: the pipelined save must keep the caller-blocking part of
+    an async incremental trigger well under the total write work on a
+    multi-MB state (pre-pipeline, blocking == the full deep copy).  The
+    leaves are immutable jax Arrays so the save exercises the deferred
+    chunked-transfer path, not just the eager host-copy one."""
+    import jax.numpy as jnp
+
+    plan = CheckpointPlan(mode="incremental", full_every=4, sync=False,
+                          busy_policy="block", num_shards=2,
+                          chunk_bytes=1 << 20)
+    mgr = CheckpointManager(str(tmp_path), plan)
+    rng = np.random.default_rng(2)
+    state = {"w": jnp.asarray(rng.standard_normal((2_000_000,))
+                              .astype(np.float32))}
+    mgr.save(0, state, 0.0)             # full
+    mgr.wait()
+    bumped = {"w": state["w"] + np.float32(1e-4)}
+    rep = mgr.save(1, bumped, 1.0)      # delta: encode+compress dominates
+    mgr.wait()
+    assert mgr.stats()["async_errors"] == []
+    assert rep.kind == "delta" and not rep.synchronous
+    assert rep.duration_s > 0.0
+    assert rep.blocking_s < rep.duration_s / 2, \
+        (rep.blocking_s, rep.duration_s)
+    assert rep.encode_s > 0.0           # the calibration quantity
+    # and the delta restores bit-exact through the pipelined path
+    got = mgr.restore({"w": np.zeros(2_000_000, np.float32)}, "node")
+    assert got.step == 1 and _bit_exact(got.state, bumped)
+
+
+def test_write_delta_zero_marker_for_unchanged_leaf(tmp_path):
+    """An unchanged leaf is recorded as a manifest "zero" marker: no blob
+    on disk, fewer payload bytes, bit-exact restore."""
+    plan = CheckpointPlan(mode="incremental", full_every=8, levels=("local",))
+    mgr = CheckpointManager(str(tmp_path), plan)
+    rng = np.random.default_rng(3)
+    s0 = {"hot": rng.standard_normal((4096,)).astype(np.float32),
+          "frozen": rng.standard_normal((4096,)).astype(np.float32),
+          "ids": np.arange(128, dtype=np.int64)}
+    mgr.save(0, s0, 0.0)
+    s1 = {"hot": s0["hot"] + np.float32(0.5),
+          "frozen": s0["frozen"].copy(),        # unchanged
+          "ids": s0["ids"].copy()}              # unchanged, non-float
+    rep = mgr.save(1, s1, 1.0)
+    assert rep.kind == "delta"
+    local = str(tmp_path / "local")
+    meta = read_delta_manifest(local, 1)
+    assert set(meta["zero"]) == {"frozen", "ids"}
+    ddir = os.path.join(local, "delta_0000000001")
+    assert not os.path.exists(os.path.join(ddir, "frozen.bin"))
+    assert not os.path.exists(os.path.join(ddir, "ids.bin"))
+    assert os.path.exists(os.path.join(ddir, "hot.bin"))
+    rep = mgr.restore({k: np.zeros_like(v) for k, v in s0.items()}, "node")
+    assert rep.step == 1 and _bit_exact(rep.state, s1)
+
+
+# ---------------------------------------------------------------------------
+# calibration loop: BENCH_ckpt.json -> SimCostModel.from_calibration
+# ---------------------------------------------------------------------------
+
+def _calibration(encode_per_byte=0.0):
+    return {
+        "schema": "bench_ckpt/1",
+        "state_bytes": 32 * 2**20,
+        "full_write_s": 2.0,
+        "restore_s": 1.5,
+        "delta_fraction": 0.05,
+        "delta_int8_fraction": 0.01,
+        "delta_encode_s_per_byte": encode_per_byte,
+        "plans": {"incr8-sync": {"bytes_per_trigger": 1.0, "write_s": 0.1,
+                                 "blocking_s": 0.1, "encode_cpu_s": 0.5}},
+    }
+
+
+def test_cost_model_from_calibration_prices_encode_cpu():
+    from repro.sim import SimCostModel
+
+    free = SimCostModel.from_calibration(_calibration(0.0),
+                                         capacity_eps=2000.0)
+    assert free.ckpt_duration_s == 2.0 and free.restore_s == 1.5
+    assert free.delta_fraction == 0.05 and free.capacity_eps == 2000.0
+    # measured encode CPU makes every delta write dearer by bytes * rate
+    rate = 3.0 / (32 * 2**20)           # 3 s of host encode per trigger
+    paid = SimCostModel.from_calibration(_calibration(rate))
+    assert np.isclose(paid.write_duration("delta") -
+                      free.write_duration("delta"), 3.0)
+    assert paid.write_duration("full") == free.write_duration("full")
+    # encode CPU above the write win: incremental loses its advantage
+    incr = CheckpointPlan(mode="incremental", full_every=8)
+    full = CheckpointPlan()
+    assert free.avg_write_duration(incr) < free.avg_write_duration(full)
+    assert paid.avg_write_duration(incr) > paid.avg_write_duration(full)
+
+
+def test_cost_model_from_calibration_rejects_bad_artifacts():
+    from repro.sim import SimCostModel
+
+    with pytest.raises(ValueError):
+        SimCostModel.from_calibration({"schema": "bench_ckpt/1"})
+    bad = _calibration()
+    bad["schema"] = "bench_ckpt/999"
+    with pytest.raises(ValueError):
+        SimCostModel.from_calibration(bad)
+    with pytest.raises(TypeError):
+        SimCostModel.from_calibration(_calibration(), not_a_field=1.0)
+
+
+# ---------------------------------------------------------------------------
 # config + plan plumbing
 # ---------------------------------------------------------------------------
 

@@ -119,6 +119,39 @@ def test_ckpt_delta_kernel_vs_ref(n):
     np.testing.assert_allclose(np.asarray(d), dr, atol=1e-6)
 
 
+@pytest.mark.parametrize("n", [1024, 4096, 5000])
+def test_ckpt_lossless_kernel_bit_exact_vs_ref(n):
+    """The fused lossless sub+XOR-residual kernel must match its host
+    oracle bit for bit, and decode must reproduce the original f32 bit
+    patterns exactly (this is what keeps lossless restore bit-exact when
+    the encode runs on-device)."""
+    from repro.kernels.ckpt_delta.ops import lossless_decode, lossless_encode
+    from repro.kernels.ckpt_delta.ref import (lossless_decode_ref,
+                                              lossless_encode_ref)
+
+    ks = jax.random.split(jax.random.PRNGKey(7), 2)
+    new = jax.random.normal(ks[0], (n,))
+    base = new + jax.random.normal(ks[1], (n,)) * 1e-3
+    d, r = lossless_encode(new, base, interpret=True)
+    dr, rr = lossless_encode_ref(np.asarray(new), np.asarray(base))
+    assert np.array_equal(np.asarray(d)[:n], dr)
+    assert np.array_equal(np.asarray(r)[:n], rr)
+    # kernel decode: original bit patterns back, exactly
+    out = np.asarray(lossless_decode(base, d, r, interpret=True))[:n]
+    assert np.array_equal(out.view(np.uint32),
+                          np.asarray(new).view(np.uint32))
+    # host oracle decode agrees bitwise too
+    out_ref = lossless_decode_ref(np.asarray(base), dr, rr)
+    assert np.array_equal(out_ref.view(np.uint32),
+                          np.asarray(new).view(np.uint32))
+    # the u32 residual's bytes equal the legacy per-byte u8 XOR, so blobs
+    # written by either path stay mutually restorable
+    pred = np.asarray(base) + dr
+    legacy = np.frombuffer(np.asarray(new).tobytes(), np.uint8) \
+        ^ np.frombuffer(pred.tobytes(), np.uint8)
+    assert legacy.tobytes() == rr.tobytes()
+
+
 def _check_ckpt_delta_roundtrip_error_bound(n, scale, seed):
     """Property: |delta - decode(encode(delta))| <= group_scale/2 elementwise."""
     rng = np.random.default_rng(seed)

@@ -19,12 +19,14 @@ import numpy as np
 
 from repro.config import KhaosConfig
 from repro.configs import get_config
-from repro.core import (KhaosController, QoSModel, run_profiling,
-                        select_failure_points, young_daly_interval)
+from repro.core import (KhaosController, QoSModel, optimize_plan,
+                        run_profiling_campaign, select_failure_points,
+                        young_daly_interval)
 from repro.data.stream import diurnal_rate, record_workload
 from repro.ft.failures import FailureModel
-from repro.sim import (SimCostModel, SimDeployment, SimJobHandle,
-                       StreamSimulator, costmodel_from_arch)
+from repro.sim import (BatchedDeployment, SimCostModel, SimJobHandle,
+                       StreamSimulator, costmodel_from_arch,
+                       make_plan_verifier)
 
 DAY = 86_400.0
 
@@ -61,17 +63,33 @@ def bench_khaos_training(arch: str = "yi-6b"):
     yd = young_daly_interval(cm.ckpt_duration_s, mtbf)
     print(f"cluster MTBF {mtbf/3600:.1f}h -> Young/Daly CI = {yd:.0f}s")
 
-    # Phase 1+2: record, profile around the Young/Daly prior
+    # Phase 1+2: record, then profile the whole (CI x failure-point) grid
+    # as lanes of ONE batched campaign (the paper's parallel deployments)
     recording = record_workload(sched, duration=14_400.0, seed=7)
     ss = select_failure_points(recording, m=4, smoothing_window=60)
     ci_grid = np.geomspace(max(10.0, yd / 8), yd * 2.5, 6)
-    prof = run_profiling(
-        lambda ci: SimDeployment(ci, recording, cm, warmup_s=600,
-                                 max_recovery_s=3600.0),
+    prof = run_profiling_campaign(
+        BatchedDeployment(cm, recording, warmup_s=600,
+                          max_recovery_s=3600.0),
         ss, ci_grid, margin=120)
     ci_f, tr_f, L_f, R_f = prof.flat()
     m_l = QoSModel().fit(ci_f, tr_f, L_f)
     m_r = QoSModel().fit(ci_f, tr_f, np.minimum(R_f, 3600.0))
+
+    # Phase 3 mechanism search with the simulate-to-verify pass: top plan
+    # candidates are replayed through a batched campaign before committing
+    plan_opt = optimize_plan(
+        m_l, m_r, tr_avg=float(np.mean(recording.counts)),
+        l_const=4.0 * bound, r_const=450.0, p=1.0,
+        ci_min=float(ci_grid[0]), ci_max=float(ci_grid[-1]), cost=cm,
+        mtbf_s=mtbf,
+        verifier=make_plan_verifier(cm, recording=recording, warmup_s=600,
+                                    margin_s=120, max_recovery_s=3600.0))
+    if plan_opt.plan is not None:
+        n_sim = sum(1 for c in plan_opt.candidates if c.sim is not None)
+        print(f"plan search (simulate-to-verify over {n_sim} candidates): "
+              f"{plan_opt.plan.name} @ CI={plan_opt.ci:.0f}s "
+              f"(verified={plan_opt.verified})")
 
     kcfg = KhaosConfig(latency_constraint=4.0 * bound,
                        recovery_constraint=450.0,

@@ -1,41 +1,312 @@
 """E4: recovery time & latency vs CI at fixed load — the paper's §III-C
 premise (and the shape M_R must capture), plus the Young/Daly point for
-reference."""
+reference.
+
+The E4 grid now runs twice: through the scalar ``StreamSimulator`` loop
+(the oracle) and as lanes of one ``BatchedCampaign``, which must reproduce
+the same table rows.  A 10x larger scenario grid (CI x mechanism x failure
+kind x workload, >= 200 lanes) then measures campaign throughput, and the
+whole measurement is emitted as the ``BENCH_sim.json`` artifact (schema
+"bench_sim/1") — the perf trajectory of the vectorized simulator, next to
+``BENCH_ckpt.json``'s "bench_ckpt/1" checkpoint-plane calibration.
+
+bench_sim/1 schema:
+  schema               "bench_sim/1"
+  e4                   the equivalence gate: per-CI latency/recovery from
+                       BOTH engines, wall-clocks, max absolute divergence
+  grid                 the throughput measurement: lanes, lane_ticks,
+                       wall_s, lane_ticks_per_s, recovered_fraction, and
+                       the scenario axes the lanes span
+  scalar_ticks_per_s   the scalar loop's measured tick rate
+  speedup              grid lane-ticks/s over scalar ticks/s (the >= 20x
+                       campaign-throughput target)
+"""
 from __future__ import annotations
+
+import json
+import os
+import shutil
+import time
 
 import numpy as np
 
+from repro.config import CheckpointPlan
 from repro.core import young_daly_interval
-from repro.data.stream import constant_rate
+from repro.data.stream import constant_rate, dense_rates, diurnal_rate
 from repro.ft.failures import FailureInjector
-from repro.sim import SimCostModel, StreamSimulator
+from repro.sim import (BatchedCampaign, LaneSpec, SimCostModel,
+                       StreamSimulator)
+
+E4_CIS = (10, 20, 30, 60, 90, 120, 180, 240)
+E4_RATE = 3000.0
+E4_HORIZON_S = 5000.0          # post-injection window of the scalar sweep
+GRID_HORIZON = 2200            # ticks per grid lane (recovery completes well
+                               # inside this for every grid scenario family)
+
+SIM_SCHEMA = "bench_sim/1"
+SIM_SCHEMA_KEYS = ("schema", "e4", "grid", "scalar_ticks_per_s", "speedup")
 
 
-def bench_recovery_vs_ci():
-    cost = SimCostModel(capacity_eps=4600.0, base_latency_s=0.5,
+def _e4_cost() -> SimCostModel:
+    return SimCostModel(capacity_eps=4600.0, base_latency_s=0.5,
                         ckpt_duration_s=3.0, ckpt_sync_penalty=0.6)
-    rate = 3000.0
-    print("\n=== Recovery & latency vs CI (constant 3000 ev/s, worst-case failure) ===")
-    print(f"{'CI (s)':>8s} {'avg latency (ms)':>18s} {'recovery (s)':>14s}")
-    rows = []
-    for ci in (10, 20, 30, 60, 90, 120, 180, 240):
-        sim = StreamSimulator(cost, ci_s=float(ci), schedule=constant_rate(rate))
-        t = FailureInjector().worst_case_time(3 * ci + 5.0, 0.0, ci,
-                                              cost.ckpt_duration_s)
+
+
+def _worst_case(ci: float, cost: SimCostModel) -> float:
+    return FailureInjector().worst_case_time(3 * ci + 5.0, 0.0, float(ci),
+                                             cost.ckpt_duration_s)
+
+
+# ---------------------------------------------------------------------------
+# E4 grid, both engines
+# ---------------------------------------------------------------------------
+
+def scalar_e4(cost: SimCostModel, cis=E4_CIS) -> tuple[list, float, int]:
+    """The original sequential sweep; returns (rows, wall_s, ticks)."""
+    rows, ticks = [], 0
+    t0 = time.perf_counter()
+    for ci in cis:
+        sim = StreamSimulator(cost, ci_s=float(ci),
+                              schedule=constant_rate(E4_RATE))
+        t = _worst_case(ci, cost)
         sim.inject_failure(t)
-        sim.run_until(t + 5000.0)
+        sim.run_until(t + E4_HORIZON_S)
         lat_pre = sim.metrics.series("latency").mean_over(0, t) * 1e3
         rec = sim.recoveries[0]["recovery_s"] if sim.recoveries else float("nan")
         rows.append((ci, lat_pre, rec))
-        print(f"{ci:8d} {lat_pre:18.0f} {rec:14.0f}")
+        ticks += len(sim.metrics.series("latency"))
+    return rows, time.perf_counter() - t0, ticks
+
+
+def e4_lanes(cost: SimCostModel, cis=E4_CIS) -> list[LaneSpec]:
+    lanes = []
+    for ci in cis:
+        t = _worst_case(ci, cost)
+        n = int(np.ceil(t + E4_HORIZON_S))
+        lanes.append(LaneSpec(
+            rates=dense_rates(0.0, n, schedule=constant_rate(E4_RATE)),
+            ci_s=float(ci), failures=((t, "node"),),
+            tag={"e4_ci": float(ci), "inject_t": t}))
+    return lanes
+
+
+def batched_e4(cost: SimCostModel, cis=E4_CIS) -> tuple[list, float]:
+    """Same table from campaign lanes; rows must match the scalar oracle."""
+    lanes = e4_lanes(cost, cis)
+    t0 = time.perf_counter()
+    camp = BatchedCampaign(cost, lanes).run()
+    wall = time.perf_counter() - t0
+    lat_hist = camp.latency_history()
+    rows = []
+    for i, lane in enumerate(lanes):
+        ts = camp.times(i)
+        pre = ts <= lane.tag["inject_t"]       # mean_over(0, t) is inclusive
+        lat_pre = float(np.mean(lat_hist[i, :len(ts)][pre])) * 1e3
+        rec = camp.lane_recovery(i)
+        rows.append((lane.tag["e4_ci"], lat_pre,
+                     rec if rec is not None else float("nan")))
+    return rows, wall
+
+
+# ---------------------------------------------------------------------------
+# the 10x scenario grid (throughput measurement)
+# ---------------------------------------------------------------------------
+
+GRID_PLANS = (
+    ("full-sync", None),
+    ("full-async", CheckpointPlan(sync=False)),
+    ("incr8-async", CheckpointPlan(mode="incremental", full_every=8,
+                                   sync=False)),
+    ("incr8-async-mlr", CheckpointPlan(mode="incremental", full_every=8,
+                                       sync=False,
+                                       levels=("memory", "local", "remote"),
+                                       local_every=1, remote_every=8)),
+)
+GRID_KINDS = ("task", "node", "cluster")
+
+
+def grid_lanes(cost: SimCostModel, n_cis: int = 18,
+               horizon: int = GRID_HORIZON) -> list[LaneSpec]:
+    """CI grid x mechanism x failure kind x workload — every lane one chaos
+    scenario with a worst-case injection."""
+    workloads = (("const", constant_rate(E4_RATE)),
+                 ("diurnal", diurnal_rate(base=0.8 * E4_RATE, amplitude=0.4,
+                                          period=7200.0, seed=7)))
+    # one dense λ array per workload, shared by every lane that replays it
+    rates = {w: dense_rates(0.0, horizon, schedule=s) for w, s in workloads}
+    lanes = []
+    for ci in np.geomspace(10.0, 240.0, n_cis):
+        t = _worst_case(float(ci), cost)
+        for plan_name, plan in GRID_PLANS:
+            for kind in GRID_KINDS:
+                for wname, _sched in workloads:
+                    lanes.append(LaneSpec(
+                        rates=rates[wname],
+                        ci_s=float(ci), plan=plan, failures=((t, kind),),
+                        tag={"plan": plan_name, "kind": kind,
+                             "workload": wname}))
+    return lanes
+
+
+def bench_grid(cost: SimCostModel, repeats: int = 3) -> dict:
+    lanes = grid_lanes(cost)
+    walls = []
+    camp = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        camp = BatchedCampaign(cost, lanes, record_history=False).run()
+        walls.append(time.perf_counter() - t0)
+    wall = float(np.median(walls))
+    recovered = sum(1 for r in camp.recoveries if r)
+    return {
+        "lanes": len(lanes),
+        "lane_ticks": int(camp.ticks_run),
+        "wall_s": wall,
+        "lane_ticks_per_s": camp.ticks_run / wall,
+        "recovered_fraction": recovered / len(lanes),
+        "ci_grid": [10.0, 240.0, 18],
+        "plans": [n for n, _ in GRID_PLANS],
+        "kinds": list(GRID_KINDS),
+        "workloads": ["const", "diurnal"],
+    }
+
+
+# ---------------------------------------------------------------------------
+# artifact (BENCH_sim.json  <->  the perf trajectory)
+# ---------------------------------------------------------------------------
+
+def build_sim_artifact(scalar_rows, scalar_wall, scalar_ticks,
+                       batched_rows, batched_wall, grid: dict) -> dict:
+    s = np.array(scalar_rows)
+    b = np.array(batched_rows)
+    scalar_tps = scalar_ticks / max(scalar_wall, 1e-9)
+    return {
+        "schema": SIM_SCHEMA,
+        "e4": {
+            "cis": [float(x) for x in s[:, 0]],
+            "latency_ms": [float(x) for x in s[:, 1]],
+            "recovery_s": [float(x) for x in s[:, 2]],
+            "latency_ms_batched": [float(x) for x in b[:, 1]],
+            "recovery_s_batched": [float(x) for x in b[:, 2]],
+            "scalar_wall_s": float(scalar_wall),
+            "batched_wall_s": float(batched_wall),
+            "max_abs_recovery_diff_s": float(np.nanmax(np.abs(s[:, 2] - b[:, 2]))),
+            "max_abs_latency_diff_ms": float(np.nanmax(np.abs(s[:, 1] - b[:, 1]))),
+        },
+        "grid": grid,
+        "scalar_ticks_per_s": float(scalar_tps),
+        "speedup": float(grid["lane_ticks_per_s"] / scalar_tps),
+    }
+
+
+def validate_sim_artifact(art: dict) -> None:
+    """Schema gate for BENCH_sim.json (run by ``benchmarks/run.py --smoke``)."""
+    missing = [k for k in SIM_SCHEMA_KEYS if k not in art]
+    if missing:
+        raise ValueError(f"BENCH_sim artifact missing keys {missing}")
+    if art["schema"] != SIM_SCHEMA:
+        raise ValueError(f"unknown sim-bench schema {art['schema']!r}")
+    e4 = art["e4"]
+    n = len(e4["cis"])
+    for k in ("latency_ms", "recovery_s", "latency_ms_batched",
+              "recovery_s_batched"):
+        if len(e4[k]) != n:
+            raise ValueError(f"e4.{k} length {len(e4[k])} != {n}")
+    if not (e4["max_abs_recovery_diff_s"] <= 1.0):
+        raise ValueError("batched E4 diverged from the scalar oracle: "
+                         f"max |recovery diff| = {e4['max_abs_recovery_diff_s']}s")
+    if not (e4["max_abs_latency_diff_ms"] <= 1.0):
+        raise ValueError("batched E4 latency diverged from the scalar oracle")
+    g = art["grid"]
+    for k in ("lanes", "lane_ticks", "wall_s", "lane_ticks_per_s",
+              "recovered_fraction"):
+        if k not in g or not isinstance(g[k], (int, float)) or g[k] < 0:
+            raise ValueError(f"grid.{k} missing or not a non-negative number")
+    if not (0.0 < g["recovered_fraction"] <= 1.0):
+        raise ValueError(f"implausible recovered_fraction {g['recovered_fraction']}")
+    if art["speedup"] <= 0:
+        raise ValueError("speedup must be positive")
+
+
+def emit_sim_artifact(path: str, art: dict) -> dict:
+    validate_sim_artifact(art)
+    with open(path, "w") as f:
+        json.dump(art, f, indent=2)
+    print(f"\nsim-bench artifact -> {path}")
+    g = art["grid"]
+    print(f"campaign throughput: {g['lanes']} lanes, "
+          f"{g['lane_ticks_per_s']/1e6:.2f}M lane-ticks/s vs scalar "
+          f"{art['scalar_ticks_per_s']/1e3:.0f}k ticks/s "
+          f"-> {art['speedup']:.1f}x  (target >= 20x)")
+    if art["speedup"] < 20.0:
+        print("WARNING: campaign speedup below the 20x target on this host")
+    return art
+
+
+# ---------------------------------------------------------------------------
+# drivers
+# ---------------------------------------------------------------------------
+
+def bench_recovery_vs_ci(out: str = "BENCH_sim.json"):
+    cost = _e4_cost()
+    print("\n=== Recovery & latency vs CI (constant 3000 ev/s, worst-case failure) ===")
+    scalar_rows, scalar_wall, scalar_ticks = scalar_e4(cost)
+    batched_rows, batched_wall = batched_e4(cost)
+    print(f"{'CI (s)':>8s} {'avg latency (ms)':>18s} {'recovery (s)':>14s} "
+          f"{'batched rec (s)':>16s}")
+    for (ci, lat, rec), (_, _, recb) in zip(scalar_rows, batched_rows):
+        print(f"{int(ci):8d} {lat:18.0f} {rec:14.0f} {recb:16.0f}")
     yd = young_daly_interval(cost.ckpt_duration_s, mtbf_s=4 * 3600.0)
     print(f"Young/Daly optimum for MTBF=4h, delta={cost.ckpt_duration_s}s: "
           f"{yd:.0f}s (static, workload-blind — the gap Khaos closes)")
-    return rows
+
+    grid = bench_grid(cost)
+    print(f"scalar 8-point sweep: {scalar_wall:.2f}s; {grid['lanes']}-lane "
+          f"campaign grid: {grid['wall_s']:.2f}s "
+          f"({grid['recovered_fraction']*100:.0f}% of lanes recovered)")
+    art = build_sim_artifact(scalar_rows, scalar_wall, scalar_ticks,
+                             batched_rows, batched_wall, grid)
+    emit_sim_artifact(out, art)
+    return scalar_rows
 
 
-def main():
-    return bench_recovery_vs_ci()
+def smoke(tmpdir: str = "/tmp/repro_bench_sim_smoke") -> dict:
+    """Tiny 4-lane campaign end-to-end: equivalence vs the scalar oracle on
+    a reduced E4 grid, artifact emission, schema validation, reload."""
+    shutil.rmtree(tmpdir, ignore_errors=True)
+    os.makedirs(tmpdir, exist_ok=True)
+    cost = _e4_cost()
+    cis = (30, 120)
+    scalar_rows, scalar_wall, scalar_ticks = scalar_e4(cost, cis)
+    batched_rows, batched_wall = batched_e4(cost, cis)
+    # a 4-lane grid is enough to exercise the whole campaign machinery
+    lanes = [LaneSpec(rates=dense_rates(0.0, 1500,
+                                        schedule=constant_rate(E4_RATE)),
+                      ci_s=float(ci), failures=((_worst_case(ci, cost), kind),))
+             for ci in cis for kind in ("task", "node")]
+    t0 = time.perf_counter()
+    camp = BatchedCampaign(cost, lanes, record_history=False).run()
+    wall = time.perf_counter() - t0
+    grid = {"lanes": len(lanes), "lane_ticks": int(camp.ticks_run),
+            "wall_s": wall, "lane_ticks_per_s": camp.ticks_run / wall,
+            "recovered_fraction": sum(1 for r in camp.recoveries if r) / len(lanes),
+            "plans": ["full-sync"], "kinds": ["task", "node"],
+            "workloads": ["const"], "ci_grid": [float(cis[0]), float(cis[-1]), 2]}
+    art = build_sim_artifact(scalar_rows, scalar_wall, scalar_ticks,
+                             batched_rows, batched_wall, grid)
+    path = os.path.join(tmpdir, "BENCH_sim.json")
+    emit_sim_artifact(path, art)
+    with open(path) as f:
+        validate_sim_artifact(json.load(f))
+    assert art["e4"]["max_abs_recovery_diff_s"] == 0.0, \
+        "smoke lanes must match the scalar oracle exactly"
+    print(f"smoke OK: {path} validates "
+          f"(4-lane campaign, {grid['lane_ticks_per_s']/1e3:.0f}k lane-ticks/s)")
+    return art
+
+
+def main(out: str = "BENCH_sim.json"):
+    return bench_recovery_vs_ci(out)
 
 
 if __name__ == "__main__":

@@ -12,11 +12,12 @@ from dataclasses import dataclass
 import numpy as np
 
 from repro.config import KhaosConfig
-from repro.core import (KhaosController, QoSModel, run_profiling,
+from repro.core import (KhaosController, QoSModel, run_profiling_campaign,
                         select_failure_points)
 from repro.data.stream import RateSchedule, record_workload
 from repro.ft.failures import FailureInjector
-from repro.sim import SimCostModel, SimDeployment, SimJobHandle, StreamSimulator
+from repro.sim import (BatchedDeployment, SimCostModel, SimJobHandle,
+                       StreamSimulator)
 
 STATIC_CIS = (10.0, 30.0, 60.0, 90.0, 120.0)
 L_CONST = 1.0        # 1000 ms
@@ -39,9 +40,10 @@ def make_khaos(recording, cost: SimCostModel, seed: int = 0):
     """Phases 1+2+3 setup: returns (controller, profiling_result)."""
     ss = select_failure_points(recording, m=5, smoothing_window=30)
     ci_grid = np.linspace(10, 120, 6)
-    prof = run_profiling(
-        lambda ci: SimDeployment(ci, recording, cost, warmup_s=300,
-                                 max_recovery_s=3600.0),
+    # all z x m profiling deployments advance as lanes of one campaign
+    prof = run_profiling_campaign(
+        BatchedDeployment(cost, recording, warmup_s=300,
+                          max_recovery_s=3600.0),
         ss, ci_grid, margin=90)
     ci_f, tr_f, L_f, R_f = prof.flat()
     # a deployment that cannot keep up at its CI (burst peak + checkpoint

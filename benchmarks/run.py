@@ -2,7 +2,10 @@
 
   E1  IoT-Vehicles analogue  (paper Table II, Fig. 2a/2c, Fig. 3a)
   E2  YSB analogue           (paper Table III, Fig. 2b/2d, Fig. 3b)
-  E4  recovery/latency vs CI (paper §III-C premise)
+  E4  recovery/latency vs CI (paper §III-C premise; scalar oracle AND the
+                              batched campaign — emits BENCH_sim.json with
+                              the lane-vs-scalar table and the campaign
+                              throughput measurement, schema "bench_sim/1")
   E5  checkpoint subsystem   (beyond-paper; emits the BENCH_ckpt.json
                               calibration artifact the sim cost model loads)
   E6  kernel validation      (oracle timings + interpret-mode allclose)
@@ -10,10 +13,12 @@
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--quick | --smoke]
 
-``--smoke`` is the tier-1-adjacent CI check: it runs only the E5
-checkpoint bench on a tiny state and validates that the emitted
-BENCH_ckpt.json matches the "bench_ckpt/1" schema and loads through
-``SimCostModel.from_calibration`` — exiting non-zero on any mismatch.
+``--smoke`` is the tier-1-adjacent CI check: it runs the E5 checkpoint
+bench on a tiny state and a tiny 4-lane E4 campaign, validating that the
+emitted BENCH_ckpt.json / BENCH_sim.json artifacts match their schemas
+("bench_ckpt/1" via ``SimCostModel.from_calibration``, "bench_sim/1" via
+``bench_recovery.validate_sim_artifact``) — exiting non-zero on any
+mismatch.
 """
 from __future__ import annotations
 
@@ -33,9 +38,10 @@ def main() -> None:
 
     t0 = time.monotonic()
     if args.smoke:
-        from benchmarks import bench_ckpt
+        from benchmarks import bench_ckpt, bench_recovery
         try:
             bench_ckpt.smoke()
+            bench_recovery.smoke()
         except (ValueError, AssertionError) as e:
             print(f"SMOKE FAILED: {e}", file=sys.stderr)
             sys.exit(1)

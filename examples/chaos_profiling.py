@@ -1,13 +1,15 @@
 """Phase-2 deep dive: parallel profiling deployments, worst-case injection,
-and the (CI x TR) -> latency/recovery surfaces Khaos learns.
+and the (CI x TR) -> latency/recovery surfaces Khaos learns.  The whole
+z x m grid runs as array lanes of ONE batched campaign — the paper's
+parallel Kubernetes deployments mapped onto vectorized simulator state.
 
     PYTHONPATH=src python examples/chaos_profiling.py
 """
 import numpy as np
 
-from repro.core import QoSModel, run_profiling, select_failure_points
+from repro.core import QoSModel, run_profiling_campaign, select_failure_points
 from repro.data.stream import diurnal_rate, record_workload
-from repro.sim import SimCostModel, SimDeployment
+from repro.sim import BatchedDeployment, SimCostModel
 
 sched = diurnal_rate(base=2500, amplitude=0.6, period=10_800, seed=9)
 recording = record_workload(sched, duration=10_800, seed=9)
@@ -16,9 +18,10 @@ cost = SimCostModel(capacity_eps=4400.0, ckpt_duration_s=3.0,
                     ckpt_sync_penalty=0.6)
 
 ci_values = [10, 30, 60, 90, 120]
-print("profiling 5 parallel deployments x 5 worst-case failure injections...")
-prof = run_profiling(
-    lambda ci: SimDeployment(ci, recording, cost),
+print("profiling 5 parallel deployments x 5 worst-case failure injections "
+      "(25 lanes, one sweep)...")
+prof = run_profiling_campaign(
+    BatchedDeployment(cost, recording),
     steady, ci_values, margin=90,
     progress=lambda msg: print("  " + msg))
 

@@ -23,12 +23,13 @@ from repro.core.ci_optimizer import (optimize_ci, optimize_plan,
                                      PlanOptimization)
 from repro.core.controller import KhaosController
 from repro.core.young_daly import young_daly_interval
-from repro.core.profiler import run_profiling, ProfilingResult
+from repro.core.profiler import (run_profiling, run_profiling_campaign,
+                                 ProfilingResult)
 
 __all__ = [
     "OnlineARIMA", "AnomalyDetector", "select_failure_points", "SteadyState",
     "QoSModel", "RescalingTracker", "WorkloadForecaster", "optimize_ci",
     "optimize_plan", "default_plan_variants", "PlanCandidate",
     "PlanOptimization", "KhaosController", "young_daly_interval",
-    "run_profiling", "ProfilingResult",
+    "run_profiling", "run_profiling_campaign", "ProfilingResult",
 ]

@@ -100,9 +100,44 @@ class WorkloadRecording:
         i = int(np.clip(np.searchsorted(self.times, t), 0, len(self.times) - 1))
         return float(self.counts[i])
 
+    def rates_at(self, times) -> np.ndarray:
+        """Vectorized ``rate_at`` — one searchsorted for a whole time grid
+        (the batched simulator's per-lane λ arrays come from here)."""
+        times = np.asarray(times, dtype=np.float64)
+        idx = np.clip(np.searchsorted(self.times, times), 0, len(self.times) - 1)
+        return self.counts[idx]
+
+    def rates_until(self, t_end: float, t0: Optional[float] = None,
+                    tick: float = 1.0) -> np.ndarray:
+        """Dense per-tick rate array for [t0, t_end) — precomputed once so a
+        simulator pays an array index per tick instead of a Python call."""
+        start = float(self.times[0]) if t0 is None else float(t0)
+        n = max(0, int(np.ceil((t_end - start) / tick)))
+        return self.rates_at(start + np.arange(n) * tick)
+
     def slice(self, t0: float, t1: float) -> "WorkloadRecording":
         m = (self.times >= t0) & (self.times <= t1)
         return WorkloadRecording(self.times[m], self.counts[m])
+
+
+def dense_rates(t0: float, n_ticks: int,
+                recording: Optional[WorkloadRecording] = None,
+                schedule: Optional[RateSchedule] = None,
+                tick: float = 1.0) -> np.ndarray:
+    """Precompute λ(t) for ``n_ticks`` ticks starting at ``t0``.
+
+    A recording resolves with one vectorized searchsorted; a schedule is a
+    Python callable so it is sampled once here — either way the simulators
+    stop paying a per-tick Python call on their hot loop.  The time grid
+    ``t0 + k*tick`` matches the scalar simulator's clock exactly (its clock
+    advances by exact float increments), so the values are identical to
+    per-tick ``rate_at`` calls.
+    """
+    times = t0 + np.arange(n_ticks) * tick
+    if recording is not None:
+        return recording.rates_at(times)
+    assert schedule is not None, "need a recording or a schedule"
+    return np.array([schedule(float(t)) for t in times], dtype=np.float64)
 
 
 def record_workload(schedule: RateSchedule, duration: float, t0: float = 0.0,

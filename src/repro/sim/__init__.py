@@ -1,5 +1,9 @@
 from repro.sim.costmodel import SimCostModel, costmodel_from_arch, levels_due
 from repro.sim.simulator import StreamSimulator, SimDeployment, SimJobHandle
+from repro.sim.batched import (BatchedCampaign, BatchedDeployment, LaneSpec,
+                               make_plan_verifier, measure_profile_lanes)
 
 __all__ = ["SimCostModel", "costmodel_from_arch", "levels_due",
-           "StreamSimulator", "SimDeployment", "SimJobHandle"]
+           "StreamSimulator", "SimDeployment", "SimJobHandle",
+           "BatchedCampaign", "BatchedDeployment", "LaneSpec",
+           "make_plan_verifier", "measure_profile_lanes"]

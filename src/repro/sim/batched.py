@@ -1,0 +1,593 @@
+"""Lane-batched chaos campaigns — the vectorized twin of StreamSimulator.
+
+Khaos exploits "the parallel processing capabilities of virtual cloud
+automation" to run many chaos experiments concurrently (paper §III-C).
+This module maps the paper's parallel VMs onto ARRAY LANES: one
+``BatchedCampaign`` advances N independent simulator lanes (CI grid x
+failure-kind mix x worst-case injection points x mechanism variants x
+workload schedules) with one fused NumPy tick over all lanes.  Per-lane
+state — ``(t, lag, offset_by_level, ckpt_in_flight, recovery_state)`` — is
+held as ``(N,)`` / ``(N, 3)`` arrays; λ(t) schedules are precomputed into
+dense per-tick rate matrices (``data.stream.dense_rates``) so the hot loop
+contains no per-tick Python calls at all.
+
+The scalar ``StreamSimulator`` stays as the oracle: every update below
+mirrors its ``tick``/``_begin_failure`` statement-for-statement IN THE
+SAME FLOATING-POINT ORDER, so a fixed-seed lane reproduces its scalar twin
+bit-for-bit (tests/test_batched_sim.py asserts equivalence across plans
+and all three failure kinds).  On top of the raw engine sit:
+
+  * ``BatchedDeployment`` — the Phase-2 profiler substrate that runs all
+    z CIs x m failure points as lanes of ONE campaign (retiring the
+    "deployments execute sequentially" deviation in ``core/profiler.py``);
+  * ``make_plan_verifier`` — the ``optimize_plan`` simulate-to-verify hook
+    that replays top-k plan candidates through a campaign instead of
+    trusting re-priced QoS surfaces alone.
+
+``benchmarks/bench_recovery.py`` measures the engine (lane-ticks/s vs the
+scalar loop) and emits the ``BENCH_sim.json`` artifact (schema
+"bench_sim/1").
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from math import lcm
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.config import CheckpointPlan
+from repro.data.stream import (RateSchedule, WorkloadRecording, dense_rates)
+from repro.ft.failures import FailureInjector
+from repro.sim.costmodel import SimCostModel
+
+#: fixed level order; column index == level, ordered fastest-restore first
+#: (matches simulator._LEVEL_SPEED: memory=2, local=1, remote=0)
+LEVELS = ("memory", "local", "remote")
+KINDS = ("task", "node", "cluster")
+_KIND_ID = {k: i for i, k in enumerate(KINDS)}
+#: levels a failure kind destroys (simulator._begin_failure's wipe rule)
+_WIPES = {"task": (), "node": ("memory",), "cluster": ("memory", "local")}
+
+
+@dataclass
+class LaneSpec:
+    """One scenario lane: a (CI, plan, workload, injection) combination.
+
+    ``rates`` is the dense per-tick λ array starting at ``t0`` (tick = 1s);
+    build it with ``data.stream.dense_rates`` / ``WorkloadRecording.
+    rates_until``.  ``failures`` are (time, kind) injections, matching
+    ``StreamSimulator.inject_failure``.  ``tag`` is free-form caller
+    bookkeeping (e.g. which (ci, failure-point) cell the lane measures).
+    """
+    rates: np.ndarray
+    ci_s: float = 60.0
+    t0: float = 0.0
+    plan: Optional[CheckpointPlan] = None
+    failures: Sequence[tuple[float, str]] = ()
+    tag: Optional[dict] = None
+
+    def resolved_plan(self, cost: SimCostModel) -> CheckpointPlan:
+        # identical plan resolution to StreamSimulator.__init__
+        return replace(self.plan or CheckpointPlan(sync=not cost.async_mode),
+                       interval_s=self.ci_s)
+
+
+class _PlanTable:
+    """Per-distinct-plan pricing, precomputed once per campaign.
+
+    Trigger durations / level routing are produced by the SAME cost-model
+    methods the scalar simulator calls per trigger
+    (``trigger_write_duration`` / ``levels_due``), folded over one cadence
+    period (lcm of the every-Nth counts) into dense lookup tables the tick
+    loop gathers from.
+    """
+
+    def __init__(self, cost: SimCostModel, plans: list[CheckpointPlan]):
+        P = len(plans)
+        self.plans = plans
+        self.names = [p.name for p in plans]
+        self.period = np.array(
+            [lcm(max(p.full_every, 1), max(p.local_every, 1),
+                 max(p.remote_every, 1)) for p in plans], dtype=np.int64)
+        maxp = int(self.period.max()) if P else 1
+        self.trig_dur = np.zeros((P, maxp))
+        self.trig_lvls = np.zeros((P, maxp, 3), dtype=bool)
+        self.sync = np.array([p.sync for p in plans], dtype=bool)
+        self.restore_dur = np.zeros((P, 3))
+        self.cold_restore = np.zeros(P)
+        self.surviving = np.zeros((P, len(KINDS), 3), dtype=bool)
+        for pi, plan in enumerate(plans):
+            for i in range(int(self.period[pi])):
+                self.trig_dur[pi, i] = max(
+                    cost.trigger_write_duration(plan, i), 1e-3)
+                for level, _kind in plan.levels_due(i):
+                    self.trig_lvls[pi, i, LEVELS.index(level)] = True
+            for li, level in enumerate(LEVELS):
+                with_delta = plan.mode == "incremental" and level != "memory"
+                self.restore_dur[pi, li] = cost.restore_duration(level,
+                                                                 with_delta)
+            self.cold_restore[pi] = cost.restore_duration("remote")
+            for ki, kind in enumerate(KINDS):
+                for level in cost.surviving_levels(plan, kind):
+                    self.surviving[pi, ki, LEVELS.index(level)] = True
+
+
+class BatchedCampaign:
+    """N independent StreamSimulator lanes advanced by one fused tick.
+
+    All lanes share one ``SimCostModel``; everything else (CI, plan,
+    workload, t0, injections) varies per lane.  ``run()`` advances every
+    lane to the end of its rate array; per-lane results are then read from
+    the history matrices (``lag_history`` and the derived
+    ``latency_history``) and the ``recoveries`` lists, which carry the same
+    records ``StreamSimulator.recoveries`` does.
+    """
+
+    def __init__(self, cost: SimCostModel, lanes: Sequence[LaneSpec],
+                 record_history: bool = True):
+        assert lanes, "a campaign needs at least one lane"
+        self.cost = cost
+        self.lanes = list(lanes)
+        N = self.n_lanes = len(self.lanes)
+        self._ar = np.arange(N)
+
+        # -- plan tables (dedup by value; interval is a per-lane array) -----
+        resolved = [l.resolved_plan(cost) for l in self.lanes]
+        keys = [replace(p, interval_s=0.0, levels=tuple(p.levels))
+                for p in resolved]
+        uniq: dict = {}
+        self.plan_id = np.zeros(N, dtype=np.int64)
+        for i, k in enumerate(keys):
+            self.plan_id[i] = uniq.setdefault(k, len(uniq))
+        self.table = _PlanTable(cost, list(uniq.keys()))
+        self.lane_plan_name = [self.table.names[pid] for pid in self.plan_id]
+        self._period = self.table.period[self.plan_id]
+        self._sync = self.table.sync[self.plan_id]
+
+        # -- dense λ matrix, padded past each lane's horizon ----------------
+        # time-major layout: the per-step row read/write is contiguous
+        self.lane_ticks = np.array([len(l.rates) for l in self.lanes],
+                                   dtype=np.int64)
+        T = self.horizon = int(self.lane_ticks.max())
+        self._min_ticks = int(self.lane_ticks.min())
+        self._rates_tm = np.zeros((T, N))
+        for i, l in enumerate(self.lanes):
+            r = np.asarray(l.rates, dtype=np.float64)
+            self._rates_tm[:len(r), i] = r
+            if len(r) < T and len(r):
+                self._rates_tm[len(r):, i] = r[-1]
+
+        # -- per-lane scalar-simulator state --------------------------------
+        self.t0 = np.array([l.t0 for l in self.lanes])
+        self.t = self.t0.copy()
+        self.interval = np.array([l.ci_s for l in self.lanes])
+        self.lag = np.zeros(N)
+        self.produced = np.zeros(N)
+        self.consumed = np.zeros(N)
+        self.pol_last = self.t0.copy()            # CheckpointPolicy.reset(t0)
+        self.off_lvl = np.zeros((N, 3))           # offset_by_level
+        self.last_off = np.zeros(N)
+        self.ck_active = np.zeros(N, dtype=bool)  # ckpt_in_progress is not None
+        self.ck_end = np.zeros(N)
+        self.ck_off = np.zeros(N)
+        self.ck_lvls = np.zeros((N, 3), dtype=bool)
+        self.ckpt_count = np.zeros(N, dtype=np.int64)
+        self.save_count = np.zeros(N, dtype=np.int64)
+        self.down = np.zeros(N, dtype=bool)       # down_until is not None
+        self.down_until = np.zeros(N)
+        self.pending_ro = np.zeros(N)
+        self.steady_lag = np.zeros(N)
+        # active-failure bookkeeping (scalar's _active_failure dict)
+        self.af_active = np.zeros(N, dtype=bool)
+        self.af_t0 = np.zeros(N)
+        self.af_kind = np.zeros(N, dtype=np.int64)
+        self.af_ci = np.zeros(N)
+        self.af_level = np.full(N, -1, dtype=np.int64)
+        self.recoveries: list[list[dict]] = [[] for _ in range(N)]
+
+        # -- injections: (N, K) time/kind arrays, +inf padded ---------------
+        K = max(1, max((len(l.failures) for l in self.lanes), default=1))
+        self.fail_t = np.full((N, K), np.inf)
+        self.fail_kind = np.zeros((N, K), dtype=np.int64)
+        self._n_fail = K
+        for i, l in enumerate(self.lanes):
+            for j, (ft, kind) in enumerate(sorted(l.failures)):
+                self.fail_t[i, j] = ft
+                self.fail_kind[i, j] = _KIND_ID[kind]
+        self.fptr = np.zeros(N, dtype=np.int64)
+        self._next_fail = self.fail_t[:, 0].copy()   # fail_t[i, fptr[i]] cache
+
+        self.record_history = record_history
+        self._lag_hist_tm = np.zeros((T, N)) if record_history else None
+        self._step_idx = 0
+        # hoisted per-step constants
+        self._mu_ck = np.where(
+            self._sync, cost.capacity_eps * (1.0 - cost.ckpt_sync_penalty),
+            cost.capacity_eps * (1.0 - cost.async_overhead))
+        self._all = np.ones(N, dtype=bool)
+
+    # ------------------------------------------------------------------
+    def _begin_failure(self, mask: np.ndarray, kind: np.ndarray,
+                       ev_t: np.ndarray) -> None:
+        """Vectorized StreamSimulator._begin_failure for lanes in ``mask``
+        (already-down lanes consume the event but take no action).
+        ``ev_t`` is the injection instant — possibly fractional, strictly
+        earlier than the tick that pops it, exactly as the scalar event."""
+        act = mask & ~self.down
+        if not act.any():
+            return
+        cost, tbl = self.cost, self.table
+        self.ck_active &= ~act       # in-flight checkpoint dies with the job
+        surv = tbl.surviving[self.plan_id, kind]          # (N, 3)
+        offs = np.where(surv, self.off_lvl, -np.inf)
+        best = offs.max(axis=1)
+        has = surv.any(axis=1)
+        # columns are ordered fastest-first, so first argmax == the scalar's
+        # max((offset, speed, level)) tie-break toward the fastest level
+        lvl = np.argmax(offs == best[:, None], axis=1)
+        restore = np.where(has, tbl.restore_dur[self.plan_id, lvl],
+                           tbl.cold_restore[self.plan_id])
+        offset = np.where(has, best, 0.0)
+        # the failure destroys the levels it covers
+        wipe = _WIPE_MASK[kind]                           # (N, 3)
+        self.off_lvl = np.where(act[:, None] & wipe, 0.0, self.off_lvl)
+        self.down_until = np.where(
+            act, ev_t + cost.detect_s + cost.restart_s + restore,
+            self.down_until)
+        self.pending_ro = np.where(act, offset, self.pending_ro)
+        self.down |= act
+        self.af_active |= act
+        self.af_t0 = np.where(act, ev_t, self.af_t0)
+        self.af_kind = np.where(act, kind, self.af_kind)
+        self.af_ci = np.where(act, self.interval, self.af_ci)
+        self.af_level = np.where(act, np.where(has, lvl, -1), self.af_level)
+
+    def _step(self) -> None:
+        k = self._step_idx
+        all_alive = k < self._min_ticks
+        alive = self._all if all_alive else (k < self.lane_ticks)
+        if not all_alive and not alive.any():
+            self._step_idx += 1
+            return
+        t = self.t
+        lam = self._rates_tm[k] if all_alive \
+            else np.where(alive, self._rates_tm[k], 0.0)
+        self.produced += lam
+
+        # pending failures (cheap compare against the cached next event)
+        if self._n_fail:
+            while True:
+                pend = self._next_fail <= t
+                if not all_alive:
+                    pend &= alive
+                if not pend.any():
+                    break
+                cur = np.minimum(self.fptr, self._n_fail - 1)
+                self._begin_failure(pend, self.fail_kind[self._ar, cur],
+                                    self._next_fail)
+                self.fptr = np.where(pend, self.fptr + 1, self.fptr)
+                nxt = np.minimum(self.fptr, self._n_fail - 1)
+                self._next_fail = np.where(
+                    self.fptr < self._n_fail, self.fail_t[self._ar, nxt],
+                    np.inf)
+
+        down_any = self.down.any()
+        if down_any:
+            down = self.down if all_alive else (alive & self.down)
+            up = ~self.down if all_alive else (alive & ~self.down)
+            # job down: arrivals accumulate, nothing processed
+            self.lag = np.where(down, self.lag + lam, self.lag)
+            restart = down & (t >= self.down_until)
+            if restart.any():
+                # restart completes: roll back to checkpointed offset
+                # (parenthesized as the scalar's `lag += consumed - ro` so
+                # the FP rounding matches bit-for-bit)
+                rb = restart & (self.pending_ro < self.consumed)
+                self.lag = np.where(rb, self.lag + (self.consumed
+                                                    - self.pending_ro),
+                                    self.lag)
+                self.consumed = np.where(rb, self.pending_ro, self.consumed)
+                self.down &= ~restart
+                self.pol_last = np.where(restart, t, self.pol_last)
+        else:
+            up = alive
+
+        up_all = all_alive and not down_any    # every mask below collapses
+        if down_any and not up.any():
+            pass
+        else:
+            # checkpoint completion: commit the offset at every level the
+            # trigger wrote (sparse — only the few completing lanes touched)
+            comp = (t >= self.ck_end) & self.ck_active if up_all \
+                else up & self.ck_active & (t >= self.ck_end)
+            ci_ = np.flatnonzero(comp)
+            if ci_.size:
+                off = self.ck_off[ci_]
+                self.off_lvl[ci_] = np.where(self.ck_lvls[ci_], off[:, None],
+                                             self.off_lvl[ci_])
+                self.last_off[ci_] = np.maximum(self.last_off[ci_], off)
+                self.ckpt_count[ci_] += 1
+                self.ck_active[ci_] = False
+            # checkpoint start: levels due at this trigger index define the
+            # composite write's duration (gathered from the plan table)
+            due = (t - self.pol_last >= self.interval) & ~self.ck_active
+            if not up_all:
+                due &= up
+            di = np.flatnonzero(due)
+            if di.size:
+                td = t[di]
+                self.pol_last[di] = td
+                pid = self.plan_id[di]
+                idx = self.save_count[di] % self._period[di]
+                self.save_count[di] += 1
+                # barrier semantics: snapshot the offset at start
+                self.ck_end[di] = td + self.table.trig_dur[pid, idx]
+                self.ck_off[di] = self.consumed[di]
+                self.ck_lvls[di] = self.table.trig_lvls[pid, idx]
+                self.ck_active[di] = True
+            # in-flight writes after both transitions == the scalar's
+            # per-tick `checkpointing` flag
+            checkpointing = self.ck_active if up_all else up & self.ck_active
+            mu = np.where(checkpointing, self._mu_ck, self.cost.capacity_eps)
+            inflow = self.lag + lam
+            if down_any or not all_alive:
+                processed = np.where(up, np.minimum(inflow, mu), 0.0)
+                self.lag = np.where(up, np.maximum(0.0, inflow - processed),
+                                    self.lag)
+            else:
+                processed = np.minimum(inflow, mu)
+                self.lag = np.maximum(0.0, inflow - processed)
+            self.consumed += processed
+
+        if self._lag_hist_tm is not None:
+            self._lag_hist_tm[k] = self.lag
+
+        # recovery bookkeeping (ground truth: lag back to steady envelope)
+        if self.af_active.any():
+            # EWMA update set decided BEFORE clearing: a lane recovering this
+            # tick skips the update (the scalar's if/elif)
+            env = self.lag <= np.maximum(2.0 * lam,
+                                         1.05 * self.steady_lag + 1.0)
+            if not down_any and all_alive:
+                upd = ~self.af_active
+                near = self.af_active & env
+            else:
+                settled = ~self.down if all_alive else (alive & ~self.down)
+                upd = settled & ~self.af_active
+                near = self.af_active & settled & env
+            if near.any():
+                for i in np.flatnonzero(near):
+                    lvl = int(self.af_level[i])
+                    self.recoveries[i].append({
+                        "t_start": float(self.af_t0[i]),
+                        "kind": KINDS[int(self.af_kind[i])],
+                        "ci": float(self.af_ci[i]),
+                        "restore_level": LEVELS[lvl] if lvl >= 0 else None,
+                        "plan": self.lane_plan_name[i],
+                        "t_end": float(t[i]),
+                        "recovery_s": float(t[i] - self.af_t0[i]),
+                    })
+                self.af_active &= ~near
+            self.steady_lag = np.where(
+                upd, 0.9 * self.steady_lag + 0.1 * self.lag, self.steady_lag)
+        elif not down_any and all_alive:
+            self.steady_lag *= 0.9
+            self.steady_lag += 0.1 * self.lag
+        else:
+            upd = (~self.down if all_alive else (alive & ~self.down))
+            self.steady_lag = np.where(
+                upd, 0.9 * self.steady_lag + 0.1 * self.lag, self.steady_lag)
+
+        if all_alive:
+            self.t += 1.0          # in-place: nothing holds the old clock
+        else:
+            self.t = np.where(alive, t + 1.0, t)
+        self._step_idx += 1
+
+    def run(self, n_ticks: Optional[int] = None) -> "BatchedCampaign":
+        end = self.horizon if n_ticks is None \
+            else min(self.horizon, self._step_idx + n_ticks)
+        while self._step_idx < end:
+            self._step()
+        return self
+
+    # -- results --------------------------------------------------------
+    @property
+    def rates(self) -> np.ndarray:
+        """(N, T) dense λ matrix (lane-major view of the time-major store)."""
+        return self._rates_tm.T
+
+    @property
+    def lag_hist(self) -> Optional[np.ndarray]:
+        """(N, T) consumer-lag history, one row per lane."""
+        return None if self._lag_hist_tm is None else self._lag_hist_tm.T
+
+    @property
+    def ticks_run(self) -> int:
+        """Total alive lane-ticks advanced so far (the throughput unit)."""
+        return int(np.minimum(self.lane_ticks, self._step_idx).sum())
+
+    def times(self, lane: int) -> np.ndarray:
+        """The tick clock of ``lane`` (t values its samples were taken at)."""
+        return self.t0[lane] + np.arange(int(self.lane_ticks[lane]))
+
+    def latency_history(self) -> np.ndarray:
+        """(N, T) end-to-end latency, derived exactly as the scalar tick
+        derives its 'latency' metric from lag."""
+        assert self._lag_hist_tm is not None, \
+            "campaign ran with record_history=False"
+        steady_mu = max(self.cost.capacity_eps, 1e-9)
+        return self.cost.base_latency_s + self.lag_hist / steady_mu
+
+    def lane_recovery(self, lane: int) -> Optional[float]:
+        """First recorded recovery_s of ``lane`` (scalar: recoveries[0])."""
+        r = self.recoveries[lane]
+        return float(r[0]["recovery_s"]) if r else None
+
+
+# boolean wipe masks indexed by kind id, built once at import
+_WIPE_MASK = np.zeros((len(KINDS), 3), dtype=bool)
+for _k, _levels in _WIPES.items():
+    for _l in _levels:
+        _WIPE_MASK[_KIND_ID[_k], LEVELS.index(_l)] = True
+
+
+# ---------------------------------------------------------------------------
+# Profile-style measurement (SimDeployment.profile_failure semantics)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class LaneMeasurement:
+    latency_s: float
+    recovery_s: float
+    recovered: bool
+
+
+def measure_profile_lanes(camp: BatchedCampaign, inject_ts: Sequence[float],
+                          margin: float, max_recovery_s: float
+                          ) -> list[LaneMeasurement]:
+    """Post-hoc replication of ``SimDeployment.profile_failure``'s on_tick
+    measurement over a finished campaign: per lane, pre-failure latency
+    (capped median over the margin window) and recovery (consumer lag back
+    inside the pre-failure envelope, after the detection timeout).  The
+    scalar path computes these inside the tick loop; with full lag
+    histories recorded they are pure array reductions.
+    """
+    cost = camp.cost
+    lat_hist = camp.latency_history()
+    out: list[LaneMeasurement] = []
+    for i, inject_t in enumerate(inject_ts):
+        ts = camp.times(i)
+        n = len(ts)
+        lag = camp.lag_hist[i, :n]
+        lam = camp.rates[i, :n]
+        pre = (ts >= inject_t - margin) & (ts < inject_t)
+        lat_samples = lat_hist[i, :n][pre]
+        lag_samples = lag[pre]
+        # steady threshold fixed at the first post-injection tick
+        post = np.flatnonzero(ts >= inject_t)
+        recovery, recovered = max_recovery_s, False
+        if post.size:
+            k0 = post[0]
+            base = float(np.mean(lag_samples)) if lag_samples.size else 0.0
+            steady = max(2.0 * float(lam[k0]), 1.2 * base + 1.0)
+            t_end = inject_t + max_recovery_s
+            ok = (ts > inject_t + cost.detect_s) & (ts >= inject_t) \
+                & (ts < t_end) & (lag <= steady)
+            hit = np.flatnonzero(ok)
+            if hit.size:
+                recovery, recovered = float(ts[hit[0]] - inject_t), True
+        if lat_samples.size:
+            latency = float(min(np.median(lat_samples), 30.0))
+        else:
+            latency = cost.base_latency_s
+        out.append(LaneMeasurement(latency, recovery, recovered))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Phase-2 profiling over lanes (implements core.profiler.CampaignDeployment)
+# ---------------------------------------------------------------------------
+
+class BatchedDeployment:
+    """All z CIs x m failure points profiled in ONE batched sweep.
+
+    The paper runs its profiling deployments in parallel on Kubernetes;
+    here each (CI, failure point) pair is one lane of a single
+    ``BatchedCampaign``, so the whole Phase-2 grid advances together —
+    statistics identical to the sequential ``SimDeployment`` loop (same
+    worst-case injection, same lag-envelope recovery signal), wall-clock
+    divided by the lane count.
+    """
+
+    def __init__(self, cost: SimCostModel, recording: WorkloadRecording,
+                 warmup_s: float = 300.0, max_recovery_s: float = 7200.0):
+        self.cost = cost
+        self.recording = recording
+        self.warmup_s = warmup_s
+        self.max_recovery_s = max_recovery_s
+        self.last_campaign: Optional[BatchedCampaign] = None
+
+    def profile_campaign(self, failure_times, ci_values, margin: float
+                         ) -> tuple[np.ndarray, np.ndarray]:
+        """(m, z) latency and recovery matrices for the full grid."""
+        ci_values = np.asarray(ci_values, dtype=np.float64)
+        failure_times = np.asarray(failure_times, dtype=np.float64)
+        injector = FailureInjector()
+        lanes, inject_ts = [], []
+        for j, ci in enumerate(ci_values):
+            for i, ft in enumerate(failure_times):
+                t0 = max(float(self.recording.times[0]),
+                         float(ft) - margin - self.warmup_s)
+                # worst case: just before the next checkpoint completes
+                inject_t = injector.worst_case_time(
+                    float(ft), t0, float(ci), self.cost.ckpt_duration_s)
+                n = int(np.ceil(inject_t + self.max_recovery_s - t0))
+                lanes.append(LaneSpec(
+                    rates=dense_rates(t0, n, recording=self.recording),
+                    ci_s=float(ci), t0=t0, failures=((inject_t, "node"),),
+                    tag={"ci_index": j, "fp_index": i}))
+                inject_ts.append(inject_t)
+        camp = BatchedCampaign(self.cost, lanes).run()
+        self.last_campaign = camp
+        meas = measure_profile_lanes(camp, inject_ts, margin,
+                                     self.max_recovery_s)
+        z, m = len(ci_values), len(failure_times)
+        L = np.zeros((m, z))
+        R = np.zeros((m, z))
+        for lane, msr in zip(lanes, meas):
+            L[lane.tag["fp_index"], lane.tag["ci_index"]] = msr.latency_s
+            R[lane.tag["fp_index"], lane.tag["ci_index"]] = msr.recovery_s
+        return L, R
+
+
+# ---------------------------------------------------------------------------
+# optimize_plan simulate-to-verify hook
+# ---------------------------------------------------------------------------
+
+def make_plan_verifier(cost: SimCostModel,
+                       recording: Optional[WorkloadRecording] = None,
+                       schedule: Optional[RateSchedule] = None,
+                       failure_mix: Sequence[tuple[str, float]] = (
+                           ("task", 0.30), ("node", 0.65), ("cluster", 0.05)),
+                       warmup_s: float = 300.0, margin_s: float = 90.0,
+                       max_recovery_s: float = 3600.0):
+    """Build the ``optimize_plan(verifier=...)`` callback: top-k plan
+    candidates are replayed through one batched campaign — one lane per
+    (candidate, failure kind) with worst-case injection — and scored by
+    MEASURED pre-failure latency and kind-mixed recovery, instead of the
+    re-priced QoS surfaces alone."""
+    assert recording is not None or schedule is not None
+
+    def verify(cands: Sequence[tuple[CheckpointPlan, float]]) -> list[dict]:
+        lanes, inject_ts = [], []
+        injector = FailureInjector()
+        for plan, ci in cands:
+            t_req = warmup_s + 3.0 * ci + 5.0
+            inject_t = injector.worst_case_time(t_req, 0.0, ci,
+                                                cost.ckpt_duration_s)
+            n = int(np.ceil(inject_t + max_recovery_s))
+            rates = dense_rates(0.0, n, recording, schedule)
+            for kind, _w in failure_mix:
+                lanes.append(LaneSpec(
+                    rates=rates, ci_s=float(ci), plan=plan,
+                    failures=((inject_t, kind),), tag={"kind": kind}))
+                inject_ts.append(inject_t)
+        camp = BatchedCampaign(cost, lanes).run()
+        meas = measure_profile_lanes(camp, inject_ts, margin_s,
+                                     max_recovery_s)
+        out: list[dict] = []
+        k = len(failure_mix)
+        for c in range(len(cands)):
+            block = meas[c * k:(c + 1) * k]
+            per_kind = {kind: block[j].recovery_s
+                        for j, (kind, _w) in enumerate(failure_mix)}
+            recovery = sum(w * block[j].recovery_s
+                           for j, (_kind, w) in enumerate(failure_mix))
+            out.append({"latency_s": block[0].latency_s,
+                        "recovery_s": float(recovery),
+                        "per_kind": per_kind})
+        return out
+
+    return verify

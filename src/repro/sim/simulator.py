@@ -32,12 +32,13 @@ import numpy as np
 from repro.checkpoint.policy import CheckpointPolicy
 from repro.config import CheckpointPlan
 from repro.core.anomaly import AnomalyDetector
-from repro.data.stream import RateSchedule, WorkloadRecording
+from repro.data.stream import RateSchedule, WorkloadRecording, dense_rates
 from repro.ft.failures import FailureInjector
 from repro.metrics import MetricsStore
 from repro.sim.costmodel import SimCostModel, levels_due
 
 _LEVEL_SPEED = {"memory": 2, "local": 1, "remote": 0}
+_RATE_CHUNK = 4096    # ticks of λ(t) precomputed per refill (see rates_until)
 
 
 @dataclass
@@ -83,12 +84,35 @@ class StreamSimulator:
         self.recoveries: list[dict] = []
         self._active_failure: Optional[dict] = None
         self._steady_lag = 0.0
+        # dense λ(t) buffer: the tick loop reads an array slot instead of
+        # paying a Python call per tick (recordings resolve vectorized)
+        self._rate_buf: Optional[np.ndarray] = None
+        self._rate_idx = 0
 
     # ------------------------------------------------------------------
     def rate_at(self, t: float) -> float:
         if self.recording is not None:
             return self.recording.rate_at(t)
         return self.schedule(t)
+
+    def rates_until(self, t_end: float) -> np.ndarray:
+        """Dense per-tick λ array for [self.t, t_end) — the precomputed form
+        both this simulator's tick loop and the batched engine consume."""
+        n = max(0, int(np.ceil(t_end - self.t)))
+        return dense_rates(self.t, n, self.recording, self.schedule)
+
+    def _next_rate(self) -> float:
+        """λ at the current tick, from the dense buffer (refilled in
+        ``_RATE_CHUNK``-tick blocks).  The buffer's time grid is exactly the
+        tick clock (t advances by exact +1.0 steps), so values match
+        per-tick ``rate_at`` calls bit-for-bit."""
+        if self._rate_buf is None or self._rate_idx >= len(self._rate_buf):
+            self._rate_buf = dense_rates(self.t, _RATE_CHUNK,
+                                         self.recording, self.schedule)
+            self._rate_idx = 0
+        lam = float(self._rate_buf[self._rate_idx])
+        self._rate_idx += 1
+        return lam
 
     def inject_failure(self, t: float, kind: str = "node") -> None:
         self.failures.append(FailureEvent(t, kind))
@@ -122,7 +146,7 @@ class StreamSimulator:
     def tick(self) -> dict:
         """Advance one second; returns the metrics sample emitted."""
         t = self.t
-        lam = self.rate_at(t)
+        lam = self._next_rate()
         self.produced += lam
         cost = self.cost
 

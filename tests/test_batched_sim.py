@@ -1,0 +1,246 @@
+"""Lane-batched campaign engine: lane-vs-scalar equivalence, batched
+Phase-2 profiling, dense-rate precompute, and the optimize_plan
+simulate-to-verify pass."""
+import numpy as np
+import pytest
+
+from repro.config import CheckpointPlan
+from repro.core import (QoSModel, optimize_plan, run_profiling,
+                        run_profiling_campaign, select_failure_points)
+from repro.data.stream import (constant_rate, dense_rates, diurnal_rate,
+                               record_workload)
+from repro.ft.failures import FailureInjector
+from repro.sim import (BatchedCampaign, BatchedDeployment, LaneSpec,
+                       SimCostModel, SimDeployment, StreamSimulator,
+                       make_plan_verifier)
+
+COST = SimCostModel(capacity_eps=4600.0, base_latency_s=0.5,
+                    ckpt_duration_s=3.0, ckpt_sync_penalty=0.6)
+PLANS = [
+    None,                                              # full-sync default
+    CheckpointPlan(sync=False),                        # full-async
+    CheckpointPlan(mode="incremental", full_every=8, sync=False),
+    CheckpointPlan(mode="incremental", full_every=4,   # multi-level delta
+                   levels=("memory", "local", "remote"),
+                   local_every=1, remote_every=8),
+]
+KINDS = ("task", "node", "cluster")
+
+
+def _worst_case(ci):
+    return FailureInjector().worst_case_time(3 * ci + 5.0, 0.0, ci,
+                                             COST.ckpt_duration_s)
+
+
+def _scalar_twin(ci, plan, kind, inject_t, t_end, schedule):
+    sim = StreamSimulator(COST, ci_s=ci, schedule=schedule, plan=plan)
+    sim.inject_failure(inject_t, kind)
+    sim.run_until(t_end)
+    return sim
+
+
+def test_lane_matches_scalar_across_plans_and_kinds():
+    """Fixed-seed campaign: every lane's full lag trajectory, recovery time
+    and conservation totals match its scalar StreamSimulator twin exactly —
+    multi-level delta plans and all three failure kinds included."""
+    T = 4000
+    sched = constant_rate(3000.0)
+    lanes, scalars = [], []
+    for ci in (30.0, 90.0):
+        for plan in PLANS:
+            for kind in KINDS:
+                t = _worst_case(ci)
+                scalars.append(_scalar_twin(ci, plan, kind, t, T, sched))
+                lanes.append(LaneSpec(
+                    rates=dense_rates(0.0, T, schedule=sched),
+                    ci_s=ci, plan=plan, failures=((t, kind),)))
+    camp = BatchedCampaign(COST, lanes).run()
+    for i, sim in enumerate(scalars):
+        lag_scalar = np.array(sim.metrics.series("consumer_lag").values)
+        np.testing.assert_array_equal(lag_scalar, camp.lag_hist[i],
+                                      err_msg=f"lane {i} lag diverged")
+        rec_scalar = sim.recoveries[0]["recovery_s"] if sim.recoveries else None
+        assert camp.lane_recovery(i) == rec_scalar, f"lane {i} recovery"
+        assert camp.produced[i] == sim.produced
+        assert camp.consumed[i] == sim.consumed
+        assert camp.ckpt_count[i] == sim.ckpt_count
+        if sim.recoveries:
+            r_s, r_b = sim.recoveries[0], camp.recoveries[i][0]
+            assert r_b["kind"] == r_s["kind"]
+            assert r_b["restore_level"] == r_s["restore_level"]
+            assert r_b["plan"] == r_s["plan"]
+
+
+def test_lane_matches_scalar_on_real_valued_schedule():
+    """Non-integer λ(t) exercises every FP rounding in the rollback path —
+    the batched tick must keep the scalar's association order exactly."""
+    sched = diurnal_rate(base=2800, amplitude=0.5, period=5400, seed=13)
+    T = 3000
+    for ci, kind in ((25.0, "node"), (70.0, "cluster")):
+        t = _worst_case(ci)
+        sim = _scalar_twin(ci, PLANS[3], kind, t, T, sched)
+        lane = LaneSpec(rates=dense_rates(0.0, T, schedule=sched), ci_s=ci,
+                        plan=PLANS[3], failures=((t, kind),))
+        camp = BatchedCampaign(COST, [lane]).run()
+        np.testing.assert_array_equal(
+            np.array(sim.metrics.series("consumer_lag").values),
+            camp.lag_hist[0])
+        rec = sim.recoveries[0]["recovery_s"] if sim.recoveries else None
+        assert camp.lane_recovery(0) == rec
+        assert camp.produced[0] == sim.produced
+        assert camp.consumed[0] == sim.consumed
+
+
+def test_lane_matches_scalar_on_recording_with_offset_clock():
+    """Recording-driven lane starting at t0 > 0 (the Phase-2 shape)."""
+    sched = diurnal_rate(base=2600, amplitude=0.4, period=7200, seed=5)
+    rec = record_workload(sched, duration=7200, seed=5)
+    t0, ci = 1000.0, 45.0
+    inject_t = FailureInjector().worst_case_time(1500.0, t0, ci,
+                                                COST.ckpt_duration_s)
+    t_end = 4000.0
+    sim = StreamSimulator(COST, ci_s=ci, recording=rec, t0=t0)
+    sim.inject_failure(inject_t)
+    sim.run_until(t_end)
+    n = int(t_end - t0)
+    lane = LaneSpec(rates=rec.rates_until(t_end, t0=t0), ci_s=ci, t0=t0,
+                    failures=((inject_t, "node"),))
+    camp = BatchedCampaign(COST, [lane]).run()
+    assert camp.lane_ticks[0] == n
+    np.testing.assert_array_equal(
+        np.array(sim.metrics.series("consumer_lag").values),
+        camp.lag_hist[0][:n])
+    rec_scalar = sim.recoveries[0]["recovery_s"] if sim.recoveries else None
+    assert camp.lane_recovery(0) == rec_scalar
+
+
+def test_batched_profiling_matches_sequential_deployments():
+    """run_profiling_campaign == run_profiling(SimDeployment) on the same
+    (CI x failure point) grid — the sequential-deployments deviation is
+    closed without changing the statistics."""
+    sched = diurnal_rate(base=1500, amplitude=0.4, period=7200, seed=3)
+    rec = record_workload(sched, duration=7200, seed=3)
+    ss = select_failure_points(rec, m=3, smoothing_window=30)
+    cost = SimCostModel(capacity_eps=2600.0, ckpt_duration_s=1.5)
+    cis = [30, 240]
+    seq = run_profiling(
+        lambda ci: SimDeployment(ci, rec, cost, warmup_s=200,
+                                 max_recovery_s=3600.0),
+        ss, cis, margin=60)
+    bat = run_profiling_campaign(
+        BatchedDeployment(cost, rec, warmup_s=200, max_recovery_s=3600.0),
+        ss, cis, margin=60)
+    np.testing.assert_allclose(bat.latencies, seq.latencies, atol=1e-9)
+    np.testing.assert_allclose(bat.recoveries, seq.recoveries, atol=1e-9)
+    # and the premise survives: recovery grows with CI on average
+    assert bat.recoveries[:, 1].mean() > bat.recoveries[:, 0].mean()
+
+
+def test_dense_rates_matches_per_tick_calls():
+    sched = diurnal_rate(base=1200, amplitude=0.5, period=3600, seed=2)
+    rec = record_workload(sched, duration=600, seed=2)
+    t0, n = 37.0, 400
+    dense_sched = dense_rates(t0, n, schedule=sched)
+    dense_rec = dense_rates(t0, n, recording=rec)
+    for k in (0, 1, 57, 399):
+        t = t0 + float(k)
+        assert dense_sched[k] == sched(t)
+        assert dense_rec[k] == rec.rate_at(t)
+    np.testing.assert_array_equal(rec.rates_until(t0 + n, t0=t0), dense_rec)
+
+
+def test_scalar_sim_rate_buffer_matches_rate_at():
+    """The buffered tick-loop λ equals the per-tick rate_at call."""
+    sched = diurnal_rate(base=900, amplitude=0.6, period=1800, seed=11)
+    sim = StreamSimulator(SimCostModel(capacity_eps=2000.0), ci_s=60.0,
+                          schedule=sched, t0=13.0)
+    sim.run_until(13.0 + 500)
+    ts = np.array(sim.metrics.series("arrival_rate").times)
+    vs = np.array(sim.metrics.series("arrival_rate").values)
+    assert len(ts) == 500
+    for t, v in zip(ts[::37], vs[::37]):
+        assert v == sim.rate_at(t)
+
+
+@pytest.mark.tier1
+def test_campaign_smoke():
+    """Fast gate: a small mixed campaign runs end-to-end, conserves events
+    on failure-free lanes and measures recovery on the chaos lanes."""
+    T = 1200
+    sched = constant_rate(2000.0)
+    cost = SimCostModel(capacity_eps=3000.0, ckpt_duration_s=1.0)
+    t = FailureInjector().worst_case_time(150.0, 0.0, 30.0, 1.0)
+    lanes = [
+        LaneSpec(rates=dense_rates(0.0, T, schedule=sched), ci_s=30.0),
+        LaneSpec(rates=dense_rates(0.0, T, schedule=sched), ci_s=30.0,
+                 failures=((t, "node"),)),
+        LaneSpec(rates=dense_rates(0.0, T, schedule=sched), ci_s=60.0,
+                 plan=CheckpointPlan(sync=False), failures=((t, "task"),)),
+        LaneSpec(rates=dense_rates(0.0, T, schedule=sched), ci_s=60.0,
+                 plan=PLANS[3], failures=((t, "cluster"),)),
+    ]
+    camp = BatchedCampaign(cost, lanes).run()
+    # failure-free lane: produced == consumed + lag (no rollback)
+    assert abs(camp.produced[0] - (camp.consumed[0] + camp.lag[0])) < 1e-6
+    assert camp.ckpt_count[0] >= 30
+    for i in (1, 2, 3):
+        assert camp.lane_recovery(i) is not None, f"lane {i} never recovered"
+        assert camp.lane_recovery(i) > cost.downtime_s()
+    # multi-level plan survives the cluster failure via the remote level
+    assert camp.recoveries[3][0]["restore_level"] == "remote"
+    assert camp.ticks_run == 4 * T
+
+
+def test_optimize_plan_simulate_to_verify():
+    """The verifier replays the surface top-k and re-ranks by measured
+    objective; replayed candidates carry their measurement."""
+    cost = SimCostModel(capacity_eps=2600.0, ckpt_duration_s=1.5)
+    rng = np.random.default_rng(0)
+    ci = rng.uniform(10, 120, 200)
+    tr = rng.uniform(1000, 2200, 200)
+    m_l = QoSModel().fit(ci, tr, cost.base_latency_s + 40.0 / ci + tr * 1e-5)
+    m_r = QoSModel().fit(ci, tr, 80.0 + 1.2 * ci + 0.01 * tr)
+    calls = []
+    real = make_plan_verifier(cost, schedule=constant_rate(1500.0),
+                              warmup_s=120, max_recovery_s=1200.0)
+
+    def verifier(cands):
+        calls.append(list(cands))
+        return real(cands)
+
+    res = optimize_plan(m_l, m_r, tr_avg=1500.0, l_const=2.0, r_const=600.0,
+                        p=1.0, ci_min=10, ci_max=120, cost=cost,
+                        verifier=verifier, verify_top_k=2)
+    assert res.verified and res.feasible
+    assert len(calls) == 1 and len(calls[0]) == 2
+    replayed = [c for c in res.candidates if c.sim is not None]
+    assert len(replayed) == 2
+    for c in replayed:
+        assert {"latency_s", "recovery_s", "objective", "feasible"} <= set(c.sim)
+    # the chosen plan is one of the replayed shortlist
+    assert res.plan.name in {c.plan.name for c in replayed} or res.plan is None
+
+
+def test_campaign_scales_to_large_grids():
+    """>= 200 lanes advance in one sweep and every lane stays independent
+    (spot-check a lane in the middle against its scalar twin)."""
+    T = 1500
+    sched = constant_rate(3000.0)
+    lanes = []
+    for ci in np.geomspace(10, 240, 18):
+        for plan in PLANS:
+            for kind in KINDS:
+                t = _worst_case(float(ci))
+                lanes.append(LaneSpec(rates=dense_rates(0.0, T, schedule=sched),
+                                      ci_s=float(ci), plan=plan,
+                                      failures=((t, kind),)))
+    assert len(lanes) >= 200
+    camp = BatchedCampaign(COST, lanes).run()
+    assert camp.ticks_run == len(lanes) * T
+    i = 101
+    spec = lanes[i]
+    sim = _scalar_twin(spec.ci_s, spec.plan, KINDS[101 % 3],
+                       spec.failures[0][0], T, sched)
+    np.testing.assert_array_equal(
+        np.array(sim.metrics.series("consumer_lag").values),
+        camp.lag_hist[i])

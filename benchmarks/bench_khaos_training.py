@@ -2,9 +2,16 @@
 
 Takes a real architecture's roofline record (experiments/dryrun.json), the
 measured checkpoint economics (TrainState bytes over host disk bandwidth)
-and a cluster failure model, then runs the full three-phase pipeline to
-pick the checkpoint interval for a continual-training job ingesting a
-variable document stream — against Young/Daly and naive statics.
+and a cluster failure model, then runs the full three-phase pipeline —
+sequenced by ``KhaosRuntime`` — to pick the checkpoint interval for a
+continual-training job ingesting a variable document stream, against
+Young/Daly and naive statics.
+
+The day-scale evaluation no longer ticks the scalar engine one
+configuration at a time: Khaos AND every static baseline run as lanes of
+ONE ``BatchedCampaign``, with the Khaos lane supervised controller-in-the-
+loop (``KhaosRuntime.drive_campaign`` + ``BatchedLaneHandle``) — the
+Phase-3 counterpart of the batched Phase-2 profiling.
 
 This is the thesis of the adaptation (DESIGN.md §2): the paper's insight
 transfers verbatim once "events/s" means "sequences/s" and "consumer lag"
@@ -19,14 +26,11 @@ import numpy as np
 
 from repro.config import KhaosConfig
 from repro.configs import get_config
-from repro.core import (KhaosController, QoSModel, optimize_plan,
-                        run_profiling_campaign, select_failure_points,
-                        young_daly_interval)
-from repro.data.stream import diurnal_rate, record_workload
+from repro.core import (KhaosRuntime, optimize_plan, young_daly_interval)
+from repro.data.stream import dense_rates, diurnal_rate, record_workload
 from repro.ft.failures import FailureModel
-from repro.sim import (BatchedDeployment, SimCostModel, SimJobHandle,
-                       StreamSimulator, costmodel_from_arch,
-                       make_plan_verifier)
+from repro.sim import (BatchedCampaign, BatchedDeployment, LaneSpec,
+                       costmodel_from_arch, make_plan_verifier)
 
 DAY = 86_400.0
 
@@ -63,18 +67,22 @@ def bench_khaos_training(arch: str = "yi-6b"):
     yd = young_daly_interval(cm.ckpt_duration_s, mtbf)
     print(f"cluster MTBF {mtbf/3600:.1f}h -> Young/Daly CI = {yd:.0f}s")
 
-    # Phase 1+2: record, then profile the whole (CI x failure-point) grid
-    # as lanes of ONE batched campaign (the paper's parallel deployments)
+    # the one phase machine drives Phase 1 -> 2 -> 3
     recording = record_workload(sched, duration=14_400.0, seed=7)
-    ss = select_failure_points(recording, m=4, smoothing_window=60)
     ci_grid = np.geomspace(max(10.0, yd / 8), yd * 2.5, 6)
-    prof = run_profiling_campaign(
+    kcfg = KhaosConfig(latency_constraint=4.0 * bound,
+                       recovery_constraint=450.0,
+                       optimization_period=300.0,
+                       ci_min=float(ci_grid[0]), ci_max=float(ci_grid[-1]),
+                       reconfig_cooldown=1800.0,
+                       num_failure_points=4, smoothing_window=60)
+    rt = KhaosRuntime(kcfg)
+    rt.record_steady_state(recording)
+    prof = rt.run_profiling(
         BatchedDeployment(cm, recording, warmup_s=600,
                           max_recovery_s=3600.0),
-        ss, ci_grid, margin=120)
-    ci_f, tr_f, L_f, R_f = prof.flat()
-    m_l = QoSModel().fit(ci_f, tr_f, L_f)
-    m_r = QoSModel().fit(ci_f, tr_f, np.minimum(R_f, 3600.0))
+        ci_grid, margin=120)
+    m_l, m_r = rt.m_l, rt.m_r
 
     # Phase 3 mechanism search with the simulate-to-verify pass: top plan
     # candidates are replayed through a batched campaign before committing
@@ -91,13 +99,7 @@ def bench_khaos_training(arch: str = "yi-6b"):
               f"{plan_opt.plan.name} @ CI={plan_opt.ci:.0f}s "
               f"(verified={plan_opt.verified})")
 
-    kcfg = KhaosConfig(latency_constraint=4.0 * bound,
-                       recovery_constraint=450.0,
-                       optimization_period=300.0,
-                       ci_min=float(ci_grid[0]), ci_max=float(ci_grid[-1]),
-                       reconfig_cooldown=1800.0)
-    ctl = KhaosController(cfg=kcfg, m_l=m_l, m_r=m_r)
-    ci0 = ctl.initial_ci(float(np.mean(recording.counts)))
+    ci0 = rt.initial_ci(float(np.mean(recording.counts)))
     print(f"Khaos initial CI (Eq. 8) = {ci0 and round(ci0)}s")
 
     # one shared failure schedule so every configuration faces the same day
@@ -105,35 +107,35 @@ def bench_khaos_training(arch: str = "yi-6b"):
     while t < DAY:
         t = fm.next_failure_after(t)
         if t < DAY:
-            shared_fails.append(t)
+            shared_fails.append((t, "node"))
 
-    def run(name, ci_static=None, controller=None):
-        sim = StreamSimulator(cm, ci_s=ci_static or ci0 or yd, schedule=sched,
-                              flink_semantics=False)   # hot CI swap on TPU
-        job = SimJobHandle(sim)
-        rng_fails = shared_fails
-        for ft in rng_fails:
-            sim.inject_failure(ft)
-        while sim.t < DAY:
-            sim.tick()
-            if controller is not None:
-                controller.maybe_optimize(job)
-        thr = np.array(sim.metrics.series("throughput").values)
-        goodput = thr.sum() / (cm.capacity_eps * DAY)
-        recs = [r["recovery_s"] for r in sim.recoveries]
+    # Khaos + every static baseline as lanes of ONE campaign; only the
+    # Khaos lane gets a controller (hot CI swap on TPU: no flink restart)
+    configs = [("Khaos", ci0 or yd),
+               (f"YoungDaly {yd:.0f}s", yd),
+               ("static 60s", 60.0),
+               ("static 1800s", 1800.0)]
+    day_rates = dense_rates(0.0, int(DAY), schedule=sched)
+    lanes = [LaneSpec(rates=day_rates, ci_s=float(ci),
+                      failures=tuple(shared_fails), tag={"name": name})
+             for name, ci in configs]
+    camp = BatchedCampaign(cm, lanes, flink_semantics=False)
+    sup = rt.drive_campaign(camp, lanes=[0])
+
+    results = {}
+    for i, (name, _ci) in enumerate(configs):
+        goodput = camp.processed_total[i] / (cm.capacity_eps * DAY)
+        recs = [r["recovery_s"] for r in camp.recoveries[i]]
         viol = sum(max(0.0, r - kcfg.recovery_constraint) for r in recs)
+        n_reconf = len(sup.reconfigurations(0)) if i == 0 else 0
         print(f"{name:>16s}: goodput {100*goodput:5.1f}%  "
-              f"ckpts {sim.ckpt_count:4d}  failures {len(rng_fails)}  "
+              f"ckpts {camp.ckpt_count[i]:4d}  failures {len(shared_fails)}  "
               f"recoveries {[round(r) for r in recs]}  "
-              f"rec-viol {viol:6.0f}s  reconfigs {len(job.reconfigurations)}")
-        return goodput, viol
-
-    results = {
-        "Khaos": run("Khaos", controller=ctl),
-        "YoungDaly": run(f"YoungDaly {yd:.0f}s", ci_static=yd),
-        "static 60s": run("static 60s", ci_static=60.0),
-        "static 1800s": run("static 1800s", ci_static=1800.0),
-    }
+              f"rec-viol {viol:6.0f}s  reconfigs {n_reconf}")
+        results[name] = (goodput, viol)
+    print(f"phase machine: {' -> '.join(rt.phase_sequence())}  "
+          f"(controller-in-the-loop lane decisions: "
+          f"{sup.summary()['decisions_by_kind']})")
     return results
 
 

@@ -15,8 +15,10 @@ bench_sim/1 schema:
   e4                   the equivalence gate: per-CI latency/recovery from
                        BOTH engines, wall-clocks, max absolute divergence
   grid                 the throughput measurement: lanes, lane_ticks,
-                       wall_s, lane_ticks_per_s, recovered_fraction, and
-                       the scenario axes the lanes span
+                       wall_s, lane_ticks_per_s, recovered_fraction,
+                       compactions/lanes_compacted (lane-level early exit:
+                       recovered lanes are compacted out of the arrays),
+                       and the scenario axes the lanes span
   scalar_ticks_per_s   the scalar loop's measured tick rate
   speedup              grid lane-ticks/s over scalar ticks/s (the >= 20x
                        campaign-throughput target)
@@ -149,12 +151,16 @@ def grid_lanes(cost: SimCostModel, n_cis: int = 18,
 
 
 def bench_grid(cost: SimCostModel, repeats: int = 3) -> dict:
+    """Throughput grid with lane-level early exit: recovered lanes are
+    compacted out of the array state instead of ticking to the longest
+    horizon (the compaction counters are part of the artifact)."""
     lanes = grid_lanes(cost)
     walls = []
     camp = None
     for _ in range(repeats):
         t0 = time.perf_counter()
-        camp = BatchedCampaign(cost, lanes, record_history=False).run()
+        camp = BatchedCampaign(cost, lanes, record_history=False,
+                               early_exit=True).run()
         walls.append(time.perf_counter() - t0)
     wall = float(np.median(walls))
     recovered = sum(1 for r in camp.recoveries if r)
@@ -164,6 +170,8 @@ def bench_grid(cost: SimCostModel, repeats: int = 3) -> dict:
         "wall_s": wall,
         "lane_ticks_per_s": camp.ticks_run / wall,
         "recovered_fraction": recovered / len(lanes),
+        "compactions": int(camp.compactions),
+        "lanes_compacted": int(camp.lanes_compacted),
         "ci_grid": [10.0, 240.0, 18],
         "plans": [n for n, _ in GRID_PLANS],
         "kinds": list(GRID_KINDS),
@@ -219,9 +227,11 @@ def validate_sim_artifact(art: dict) -> None:
         raise ValueError("batched E4 latency diverged from the scalar oracle")
     g = art["grid"]
     for k in ("lanes", "lane_ticks", "wall_s", "lane_ticks_per_s",
-              "recovered_fraction"):
+              "recovered_fraction", "compactions", "lanes_compacted"):
         if k not in g or not isinstance(g[k], (int, float)) or g[k] < 0:
             raise ValueError(f"grid.{k} missing or not a non-negative number")
+    if g["lanes_compacted"] > g["lanes"]:
+        raise ValueError("lanes_compacted exceeds the lane count")
     if not (0.0 < g["recovered_fraction"] <= 1.0):
         raise ValueError(f"implausible recovered_fraction {g['recovered_fraction']}")
     if art["speedup"] <= 0:
@@ -285,11 +295,14 @@ def smoke(tmpdir: str = "/tmp/repro_bench_sim_smoke") -> dict:
                       ci_s=float(ci), failures=((_worst_case(ci, cost), kind),))
              for ci in cis for kind in ("task", "node")]
     t0 = time.perf_counter()
-    camp = BatchedCampaign(cost, lanes, record_history=False).run()
+    camp = BatchedCampaign(cost, lanes, record_history=False,
+                           early_exit=True).run()
     wall = time.perf_counter() - t0
     grid = {"lanes": len(lanes), "lane_ticks": int(camp.ticks_run),
             "wall_s": wall, "lane_ticks_per_s": camp.ticks_run / wall,
             "recovered_fraction": sum(1 for r in camp.recoveries if r) / len(lanes),
+            "compactions": int(camp.compactions),
+            "lanes_compacted": int(camp.lanes_compacted),
             "plans": ["full-sync"], "kinds": ["task", "node"],
             "workloads": ["const"], "ci_grid": [float(cis[0]), float(cis[-1]), 2]}
     art = build_sim_artifact(scalar_rows, scalar_wall, scalar_ticks,

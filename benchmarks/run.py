@@ -14,11 +14,14 @@
 Usage: PYTHONPATH=src python -m benchmarks.run [--quick | --smoke]
 
 ``--smoke`` is the tier-1-adjacent CI check: it runs the E5 checkpoint
-bench on a tiny state and a tiny 4-lane E4 campaign, validating that the
-emitted BENCH_ckpt.json / BENCH_sim.json artifacts match their schemas
-("bench_ckpt/1" via ``SimCostModel.from_calibration``, "bench_sim/1" via
-``bench_recovery.validate_sim_artifact``) — exiting non-zero on any
-mismatch.
+bench on a tiny state, a tiny 4-lane E4 campaign, and a tiny end-to-end
+``KhaosRuntime`` (all three phases on a 4-lane controller-in-the-loop
+campaign + a micro live trainer with a mid-run plan switch), validating
+that the emitted BENCH_ckpt.json / BENCH_sim.json artifacts match their
+schemas ("bench_ckpt/1" via ``SimCostModel.from_calibration``,
+"bench_sim/1" via ``bench_recovery.validate_sim_artifact``) and that the
+phase order / JobHandle protocol have not regressed — exiting non-zero on
+any mismatch.
 """
 from __future__ import annotations
 
@@ -32,16 +35,18 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="single repetition for E1/E2 (default: median of 3)")
     ap.add_argument("--smoke", action="store_true",
-                    help="tiny-state bench_ckpt + BENCH_ckpt.json schema "
-                         "validation only (tier-1-adjacent check)")
+                    help="tiny-state bench_ckpt + BENCH artifact schema "
+                         "validation + end-to-end KhaosRuntime phase/"
+                         "protocol gate (tier-1-adjacent check)")
     args = ap.parse_args()
 
     t0 = time.monotonic()
     if args.smoke:
-        from benchmarks import bench_ckpt, bench_recovery
+        from benchmarks import bench_ckpt, bench_recovery, bench_runtime
         try:
             bench_ckpt.smoke()
             bench_recovery.smoke()
+            bench_runtime.smoke()
         except (ValueError, AssertionError) as e:
             print(f"SMOKE FAILED: {e}", file=sys.stderr)
             sys.exit(1)

@@ -1,52 +1,56 @@
-"""Quickstart: the whole Khaos loop in one minute on the simulator.
+"""Quickstart: the whole Khaos loop in one minute on the simulator —
+driven end-to-end by the ``KhaosRuntime`` phase machine (the one
+control-plane API; ``examples/train_stream.py`` drives the LIVE trainer
+through exactly the same sequence).
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
 from repro.config import KhaosConfig
-from repro.core import (KhaosController, QoSModel, run_profiling,
-                        select_failure_points, young_daly_interval)
+from repro.core import KhaosRuntime, young_daly_interval
 from repro.data.stream import diurnal_rate, record_workload
 from repro.ft.failures import FailureInjector
-from repro.sim import SimCostModel, SimDeployment, SimJobHandle, StreamSimulator
+from repro.sim import (BatchedDeployment, SimCostModel, SimJobHandle,
+                       StreamSimulator)
+
+kcfg = KhaosConfig(latency_constraint=1.0, recovery_constraint=500.0,
+                   optimization_period=60.0, ci_min=10, ci_max=120,
+                   num_failure_points=4)
+cost = SimCostModel(capacity_eps=4200.0, ckpt_duration_s=2.5,
+                    ckpt_sync_penalty=0.6)
+rt = KhaosRuntime(kcfg)
 
 # ---- Phase 1: record the stream, find failure points over the W(t) range --
 sched = diurnal_rate(base=2400, amplitude=0.5, period=7200, seed=5)
 recording = record_workload(sched, duration=7200, seed=5)
-steady = select_failure_points(recording, m=4, smoothing_window=30)
+steady = rt.record_steady_state(recording)
 print("Phase 1: failure points at throughputs",
       np.round(steady.failure_rates).astype(int).tolist(), "events/s")
 
-# ---- Phase 2: parallel profiling deployments with worst-case injection ----
-cost = SimCostModel(capacity_eps=4200.0, ckpt_duration_s=2.5,
-                    ckpt_sync_penalty=0.6)
-prof = run_profiling(lambda ci: SimDeployment(ci, recording, cost),
-                     steady, ci_values=[10, 40, 80, 120], margin=60)
+# ---- Phase 2: the whole (CI x failure point) grid as ONE batched campaign -
+prof = rt.run_profiling(BatchedDeployment(cost, recording),
+                        ci_values=[10, 40, 80, 120], margin=60)
 print("Phase 2: recovery grid R (failure-point x CI):")
 print(np.round(prof.recoveries).astype(int))
 
-# ---- Phase 3: fit M_L / M_R, monitor, optimize Eq. 8 at runtime -----------
-ci_f, tr_f, L_f, R_f = prof.flat()
-m_l = QoSModel().fit(ci_f, tr_f, L_f)
-m_r = QoSModel().fit(ci_f, tr_f, R_f)
-kcfg = KhaosConfig(latency_constraint=1.0, recovery_constraint=500.0,
-                   optimization_period=60.0, ci_min=10, ci_max=120)
-ctl = KhaosController(cfg=kcfg, m_l=m_l, m_r=m_r)
-ci0 = ctl.initial_ci(float(np.mean(recording.counts)))
+# ---- Phase 3: attach the job handle, monitor, optimize Eq. 8 at runtime ---
+ci0 = rt.initial_ci(float(np.mean(recording.counts)))
 print(f"Phase 3: initial CI from Eq. 8 = "
       f"{'infeasible' if ci0 is None else f'{ci0:.0f}s'} "
       f"(Young/Daly static would say {young_daly_interval(2.5, 7200):.0f}s)")
 
 sim = StreamSimulator(cost, ci_s=ci0 or 60.0, schedule=sched)
 job = SimJobHandle(sim)
+ctl = rt.attach(job)
+print("phase machine:", " -> ".join(rt.phase_sequence()))
 inj = FailureInjector()
 for ft in (1800.0, 4200.0):
     sim.inject_failure(inj.worst_case_time(ft, 0.0, sim.policy.interval_s,
                                            cost.ckpt_duration_s))
 while sim.t < 7200:
     sim.tick()
-    ctl.maybe_optimize(job)
+    rt.step()
 
 lat = np.array(sim.metrics.series("latency").values)
 print(f"run: avg latency {lat.mean()*1e3:.0f}ms, "

@@ -3,46 +3,24 @@ with Khaos-controlled checkpointing, failure injection and restart.
 
     PYTHONPATH=src python examples/train_stream.py --arch yi-6b --duration 90
 
+The control plane is the SAME ``KhaosRuntime``/``JobHandle`` machinery the
+simulator examples use — ``runtime.TrainerJobHandle`` implements the full
+protocol over the live trainer, including ``reconfigure_plan`` (drain +
+CheckpointManager rebuild), so a controller Decision can switch the
+checkpoint *mechanism* mid-run, not just the interval.
+
 The model is the reduced (smoke) config of the chosen architecture so a
 few hundred steps run on CPU; swap in the full config + a TPU mesh for the
 production path (launch/train.py assembles exactly the same pieces).
 """
 import argparse
 
-import numpy as np
-
 from repro.config import CheckpointPlan, KhaosConfig, OptimizerConfig
 from repro.configs import get_smoke_config
-from repro.core import KhaosController, QoSModel
+from repro.core import KhaosRuntime, demo_prior_models
 from repro.data.stream import EventStream, diurnal_rate
-from repro.runtime import ResilientTrainer, TrainerConfig
-
-
-class TrainerJobHandle:
-    """core.controller.JobHandle over the live trainer."""
-
-    def __init__(self, trainer: ResilientTrainer):
-        self.tr = trainer
-        self.reconfigurations = []
-
-    def now(self):
-        return self.tr.t
-
-    def current_ci(self):
-        return self.tr.policy.interval_s
-
-    def avg_latency(self, w):
-        return self.tr.metrics.series("latency").mean_over(self.tr.t - w, self.tr.t)
-
-    def avg_throughput(self, w):
-        return self.tr.stream.rate_at(self.tr.t)
-
-    def healthy(self):
-        return True
-
-    def reconfigure(self, new_ci):
-        self.reconfigurations.append((self.tr.t, new_ci))
-        self.tr.set_ci(new_ci)       # hot CI swap — no restart on this substrate
+from repro.runtime import ResilientTrainer, TrainerConfig, TrainerJobHandle
+from repro.sim import SimCostModel
 
 
 def main():
@@ -67,33 +45,38 @@ def main():
                                OptimizerConfig(total_steps=5000, lr=3e-3))
     trainer.inject_failure_at(args.fail_at)
 
-    # a pre-fit controller (in production the profiling phase fits these
-    # on the cluster; here we install a simple prior so the demo is short)
-    rng = np.random.default_rng(0)
-    ci = rng.uniform(5, 60, 64)
-    tr = rng.uniform(100, 800, 64)
-    m_l = QoSModel().fit(ci, tr, 0.05 + 2.0 / ci + tr * 1e-5)
-    m_r = QoSModel().fit(ci, tr, 4.0 + 1.0 * ci + tr * 5e-3)
-    ctl = KhaosController(
-        cfg=KhaosConfig(latency_constraint=1.0, recovery_constraint=20.0,
-                        optimization_period=10.0, ci_min=5, ci_max=60,
-                        reconfig_cooldown=20.0),
-        m_l=m_l, m_r=m_r)
+    # pre-fit models installed into the runtime (in production Phase 1+2
+    # fit these on the cluster; here a simple prior keeps the demo short)
+    m_l, m_r = demo_prior_models()
+    rt = KhaosRuntime(
+        KhaosConfig(latency_constraint=1.0, recovery_constraint=20.0,
+                    optimization_period=10.0, ci_min=5, ci_max=60,
+                    reconfig_cooldown=20.0),
+        # a cost model makes Eq. 8 search plan variants too: Decisions can
+        # then actuate the trainer's set_plan (drain + manager rebuild)
+        cost=SimCostModel(capacity_eps=500.0, ckpt_duration_s=0.5),
+        mtbf_s=600.0)
+    rt.install_models(m_l, m_r)
     job = TrainerJobHandle(trainer)
+    rt.attach(job)
 
     def on_second(sample):
-        ctl.maybe_optimize(job)
+        rt.step()
 
     summary = trainer.run(args.duration, on_second=on_second)
     print("\n=== train_stream summary ===")
     print(f"steps: {summary['final_step']}  "
           f"loss: {trainer.losses[0]:.3f} -> {summary['final_loss']:.3f}")
     print(f"checkpoints: {summary['checkpoints']}  failures: {summary['failures']}  "
-          f"restores: {summary['restores']}")
+          f"restores: {summary['restores']}  "
+          f"plan switches: {summary['plan_switches']}")
     st = summary["ckpt_stats"]
     print(f"checkpoint plane [{st['plan']}]: {st['bytes_by_kind']} bytes, "
           f"levels {st['saves_by_level']}, restores {st['restores']}")
     print(f"controller reconfigurations: {job.reconfigurations}")
+    if job.plan_changes:
+        print(f"mechanism switches: {job.plan_changes}")
+    print("phase machine:", " -> ".join(rt.phase_sequence()))
     assert summary["failures"] >= 1 and summary["restores"] >= 1
     assert summary["final_loss"] < trainer.losses[0], "model should learn"
 

@@ -135,6 +135,7 @@ class CheckpointManager:
         self.bytes_by_kind = {"full": 0, "delta": 0}
         self.saves_by_level = {l: 0 for l in ("memory", "local", "remote")}
         self.skips = 0
+        self.savepoints = 0
         self.restores: list[tuple[int, str, str]] = []
 
     # -- save ---------------------------------------------------------------
@@ -163,10 +164,13 @@ class CheckpointManager:
         # aliasing host arrays the caller may mutate would corrupt it.
         # ChunkedHostSnapshot copies only the mutable host leaves up front;
         # immutable device chunks stream to the io workers in background,
-        # so blocking_s is the first chunk's device sync, not the full copy
+        # so blocking_s is the first chunk's device sync, not the full copy.
+        # plan.eager_snapshot disables the deferral (donated-buffer states:
+        # the "immutable" device arrays are re-used by the next step)
         need_copy = (self._committer is not None or "memory" in levels
                      or self.plan.mode == "incremental")
-        snap = (ChunkedHostSnapshot(state, self.plan.chunk_bytes)
+        snap = (ChunkedHostSnapshot(state, self.plan.chunk_bytes,
+                                    defer_device=not self.plan.eager_snapshot)
                 if need_copy else PlainLeafSource(state))
         if "memory" in levels:
             # the memory level always holds the decoded newest state (as a
@@ -220,6 +224,43 @@ class CheckpointManager:
             report.blocking_s = time.monotonic() - t0   # snapshot only
         self.policy.mark(timestamp)
         return report
+
+    # -- savepoint (cadence-exempt checkpoint-now) ---------------------------
+    def savepoint(self, step: int, state: Any, timestamp: float = 0.0,
+                  extra: Optional[dict] = None) -> SaveReport:
+        """Durable checkpoint-now: drain any in-flight commit, then write a
+        FULL snapshot synchronously to EVERY configured level — ignoring
+        the every-Nth level cadences, which gate regular triggers only.
+        This is the drain barrier under a controlled reconfiguration:
+        after it returns, nothing the job has processed can be lost, even
+        if the next action discards this manager (a plan switch rebuild).
+        Does not advance the trigger count (cadence patterns are
+        unaffected); does anchor a fresh delta chain at ``step``."""
+        extra = extra or {}
+        self.wait()
+        t0 = time.monotonic()
+        snap = ChunkedHostSnapshot(state, self.plan.chunk_bytes,
+                                   defer_device=not self.plan.eager_snapshot)
+        levels = []
+        if "memory" in self.plan.levels:
+            self._memory = (step, snap, dict(extra))
+            self.saves_by_level["memory"] += 1
+            levels.append("memory")
+        self._base, self._base_step = snap, step
+        nbytes, paths = 0, []
+        for level, store in self.stores.items():
+            paths.append(store.save(step, snap, timestamp,
+                                    {**extra, "kind": "full"}))
+            n = store.total_bytes(step)
+            nbytes += n
+            self.bytes_by_kind["full"] += n
+            self.saves_by_level[level] += 1
+            levels.append(level)
+        self.savepoints += 1
+        self.policy.mark(timestamp)
+        dur = time.monotonic() - t0
+        return SaveReport(step, "full", tuple(levels), nbytes, dur, dur,
+                          paths=tuple(paths), synchronous=True)
 
     # -- restore ------------------------------------------------------------
     def _disk_candidate(self, level: str) -> Optional[tuple[int, int]]:
@@ -278,6 +319,15 @@ class CheckpointManager:
         return report
 
     # -- lifecycle / failure hooks -----------------------------------------
+    def adopt_runtime_state(self, old: "CheckpointManager") -> None:
+        """Carry the in-RAM snapshot and delta base over from a manager
+        this one replaces (the plan-switch rebuild): the predecessor's
+        drain savepoint is the newest state, so task restarts keep their
+        RAM path and incremental plans delta against the drained full —
+        the invariant lives here, next to the fields it protects."""
+        self._memory = old._memory
+        self._base, self._base_step = old._base, old._base_step
+
     def wait(self) -> None:
         """Drain any in-flight async commit."""
         if self._committer is not None:
@@ -319,6 +369,7 @@ class CheckpointManager:
         return {
             "saves": self._count,
             "skips": self.skips,
+            "savepoints": self.savepoints,
             "bytes_by_kind": dict(self.bytes_by_kind),
             "bytes_written": sum(self.bytes_by_kind.values()),
             "saves_by_level": dict(self.saves_by_level),

@@ -18,8 +18,11 @@ thread.  This module breaks that into overlapping stages:
     transfer on a background pool while downstream encode/compress/write
     workers consume whatever chunks have landed.  The caveat: deferred
     transfer relies on JAX immutability, so states updated with donated
-    buffers (``donate_argnums``) must snapshot before the donating step
-    runs — the in-repo trainer does not donate.
+    buffers (``donate_argnums``) must materialize every leaf before the
+    donating step runs — set ``CheckpointPlan.eager_snapshot=True`` (the
+    manager then constructs this snapshot with ``defer_device=False``,
+    trading the pipelined blocking win for donation safety).  The in-repo
+    trainer does not donate, so the knob defaults off.
 
   * ``LeafSource`` is the uniform interface the parallel writers consume:
     leaf names/specs are known immediately (shard planning needs no bytes),

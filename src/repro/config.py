@@ -296,6 +296,13 @@ class CheckpointPlan:
     keep: int = 3
     chunk_bytes: int = 4 << 20        # D2H transfer granularity of the pipelined
                                       # snapshot (first chunk = the blocking sync)
+    eager_snapshot: bool = False      # materialize EVERY device leaf before
+                                      # save() returns: required when the train
+                                      # step donates its input buffers
+                                      # (donate_argnums) — deferred chunk
+                                      # transfer relies on JAX immutability,
+                                      # and a donated buffer is re-used the
+                                      # moment the next step runs
 
     def __post_init__(self) -> None:
         assert self.mode in ("full", "incremental"), self.mode

@@ -7,7 +7,11 @@ Phase 2  profiler          — parallel profiling deployments + worst-case failu
 Phase 3  qos_models        — M_L / M_R multivariate regression + rescaling p
          forecast          — TSF deferral rule
          ci_optimizer      — Eq. 8 multi-objective CI selection
-         controller        — the runtime optimization loop
+         controller        — the runtime optimization loop + the JobHandle
+                             protocol every supervised substrate implements
+         runtime           — KhaosRuntime, the phase machine sequencing
+                             1 -> 2 -> 3 against any JobHandle (single job
+                             or controller-in-the-loop batched campaigns)
 
 The control plane runs host-side (NumPy) — it supervises the JAX data plane
 (the distributed training/serving job), exactly as the paper's controller
@@ -16,20 +20,29 @@ supervises Flink from outside the cluster.
 from repro.core.arima import OnlineARIMA
 from repro.core.anomaly import AnomalyDetector
 from repro.core.steady_state import select_failure_points, SteadyState
-from repro.core.qos_models import QoSModel, RescalingTracker
+from repro.core.qos_models import (QoSModel, RescalingTracker,
+                                   demo_prior_models)
 from repro.core.forecast import WorkloadForecaster
 from repro.core.ci_optimizer import (optimize_ci, optimize_plan,
                                      default_plan_variants, PlanCandidate,
                                      PlanOptimization)
-from repro.core.controller import KhaosController
+from repro.core.controller import (Decision, JobHandle, JOB_HANDLE_METHODS,
+                                   KhaosController)
 from repro.core.young_daly import young_daly_interval
 from repro.core.profiler import (run_profiling, run_profiling_campaign,
                                  ProfilingResult)
+from repro.core.runtime import (CampaignSupervision, KhaosRuntime,
+                                missing_handle_methods, PhaseError,
+                                PhaseEvent, PHASES)
 
 __all__ = [
     "OnlineARIMA", "AnomalyDetector", "select_failure_points", "SteadyState",
-    "QoSModel", "RescalingTracker", "WorkloadForecaster", "optimize_ci",
+    "QoSModel", "RescalingTracker", "demo_prior_models",
+    "WorkloadForecaster", "optimize_ci",
     "optimize_plan", "default_plan_variants", "PlanCandidate",
-    "PlanOptimization", "KhaosController", "young_daly_interval",
+    "PlanOptimization", "Decision", "JobHandle", "JOB_HANDLE_METHODS",
+    "KhaosController", "young_daly_interval",
     "run_profiling", "run_profiling_campaign", "ProfilingResult",
+    "CampaignSupervision", "KhaosRuntime", "missing_handle_methods",
+    "PhaseError", "PhaseEvent", "PHASES",
 ]

@@ -8,11 +8,21 @@ a cost model is attached (``cost``), for a new *checkpoint plan*: the
 search then spans mechanism variants (incremental encoding, async commit,
 multi-level routing) in addition to the interval, and a Decision can carry
 "switch to incr8-async at CI=42s" instead of just a number.
+
+The control-plane contract is the ``JobHandle`` protocol below: ONE
+complete interface every supervised substrate implements in full —
+``sim.SimJobHandle`` (scalar simulator), ``sim.BatchedLaneHandle`` (one
+lane of a vectorized campaign) and ``runtime.TrainerJobHandle`` (the live
+JAX trainer).  There are no optional methods and no capability probing:
+a handle that cannot switch plans on its substrate still implements
+``reconfigure_plan`` (typically as drain + CI apply) so the controller
+code is identical everywhere.  ``core.runtime.KhaosRuntime`` sequences
+the three phases and drives this controller against any handle.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Optional, Protocol
+from typing import Any, ClassVar, Optional, Protocol, runtime_checkable
 
 import numpy as np
 
@@ -21,38 +31,98 @@ from repro.core.ci_optimizer import optimize_ci, optimize_plan
 from repro.core.forecast import WorkloadForecaster
 from repro.core.qos_models import QoSModel, RescalingTracker
 
+#: every JobHandle method; the protocol-conformance test asserts each one
+#: is present and callable on every registered handle implementation
+JOB_HANDLE_METHODS = ("now", "current_ci", "current_plan", "avg_latency",
+                      "avg_throughput", "healthy", "drain", "reconfigure",
+                      "reconfigure_plan")
 
+
+@runtime_checkable
 class JobHandle(Protocol):
-    """The controller's view of the supervised production job."""
+    """The controller's complete view of the supervised production job.
 
-    def now(self) -> float: ...
-    def current_ci(self) -> float: ...
-    def avg_latency(self, window_s: float) -> float: ...
-    def avg_throughput(self, window_s: float) -> float: ...
+    This is a FULL protocol, not a base class with optional extensions:
+    every method below is mandatory.  The controller never probes for
+    capabilities — ``KhaosController`` calls ``current_plan`` and
+    ``reconfigure_plan`` directly, and ``KhaosRuntime`` drives any handle
+    through the same three-phase sequence, so the sim and the live
+    trainer are interchangeable supervision targets.
+    """
+
+    def now(self) -> float:
+        """The job's clock (virtual seconds for sim/trainer substrates)."""
+        ...
+
+    def current_ci(self) -> float:
+        """The checkpoint interval currently in force."""
+        ...
+
+    def current_plan(self) -> CheckpointPlan:
+        """The full checkpoint mechanism currently in force (its
+        ``interval_s`` must agree with ``current_ci``)."""
+        ...
+
+    def avg_latency(self, window_s: float) -> float:
+        """Mean end-to-end latency over the trailing window (NaN when the
+        window holds no samples)."""
+        ...
+
+    def avg_throughput(self, window_s: float) -> float:
+        """Mean arrival rate TR over the trailing window."""
+        ...
+
     def healthy(self) -> bool:
         """False while the job is down or catching up after a failure —
         latency samples then reflect the failure, not the (CI, TR) -> L
         mapping, and reconfiguration would be aborted anyway (§IV-D)."""
         ...
 
-    def reconfigure(self, new_ci: float) -> None:
-        """Controlled reconfiguration: checkpoint-now, then apply the CI."""
+    def drain(self) -> None:
+        """Checkpoint-now barrier: persist current progress and quiesce
+        in-flight commits so a reconfiguration loses nothing.  Substrates
+        whose reconfigure path already takes a savepoint (the simulator's
+        flink-semantics controlled restart) implement this as a no-op."""
         ...
 
-    # Optional extensions (duck-typed; SimJobHandle implements both):
-    #   current_plan() -> CheckpointPlan
-    #   reconfigure_plan(plan: CheckpointPlan) -> None
+    def reconfigure(self, new_ci: float) -> None:
+        """Controlled reconfiguration of the CI knob only (drain, then
+        apply the new interval; the mechanism is unchanged)."""
+        ...
+
+    def reconfigure_plan(self, plan: CheckpointPlan) -> None:
+        """Controlled mechanism switch: drain, rebuild the checkpoint
+        plane from ``plan`` (mode/levels/commit AND interval), resume."""
+        ...
 
 
 @dataclass
 class Decision:
+    """One optimization-cycle outcome.  ``kind`` is always a member of
+    ``Decision.KINDS``:
+
+      none         constraints satisfied (or change below actuation threshold)
+      defer        TSF predicts a >10% workload drop -> wait it out
+      reconfigure  actuated: ``new_ci`` (and ``new_plan`` when the
+                   mechanism search is active) were applied to the job
+      infeasible   no (CI, plan) satisfies both constraints
+      cooldown     a reconfiguration happened too recently
+      unhealthy    the job is down/catching up; samples were discarded
+    """
+
+    KINDS: ClassVar[tuple[str, ...]] = ("none", "defer", "reconfigure",
+                                        "infeasible", "cooldown", "unhealthy")
+
     t: float
-    kind: str            # none | defer | reconfigure | infeasible | cooldown
+    kind: str
     latency: float
     tr_avg: float
     predicted_recovery: float
     new_ci: Optional[float] = None
     new_plan: Optional[CheckpointPlan] = None
+
+    def __post_init__(self) -> None:
+        assert self.kind in self.KINDS, f"unknown Decision kind {self.kind!r}"
 
 
 @dataclass
@@ -70,8 +140,6 @@ class KhaosController:
     decisions: list = field(default_factory=list)
     _last_reconfig_t: float = -1e18
     _last_opt_t: float = -1e18
-    _last_plan_name: Optional[str] = None   # fallback when the handle has
-                                            # no current_plan()
     # error-analysis tracking (Tables II(a)/III(a))
     latency_obs: list = field(default_factory=list)    # (ci, tr, observed)
     recovery_obs: list = field(default_factory=list)
@@ -106,7 +174,7 @@ class KhaosController:
             return None
         self._last_opt_t = t
 
-        if not getattr(job, "healthy", lambda: True)():
+        if not job.healthy():
             return self._decide(t, "unhealthy", float("nan"), float("nan"),
                                 float("nan"))
 
@@ -158,8 +226,9 @@ class KhaosController:
 
     def _optimize_mechanism(self, job: JobHandle, t, lat, tr_avg, ci_now,
                             pred_rec) -> Decision:
-        """Eq. 8 over (CI x plan variants); actuates a plan switch when the
-        job handle supports it, otherwise falls back to the CI knob."""
+        """Eq. 8 over (CI x plan variants); actuates through the handle's
+        ``reconfigure_plan`` — the protocol guarantees it exists, so there
+        is no CI-only fallback path anymore."""
         res = optimize_plan(self.m_l, self.m_r, tr_avg,
                             self.cfg.latency_constraint,
                             self.cfg.recovery_constraint,
@@ -169,24 +238,18 @@ class KhaosController:
                             mtbf_s=self.mtbf_s)
         if not res.feasible or res.plan is None:
             return self._decide(t, "infeasible", lat, tr_avg, pred_rec)
-        current_plan = getattr(job, "current_plan", lambda: None)()
-        current_name = (current_plan.name if current_plan is not None
-                        else self._last_plan_name)
-        same_mechanism = current_name is not None \
-            and res.plan.name == current_name
-        reconfigure_plan = getattr(job, "reconfigure_plan", None)
-        if reconfigure_plan is None:
-            # handle only exposes the CI knob: actuate (and report) CI only
-            if abs(res.ci - ci_now) < 1.0:
-                return self._decide(t, "none", lat, tr_avg, pred_rec)
+        same_mechanism = res.plan.name == job.current_plan().name
+        if same_mechanism and abs(res.ci - ci_now) < 1.0:
+            return self._decide(t, "none", lat, tr_avg, pred_rec)
+        if same_mechanism:
+            # mechanism unchanged: the CI knob is the cheap actuation — a
+            # plan switch would pay a drain savepoint + manager rebuild
+            # for a cadence change the hot path applies in place
             job.reconfigure(res.ci)
             self._last_reconfig_t = t
             return self._decide(t, "reconfigure", lat, tr_avg, pred_rec,
                                 res.ci)
-        if same_mechanism and abs(res.ci - ci_now) < 1.0:
-            return self._decide(t, "none", lat, tr_avg, pred_rec)
-        reconfigure_plan(res.plan)
-        self._last_plan_name = res.plan.name
+        job.reconfigure_plan(res.plan)
         self._last_reconfig_t = t
         return self._decide(t, "reconfigure", lat, tr_avg, pred_rec, res.ci,
                             res.plan)

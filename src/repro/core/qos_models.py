@@ -68,6 +68,23 @@ class QoSModel:
         return float(np.mean(np.abs(pred - y) / np.maximum(np.abs(y), 1e-9)))
 
 
+def demo_prior_models(ci_lo: float = 5.0, ci_hi: float = 60.0,
+                      tr_lo: float = 100.0, tr_hi: float = 800.0,
+                      n: int = 64, seed: int = 0
+                      ) -> tuple[QoSModel, QoSModel]:
+    """Prior-fitted (M_L, M_R) for demos and smoke paths that skip
+    Phases 1-2 (installed via ``KhaosRuntime.install_models``): a latency
+    surface falling with CI and a recovery surface growing with CI — the
+    one source for the recipe ``examples/train_stream.py`` and
+    ``launch/train.py --khaos`` share."""
+    rng = np.random.default_rng(seed)
+    ci = rng.uniform(ci_lo, ci_hi, n)
+    tr = rng.uniform(tr_lo, tr_hi, n)
+    m_l = QoSModel().fit(ci, tr, 0.05 + 2.0 / ci + tr * 1e-5)
+    m_r = QoSModel().fit(ci, tr, 4.0 + 1.0 * ci + tr * 5e-3)
+    return m_l, m_r
+
+
 @dataclass
 class RescalingTracker:
     """The paper's correction factor p: average of the k pairwise fractional

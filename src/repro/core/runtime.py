@@ -1,0 +1,295 @@
+"""The Khaos control-plane runtime: ONE phase machine driving the paper's
+three phases against any ``JobHandle`` — simulator or live trainer.
+
+Before this module every caller (examples, launchers, benchmarks) hand-
+stitched the sequence "record -> select failure points -> profile ->
+fit M_L/M_R -> build controller -> poll maybe_optimize".  ``KhaosRuntime``
+makes the sequence a formal state machine:
+
+    idle ──record_steady_state()──▶ steady_state          (Phase 1, §III-B)
+         ──run_profiling()───────▶ profiled               (Phase 2, §III-C)
+         ──attach(job)───────────▶ optimizing             (Phase 3, §III-D)
+
+Each transition validates its prerequisites (``PhaseError`` on a skipped
+or repeated phase) and appends a ``PhaseEvent`` to ``phase_log`` — the
+record the smoke gate (``benchmarks/run.py --smoke``) asserts phase order
+against.  ``install_models`` is the explicit escape hatch for callers
+that bring pre-fitted QoS models (it logs phases 1-2 as ``skipped``).
+
+Phase 3 runs in two shapes:
+
+  * ``attach(job)`` + ``step()`` — classic single-job supervision: the
+    caller ticks its substrate and polls ``step()``, which forwards to
+    ``KhaosController.maybe_optimize`` against the attached handle;
+  * ``drive_campaign(campaign)`` — controller-IN-THE-LOOP over a
+    ``sim.BatchedCampaign``: every lane gets its own controller and a
+    ``BatchedLaneHandle``, the campaign advances in optimization-period
+    chunks, and each chunk boundary applies a ``maybe_optimize`` step
+    across all live lanes.  This vectorizes Phase-3 *evaluation* the way
+    ``BatchedDeployment`` vectorized Phase-2 profiling — day-scale E1/E2
+    controlled runs no longer tick the scalar engine lane by lane.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional, Sequence
+
+import numpy as np
+
+from repro.config import KhaosConfig
+from repro.core.controller import (JOB_HANDLE_METHODS, Decision, JobHandle,
+                                   KhaosController)
+from repro.core.profiler import (ProfilingResult, run_profiling,
+                                 run_profiling_campaign)
+from repro.core.qos_models import QoSModel
+from repro.core.steady_state import SteadyState, select_failure_points
+
+#: legal phase order; every transition must advance exactly one slot
+PHASES = ("idle", "steady_state", "profiled", "optimizing")
+
+
+class PhaseError(RuntimeError):
+    """A phase was entered out of order (skipped prerequisite or repeat)."""
+
+
+def missing_handle_methods(job: Any) -> list:
+    """The protocol methods ``job`` fails to provide (empty = conformant).
+    The single source for every conformance check (``KhaosRuntime.attach``,
+    the ``run.py --smoke`` gate, the protocol tests)."""
+    return [m for m in JOB_HANDLE_METHODS
+            if not callable(getattr(job, m, None))]
+
+
+@dataclass
+class PhaseEvent:
+    """One transition of the phase machine (``phase_log`` entry)."""
+    phase: str
+    info: dict = field(default_factory=dict)
+
+
+class KhaosRuntime:
+    """Sequences Phase 1 -> Phase 2 -> Phase 3 against any ``JobHandle``.
+
+    Construction takes the paper's knobs (``KhaosConfig``) plus the
+    optional mechanism-search attachments (``cost``/``plan_variants``/
+    ``verifier``/``mtbf_s``) that are forwarded to every controller this
+    runtime builds.
+    """
+
+    def __init__(self, cfg: KhaosConfig, cost: Optional[Any] = None,
+                 plan_variants: Optional[list] = None,
+                 mtbf_s: float = 3600.0,
+                 verifier: Optional[Callable] = None):
+        self.cfg = cfg
+        self.cost = cost
+        self.plan_variants = plan_variants
+        self.mtbf_s = mtbf_s
+        self.verifier = verifier
+        self.phase: str = "idle"
+        self.phase_log: list[PhaseEvent] = []
+        # phase artifacts
+        self.steady: Optional[SteadyState] = None
+        self.profile: Optional[ProfilingResult] = None
+        self.m_l: Optional[QoSModel] = None
+        self.m_r: Optional[QoSModel] = None
+        self.controller: Optional[KhaosController] = None
+        self.job: Optional[JobHandle] = None
+
+    # -- phase machinery ----------------------------------------------------
+    def _transition(self, to: str, **info) -> None:
+        if PHASES.index(to) != PHASES.index(self.phase) + 1:
+            raise PhaseError(f"cannot enter phase {to!r} from {self.phase!r} "
+                             f"(order is {' -> '.join(PHASES)})")
+        self.phase = to
+        self.phase_log.append(PhaseEvent(to, info))
+
+    def phase_sequence(self) -> list[str]:
+        """The phases entered so far, in order (the smoke-gate assertion)."""
+        return [ev.phase for ev in self.phase_log]
+
+    # -- Phase 1: steady state (§III-B) -------------------------------------
+    def record_steady_state(self, recording,
+                            m: Optional[int] = None) -> SteadyState:
+        """Analyze the workload recording and select the ``m`` failure
+        points spanning the observed throughput range."""
+        steady = select_failure_points(
+            recording, m=m or self.cfg.num_failure_points,
+            smoothing_window=self.cfg.smoothing_window,
+            mode=self.cfg.failure_point_mode)
+        self._transition("steady_state",
+                         failure_points=len(steady.failure_times),
+                         tr_range=[float(steady.failure_rates.min()),
+                                   float(steady.failure_rates.max())])
+        self.steady = steady
+        return steady
+
+    # -- Phase 2: chaos profiling (§III-C) ----------------------------------
+    def default_ci_grid(self) -> np.ndarray:
+        """The z candidate CIs from the config window."""
+        return np.linspace(self.cfg.ci_min, self.cfg.ci_max,
+                           self.cfg.num_configs)
+
+    def run_profiling(self, deployment, ci_values=None,
+                      margin: Optional[float] = None,
+                      progress: Optional[Callable[[str], None]] = None
+                      ) -> ProfilingResult:
+        """Profile the (CI x failure point) grid and fit M_L / M_R.
+
+        ``deployment`` is either a ``CampaignDeployment`` (has
+        ``profile_campaign`` — the whole grid as lanes of one batched
+        campaign, e.g. ``sim.BatchedDeployment``) or a per-CI deployment
+        factory ``ci -> Deployment`` (the sequential oracle path).
+        """
+        if self.phase != "steady_state":
+            raise PhaseError("run_profiling requires Phase 1 "
+                             "(record_steady_state) to have completed")
+        ci_values = (self.default_ci_grid() if ci_values is None
+                     else np.asarray(ci_values, np.float64))
+        margin = self.cfg.profile_margin_seconds if margin is None else margin
+        if hasattr(deployment, "profile_campaign"):
+            prof = run_profiling_campaign(deployment, self.steady, ci_values,
+                                          margin=margin, progress=progress)
+            substrate = "campaign"
+        else:
+            prof = run_profiling(deployment, self.steady, ci_values,
+                                 margin=margin, progress=progress)
+            substrate = "sequential"
+        ci_f, tr_f, L_f, R_f = prof.flat()
+        self.m_l = QoSModel(degree=self.cfg.model_degree,
+                            ridge_lambda=self.cfg.ridge_lambda
+                            ).fit(ci_f, tr_f, L_f)
+        self.m_r = QoSModel(degree=self.cfg.model_degree,
+                            ridge_lambda=self.cfg.ridge_lambda
+                            ).fit(ci_f, tr_f, R_f)
+        self._transition("profiled", substrate=substrate,
+                         cells=int(prof.latencies.size),
+                         m_l_pct_error=self.m_l.avg_percent_error(
+                             ci_f, tr_f, L_f),
+                         m_r_pct_error=self.m_r.avg_percent_error(
+                             ci_f, tr_f, R_f))
+        self.profile = prof
+        return prof
+
+    def install_models(self, m_l: QoSModel, m_r: QoSModel,
+                       steady: Optional[SteadyState] = None) -> None:
+        """Skip phases 1-2 with pre-fitted QoS models (production installs
+        models fitted on the cluster; demos install priors).  The skipped
+        phases are still logged so ``phase_sequence`` stays truthful."""
+        if self.phase != "idle":
+            raise PhaseError("install_models replaces phases 1-2 and must "
+                             "run from 'idle'")
+        self.steady = steady
+        self._transition("steady_state", skipped=True)
+        self._transition("profiled", skipped=True)
+        self.m_l, self.m_r = m_l, m_r
+
+    # -- Phase 3: runtime optimization (§III-D) ------------------------------
+    def _make_controller(self) -> KhaosController:
+        assert self.m_l is not None and self.m_r is not None
+        return KhaosController(cfg=self.cfg, m_l=self.m_l, m_r=self.m_r,
+                               cost=self.cost,
+                               plan_variants=self.plan_variants,
+                               mtbf_s=self.mtbf_s)
+
+    def initial_ci(self, tr_avg: float) -> Optional[float]:
+        """The Eq.-8 optimum at the recorded average throughput (the CI the
+        job should start Phase 3 with); None when infeasible."""
+        if self.m_l is None:
+            raise PhaseError("initial_ci requires fitted models (Phase 2)")
+        return self._make_controller().initial_ci(tr_avg)
+
+    def attach(self, job: JobHandle) -> KhaosController:
+        """Enter Phase 3 supervising ``job``; returns the controller."""
+        if self.phase != "profiled":
+            raise PhaseError("attach requires Phase 2 (run_profiling or "
+                             "install_models) to have completed")
+        missing = missing_handle_methods(job)
+        if missing:
+            raise TypeError(f"{type(job).__name__} does not implement the "
+                            f"JobHandle protocol: missing {missing}")
+        self.controller = self._make_controller()
+        self.job = job
+        self._transition("optimizing", handle=type(job).__name__)
+        return self.controller
+
+    def step(self) -> Optional[Decision]:
+        """One optimization poll against the attached job (call after each
+        substrate tick; the controller gates itself on the period)."""
+        if self.phase != "optimizing" or self.controller is None:
+            raise PhaseError("step requires attach() (Phase 3)")
+        return self.controller.maybe_optimize(self.job)
+
+    # -- Phase 3, vectorized: controller-in-the-loop campaigns ---------------
+    def drive_campaign(self, campaign,
+                       lanes: Optional[Sequence[int]] = None,
+                       period_ticks: Optional[int] = None
+                       ) -> "CampaignSupervision":
+        """Run Phase 3 across every lane of a ``sim.BatchedCampaign``.
+
+        Each selected lane gets its own ``KhaosController`` and a
+        ``BatchedLaneHandle``; the campaign advances in chunks of
+        ``period_ticks`` and each chunk boundary applies one
+        ``maybe_optimize`` step per live lane — a vectorized substrate
+        under N independent scalar control loops.  The default chunk is
+        the optimization period, so decisions fire at t0 + k*period;
+        the scalar loop, polling after every tick, fires its first
+        decision one tick after t0 and then every period from there.
+        Pass ``period_ticks=1`` to poll every tick and reproduce the
+        scalar decision clock exactly (bit-exact per lane, at more
+        Python overhead per tick).  Requires the campaign to record
+        history (the handles' latency windows read it).
+        """
+        if self.phase not in ("profiled", "optimizing"):
+            raise PhaseError("drive_campaign requires Phase 2 to have "
+                             "completed")
+        from repro.sim.batched import BatchedLaneHandle   # local: core must
+        # stay importable without the sim package loaded first
+        lane_ids = list(range(campaign.n_lanes)) if lanes is None \
+            else list(lanes)
+        handles = [BatchedLaneHandle(campaign, i) for i in lane_ids]
+        controllers = [self._make_controller() for _ in lane_ids]
+        period = max(1, int(period_ticks if period_ticks is not None
+                            else round(self.cfg.optimization_period)))
+        if self.phase == "profiled":
+            self._transition("optimizing", handle="BatchedLaneHandle",
+                             lanes=len(lane_ids))
+        while not campaign.done:
+            campaign.run(n_ticks=period)
+            for ctl, h in zip(controllers, handles):
+                if h.alive():
+                    ctl.maybe_optimize(h)
+        # the scalar loop polls once more after its final tick (alive()
+        # is already False there, so the in-loop polls skip it); actuation
+        # on a finished lane is as inert as the scalar's post-loop one
+        for ctl, h in zip(controllers, handles):
+            ctl.maybe_optimize(h)
+        return CampaignSupervision(campaign, lane_ids, handles, controllers)
+
+
+@dataclass
+class CampaignSupervision:
+    """Result of a controller-in-the-loop campaign run."""
+    campaign: Any
+    lane_ids: list
+    handles: list
+    controllers: list
+
+    def decisions(self, lane: int) -> list:
+        return self.controllers[self.lane_ids.index(lane)].decisions
+
+    def reconfigurations(self, lane: int) -> list:
+        return self.handles[self.lane_ids.index(lane)].reconfigurations
+
+    def summary(self) -> dict:
+        kinds: dict[str, int] = {}
+        for ctl in self.controllers:
+            for d in ctl.decisions:
+                kinds[d.kind] = kinds.get(d.kind, 0) + 1
+        return {
+            "lanes": len(self.lane_ids),
+            "decisions_by_kind": kinds,
+            "reconfigured_lanes": sum(1 for h in self.handles
+                                      if h.reconfigurations),
+            "plan_switched_lanes": sum(1 for h in self.handles
+                                       if h.plan_changes),
+        }

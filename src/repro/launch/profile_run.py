@@ -1,7 +1,12 @@
-"""Phase-2 profiling launcher: record a workload, spin up the z parallel
-profiling deployments (simulator-backed on this host; the Deployment
-protocol accepts cluster-backed implementations unchanged), inject
-worst-case failures and emit the (C, TR, L, R) grids + fitted QoS models.
+"""Phase-2 profiling launcher: record a workload, run the z x m profiling
+grid, and emit the (C, TR, L, R) grids + fitted QoS models — sequenced by
+the ``KhaosRuntime`` phase machine (Phase 1 -> Phase 2).
+
+By default the whole grid runs as lanes of ONE batched campaign
+(``sim.BatchedDeployment`` — the paper's parallel Kubernetes deployments
+mapped onto vectorized simulator state); ``--sequential`` keeps the
+one-pipeline-per-CI oracle path (the ``Deployment`` protocol also accepts
+cluster-backed implementations unchanged).
 
     PYTHONPATH=src python -m repro.launch.profile_run --ci 10,30,60,90,120 \
         --out experiments/profiling.json
@@ -14,9 +19,10 @@ import os
 
 import numpy as np
 
-from repro.core import QoSModel, run_profiling, select_failure_points
+from repro.config import KhaosConfig
+from repro.core import KhaosRuntime
 from repro.data.stream import diurnal_rate, record_workload
-from repro.sim import SimCostModel, SimDeployment
+from repro.sim import BatchedDeployment, SimCostModel, SimDeployment
 
 
 def main() -> None:
@@ -28,6 +34,9 @@ def main() -> None:
     ap.add_argument("--ckpt-duration", type=float, default=3.0)
     ap.add_argument("--margin", type=float, default=90.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--sequential", action="store_true",
+                    help="one deployment per CI (the scalar oracle path) "
+                         "instead of the batched campaign")
     ap.add_argument("--out", default="experiments/profiling.json")
     args = ap.parse_args()
 
@@ -35,27 +44,29 @@ def main() -> None:
                          period=args.record_seconds, seed=args.seed)
     recording = record_workload(sched, duration=args.record_seconds,
                                 seed=args.seed)
-    steady = select_failure_points(recording, m=args.failure_points,
-                                   smoothing_window=30)
     cost = SimCostModel(capacity_eps=args.capacity,
                         ckpt_duration_s=args.ckpt_duration,
                         ckpt_sync_penalty=0.6)
     ci_values = [float(x) for x in args.ci.split(",")]
-    prof = run_profiling(
-        lambda ci: SimDeployment(ci, recording, cost),
-        steady, ci_values, margin=args.margin,
-        progress=lambda m: print("  " + m, flush=True))
+
+    rt = KhaosRuntime(KhaosConfig(num_failure_points=args.failure_points,
+                                  ci_min=min(ci_values), ci_max=max(ci_values),
+                                  num_configs=len(ci_values)))
+    rt.record_steady_state(recording)
+    deployment = (lambda ci: SimDeployment(ci, recording, cost)) \
+        if args.sequential else BatchedDeployment(cost, recording)
+    prof = rt.run_profiling(deployment, ci_values, margin=args.margin,
+                            progress=lambda m: print("  " + m, flush=True))
 
     ci_f, tr_f, L_f, R_f = prof.flat()
-    m_l = QoSModel().fit(ci_f, tr_f, L_f)
-    m_r = QoSModel().fit(ci_f, tr_f, R_f)
     out = {
         "ci_values": ci_values,
         "failure_rates": prof.failure_rates.tolist(),
         "latencies": prof.latencies.tolist(),
         "recoveries": prof.recoveries.tolist(),
-        "m_l_pct_error": m_l.avg_percent_error(ci_f, tr_f, L_f),
-        "m_r_pct_error": m_r.avg_percent_error(ci_f, tr_f, R_f),
+        "m_l_pct_error": rt.m_l.avg_percent_error(ci_f, tr_f, L_f),
+        "m_r_pct_error": rt.m_r.avg_percent_error(ci_f, tr_f, R_f),
+        "phases": rt.phase_sequence(),
     }
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "w") as f:

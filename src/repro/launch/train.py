@@ -23,14 +23,19 @@ def main() -> None:
     ap.add_argument("--duration", type=float, default=60.0)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_train")
     ap.add_argument("--ci", type=float, default=30.0)
+    ap.add_argument("--khaos", action="store_true",
+                    help="local runs: supervise with a KhaosRuntime "
+                         "(prior-fitted QoS models) through TrainerJobHandle")
     ap.add_argument("--multi-pod", action="store_true")
     args = ap.parse_args()
 
     if args.local:
-        from repro.config import OptimizerConfig
+        from repro.config import KhaosConfig, OptimizerConfig
         from repro.configs import get_smoke_config
+        from repro.core import KhaosRuntime, demo_prior_models
         from repro.data.stream import EventStream, diurnal_rate
-        from repro.runtime import ResilientTrainer, TrainerConfig
+        from repro.runtime import (ResilientTrainer, TrainerConfig,
+                                   TrainerJobHandle)
 
         cfg = get_smoke_config(args.arch)
         stream = EventStream(schedule=diurnal_rate(base=400.0, period=600.0))
@@ -39,7 +44,16 @@ def main() -> None:
                              time_scale=8.0)
         trainer = ResilientTrainer(cfg, tcfg, stream,
                                    OptimizerConfig(total_steps=10_000))
-        summary = trainer.run(args.duration)
+        on_second = None
+        if args.khaos:
+            rt = KhaosRuntime(KhaosConfig(latency_constraint=1.0,
+                                          recovery_constraint=30.0,
+                                          optimization_period=10.0,
+                                          ci_min=5, ci_max=60))
+            rt.install_models(*demo_prior_models())
+            rt.attach(TrainerJobHandle(trainer))
+            on_second = lambda sample: rt.step()
+        summary = trainer.run(args.duration, on_second=on_second)
         print(summary)
         return
 
@@ -75,8 +89,9 @@ def main() -> None:
         donate_argnums=0)
     compiled = jitted.lower(state_specs, batch_specs).compile()
     print("compiled train step:", compiled.memory_analysis())
-    print("ready — wire a StreamingBatcher + CheckpointStore + "
-          "KhaosController exactly as runtime/trainer.py does.")
+    print("ready — wire a StreamingBatcher + CheckpointManager + "
+          "KhaosRuntime/TrainerJobHandle exactly as runtime/trainer.py "
+          "and examples/train_stream.py do.")
 
 
 if __name__ == "__main__":

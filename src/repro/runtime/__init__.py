@@ -1,4 +1,6 @@
-from repro.runtime.trainer import ResilientTrainer, TrainerConfig
+from repro.runtime.trainer import (ResilientTrainer, TrainerConfig,
+                                   TrainerJobHandle)
 from repro.runtime.server import StreamServer
 
-__all__ = ["ResilientTrainer", "TrainerConfig", "StreamServer"]
+__all__ = ["ResilientTrainer", "TrainerConfig", "TrainerJobHandle",
+           "StreamServer"]

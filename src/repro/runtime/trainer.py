@@ -6,7 +6,16 @@ train_step -> the unified checkpoint plane (one ``CheckpointManager``
 executing a ``CheckpointPlan``: full or delta encoding, memory/local/remote
 level routing, sync or async commit — atomically committed WITH the stream
 cursor for exactly-once) -> failure injection + failure-kind-aware restore
--> metrics -> optional Khaos controller.
+-> metrics -> the Khaos controller via ``TrainerJobHandle``.
+
+``TrainerJobHandle`` implements the FULL ``core.controller.JobHandle``
+protocol, including the ``reconfigure_plan`` actuation the ROADMAP called
+for: ``ResilientTrainer.set_plan`` drains (checkpoint-now under the active
+plan, async commits quiesced), rebuilds the ``CheckpointManager`` from the
+new ``CheckpointPlan`` on the SAME policy clock and metrics store (cadence
+and observation windows stay continuous across the switch), and resumes —
+the live mirror of ``SimJobHandle.reconfigure_plan``'s savepoint+restart
+semantics.
 
 Time: the trainer runs on a *virtual clock* driven by measured step wall
 times (scaled by ``time_scale``), so a 2-hour streaming experiment runs in
@@ -24,6 +33,7 @@ import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.config import CheckpointPlan, ModelConfig, OptimizerConfig
+from repro.config import replace as cfg_replace
 from repro.data.pipeline import StreamingBatcher
 from repro.data.stream import EventStream
 from repro.ft.failures import InjectedFailure
@@ -88,17 +98,69 @@ class ResilientTrainer:
         self.events: list[dict] = []
         self.losses: list[float] = []
         self._measured_step_s: Optional[float] = None
+        self._unhealthy_until = -1.0       # post-restore observation grace
 
     # ------------------------------------------------------------------
     def inject_failure_at(self, t: float, kind: str = "node") -> None:
         self.failure_schedule.append((t, kind))
         self.failure_schedule.sort()
 
+    def healthy(self) -> bool:
+        """False during the post-failure grace window, while latency/lag
+        samples reflect the recovery rather than the (CI, TR) -> L mapping
+        the controller's models were fitted on."""
+        return self.t >= self._unhealthy_until
+
     def set_ci(self, interval_s: float) -> None:
-        """Hot CI change (the Khaos actuation; no restart needed here)."""
+        """Hot CI change (the Khaos actuation; no restart needed here).
+        The manager's plan follows so ``current_plan().interval_s`` and
+        ``current_ci()`` never disagree."""
         self.policy.set_interval(interval_s, self.t)
+        self.ckpt.plan = cfg_replace(self.ckpt.plan, interval_s=interval_s)
         self.events.append({"t": self.t, "event": "reconfigure",
                             "ci": interval_s})
+
+    def drain(self) -> float:
+        """Checkpoint-now barrier: quiesce any in-flight async commit, then
+        write a cadence-exempt FULL savepoint of state + cursor to every
+        configured level (``CheckpointManager.savepoint`` — a regular
+        cadence-gated trigger could land memory-only or skip disk levels
+        entirely under every-Nth routing).  After drain() returns, nothing
+        the job has processed can be lost by a mechanism switch.  Returns
+        the blocking seconds (also charged to the virtual clock)."""
+        extra = {"pipeline": self.batcher.state_dict(), "t": self.t}
+        step = int(self.state["step"])
+        report = self.ckpt.savepoint(step, self.state, self.t, extra)
+        self.events.append({"t": self.t, "event": "checkpoint", "step": step,
+                            "kind": "savepoint",
+                            "levels": list(report.levels)})
+        self.t += report.blocking_s * self.tcfg.time_scale
+        return report.blocking_s
+
+    def set_plan(self, plan: CheckpointPlan) -> None:
+        """Controlled mechanism switch — the live ``reconfigure_plan``
+        actuation (mirrors ``SimJobHandle.reconfigure_plan``'s savepoint +
+        restart): drain under the old plan, rebuild the checkpoint plane
+        from ``plan``, and resume on the SAME policy clock and metrics
+        store.  Checkpoints already on disk remain restorable (the store
+        format is plan-independent and the level subdirectories are
+        shared), and the drained in-RAM snapshot + delta base carry over
+        into the rebuilt manager, so a failure right after the switch
+        still recovers the savepoint."""
+        old = self.ckpt
+        self.drain()
+        self.policy.set_interval(plan.interval_s, self.t)
+        # rebuild: fresh manager, same policy object -> cadence continuity
+        # (the drain's policy.mark anchors the next trigger), same metrics
+        # store -> the controller's observation windows span the switch.
+        # the manager (not tcfg) is the plan's source of truth after init:
+        # mutating the caller-owned TrainerConfig would leak one run's
+        # actuations into other trainers built from the same config
+        self.ckpt = CheckpointManager(self.tcfg.ckpt_dir, plan,
+                                      policy=self.policy)
+        self.ckpt.adopt_runtime_state(old)
+        self.events.append({"t": self.t, "event": "set_plan",
+                            "plan": plan.name, "ci": plan.interval_s})
 
     # ------------------------------------------------------------------
     def _checkpoint(self) -> float:
@@ -113,6 +175,9 @@ class ResilientTrainer:
 
     def _restore(self, failure_kind: str = "node") -> None:
         self.ckpt.on_failure(failure_kind)
+        # samples taken while catching up after the rollback reflect the
+        # failure, not steady state — hold healthy() low for a grace window
+        self._unhealthy_until = self.t + self.tcfg.detect_s + self.tcfg.restart_s
         try:
             report = self.ckpt.restore(self.state, failure_kind)
         except FileNotFoundError:
@@ -169,6 +234,8 @@ class ResilientTrainer:
             self.metrics.record("loss", self.t, loss)
             self.metrics.record("step_time", self.t, wall)
             self.metrics.record("consumer_lag", self.t, self.stream.lag)
+            self.metrics.record("arrival_rate", self.t,
+                                self.stream.rate_at(self.t))
             lat = self.stream.lag / max(self.tcfg.batch / max(wall * self.tcfg.time_scale, 1e-6), 1e-9)
             self.metrics.record("latency", self.t, lat)
             if on_second is not None:
@@ -184,6 +251,64 @@ class ResilientTrainer:
             "checkpoints": sum(1 for e in self.events if e["event"] == "checkpoint"),
             "failures": sum(1 for e in self.events if e["event"] == "failure"),
             "restores": sum(1 for e in self.events if e["event"] == "restore"),
+            "plan_switches": sum(1 for e in self.events if e["event"] == "set_plan"),
             "measured_step_s": self._measured_step_s,
             "ckpt_stats": self.ckpt.stats(),
         }
+
+
+# ---------------------------------------------------------------------------
+# JobHandle adapter for the Khaos controller (Phase 3, live substrate)
+# ---------------------------------------------------------------------------
+
+class TrainerJobHandle:
+    """``core.controller.JobHandle`` over the live ``ResilientTrainer`` —
+    the full protocol, interchangeable with ``sim.SimJobHandle`` under
+    ``KhaosController``/``KhaosRuntime``.  ``reconfigure_plan`` is the
+    real actuation: drain (checkpoint-now), manager rebuild from the new
+    plan, metrics-window continuity."""
+
+    def __init__(self, trainer: ResilientTrainer):
+        self.tr = trainer
+        self.reconfigurations: list[tuple[float, float]] = []
+        self.plan_changes: list[tuple[float, str]] = []
+
+    def now(self) -> float:
+        return self.tr.t
+
+    def current_ci(self) -> float:
+        return self.tr.policy.interval_s
+
+    def current_plan(self) -> CheckpointPlan:
+        return self.tr.ckpt.plan
+
+    def avg_latency(self, window_s: float) -> float:
+        return self.tr.metrics.series("latency").mean_over(
+            self.tr.t - window_s, self.tr.t)
+
+    def avg_throughput(self, window_s: float) -> float:
+        """Trailing-window mean of the arrival rate (the TR the QoS models
+        were fitted on), falling back to the instantaneous rate before the
+        first step lands a sample."""
+        tr_avg = self.tr.metrics.series("arrival_rate").mean_over(
+            self.tr.t - window_s, self.tr.t)
+        if np.isnan(tr_avg):
+            return self.tr.stream.rate_at(self.tr.t)
+        return tr_avg
+
+    def healthy(self) -> bool:
+        return self.tr.healthy()
+
+    def drain(self) -> None:
+        self.tr.drain()
+
+    def reconfigure(self, new_ci: float) -> None:
+        """Hot CI swap — no restart on this substrate (DESIGN.md §7.1)."""
+        self.reconfigurations.append((self.tr.t, new_ci))
+        self.tr.set_ci(new_ci)
+
+    def reconfigure_plan(self, plan: CheckpointPlan) -> None:
+        """Mechanism switch: drain + manager rebuild applies mode + CI."""
+        self.reconfigurations.append((self.tr.t, plan.interval_s))
+        self.plan_changes.append((self.tr.t, plan.name))
+        self.tr.set_plan(plan)

@@ -1,9 +1,10 @@
 from repro.sim.costmodel import SimCostModel, costmodel_from_arch, levels_due
 from repro.sim.simulator import StreamSimulator, SimDeployment, SimJobHandle
-from repro.sim.batched import (BatchedCampaign, BatchedDeployment, LaneSpec,
+from repro.sim.batched import (BatchedCampaign, BatchedDeployment,
+                               BatchedLaneHandle, LaneSpec,
                                make_plan_verifier, measure_profile_lanes)
 
 __all__ = ["SimCostModel", "costmodel_from_arch", "levels_due",
            "StreamSimulator", "SimDeployment", "SimJobHandle",
-           "BatchedCampaign", "BatchedDeployment", "LaneSpec",
-           "make_plan_verifier", "measure_profile_lanes"]
+           "BatchedCampaign", "BatchedDeployment", "BatchedLaneHandle",
+           "LaneSpec", "make_plan_verifier", "measure_profile_lanes"]

@@ -22,7 +22,23 @@ and all three failure kinds).  On top of the raw engine sit:
     "deployments execute sequentially" deviation in ``core/profiler.py``);
   * ``make_plan_verifier`` — the ``optimize_plan`` simulate-to-verify hook
     that replays top-k plan candidates through a campaign instead of
-    trusting re-priced QoS surfaces alone.
+    trusting re-priced QoS surfaces alone;
+  * ``BatchedLaneHandle`` — the full ``core.controller.JobHandle`` over
+    ONE lane, with real per-lane actuation (``lane_set_ci``/
+    ``lane_set_plan`` mirror the scalar ``set_ci``/``set_plan`` savepoint
+    + restart statement-for-statement), so ``KhaosRuntime.drive_campaign``
+    runs Phase 3 controller-IN-THE-LOOP across every lane at once.
+
+Lane-level early exit: a campaign used to step every lane to the longest
+horizon.  ``run`` now periodically COMPACTS finished lanes out of the
+array state — terminal lanes (past their own horizon) always, recovered
+chaos lanes too when ``early_exit=True`` — so mixed-horizon grids stop
+paying the longest lane's tail.  Compaction is invisible to results:
+dropped lanes' final state is parked in full-size master arrays and
+scattered back on completion, and per-lane arithmetic is elementwise, so
+fixed-seed lanes stay bit-exact against their scalar twins.
+``compactions``/``lanes_compacted`` count the events (recorded in
+``BENCH_sim.json``'s grid section).
 
 ``benchmarks/bench_recovery.py`` measures the engine (lane-ticks/s vs the
 scalar loop) and emits the ``BENCH_sim.json`` artifact (schema
@@ -94,10 +110,13 @@ class _PlanTable:
         self.trig_dur = np.zeros((P, maxp))
         self.trig_lvls = np.zeros((P, maxp, 3), dtype=bool)
         self.sync = np.array([p.sync for p in plans], dtype=bool)
+        self.level_mask = np.zeros((P, 3), dtype=bool)   # plan.levels, by column
         self.restore_dur = np.zeros((P, 3))
         self.cold_restore = np.zeros(P)
         self.surviving = np.zeros((P, len(KINDS), 3), dtype=bool)
         for pi, plan in enumerate(plans):
+            for level in plan.levels:
+                self.level_mask[pi, LEVELS.index(level)] = True
             for i in range(int(self.period[pi])):
                 self.trig_dur[pi, i] = max(
                     cost.trigger_write_duration(plan, i), 1e-3)
@@ -122,13 +141,27 @@ class BatchedCampaign:
     the history matrices (``lag_history`` and the derived
     ``latency_history``) and the ``recoveries`` lists, which carry the same
     records ``StreamSimulator.recoveries`` does.
+
+    ``flink_semantics`` governs the per-lane actuation (``lane_set_ci``/
+    ``lane_set_plan``): savepoint + controlled restart (the scalar
+    default) vs hot swap.  ``early_exit=True`` additionally lets the
+    periodic compaction (every ``compact_every`` ticks) retire lanes whose
+    chaos is fully resolved — all injections fired and recovered — before
+    their horizon; lag histories and event tallies of retired lanes are
+    then truncated at retirement, so leave it off when post-hoc
+    trajectory measurement (``measure_profile_lanes``) must cover the
+    full horizon.
     """
 
     def __init__(self, cost: SimCostModel, lanes: Sequence[LaneSpec],
-                 record_history: bool = True):
+                 record_history: bool = True, flink_semantics: bool = True,
+                 early_exit: bool = False, compact_every: int = 256):
         assert lanes, "a campaign needs at least one lane"
         self.cost = cost
         self.lanes = list(lanes)
+        self.flink_semantics = flink_semantics
+        self.early_exit = early_exit
+        self.compact_every = int(compact_every)
         N = self.n_lanes = len(self.lanes)
         self._ar = np.arange(N)
 
@@ -140,6 +173,7 @@ class BatchedCampaign:
         self.plan_id = np.zeros(N, dtype=np.int64)
         for i, k in enumerate(keys):
             self.plan_id[i] = uniq.setdefault(k, len(uniq))
+        self._plan_keys = uniq              # grows when lane_set_plan adds one
         self.table = _PlanTable(cost, list(uniq.keys()))
         self.lane_plan_name = [self.table.names[pid] for pid in self.plan_id]
         self._period = self.table.period[self.plan_id]
@@ -165,6 +199,8 @@ class BatchedCampaign:
         self.lag = np.zeros(N)
         self.produced = np.zeros(N)
         self.consumed = np.zeros(N)
+        self.processed_total = np.zeros(N)   # scalar: throughput-series sum
+                                             # (consumed net of rollbacks)
         self.pol_last = self.t0.copy()            # CheckpointPolicy.reset(t0)
         self.off_lvl = np.zeros((N, 3))           # offset_by_level
         self.last_off = np.zeros(N)
@@ -206,6 +242,105 @@ class BatchedCampaign:
             self._sync, cost.capacity_eps * (1.0 - cost.ckpt_sync_penalty),
             cost.capacity_eps * (1.0 - cost.async_overhead))
         self._all = np.ones(N, dtype=bool)
+
+        # -- compaction state (lane-level early exit) -----------------------
+        # working arrays hold only the ACTIVE lanes; `_active` maps compact
+        # column -> original lane index, `_pos` the inverse (-1 = retired).
+        # `_final` (allocated at first compaction) parks full-size masters
+        # that retired lanes' terminal state is scattered into; on
+        # completion `_finalize` restores every public array to full size
+        # in original lane order, so results are read exactly as before.
+        self._active = np.arange(N)
+        self._pos = np.arange(N)
+        self._final: Optional[dict] = None
+        self._finished = False
+        self._exec_override = np.full(N, -1, dtype=np.int64)
+        self._had_fail = np.isfinite(self.fail_t).any(axis=1)
+        self._t0_all = self.t0
+        self._lane_ticks_all = self.lane_ticks
+        self.compactions = 0
+        self.lanes_compacted = 0
+
+    #: per-lane working arrays compaction slices / finalize restores
+    _PER_LANE = ("lane_ticks", "t0", "t", "interval", "lag", "produced",
+                 "consumed", "processed_total",
+                 "pol_last", "off_lvl", "last_off", "ck_active",
+                 "ck_end", "ck_off", "ck_lvls", "ckpt_count", "save_count",
+                 "down", "down_until", "pending_ro", "steady_lag",
+                 "af_active", "af_t0", "af_kind", "af_ci", "af_level",
+                 "plan_id", "_period", "_sync", "_mu_ck",
+                 "fail_t", "fail_kind", "fptr", "_next_fail", "_had_fail")
+
+    # -- compaction -----------------------------------------------------
+    def _refresh_lane_cache(self) -> None:
+        n = self._active.size
+        self._ar = np.arange(n)
+        self._all = np.ones(n, dtype=bool)
+        self._min_ticks = int(self.lane_ticks.min()) if n else 0
+
+    def _maybe_compact(self) -> None:
+        if not self._active.size:
+            return
+        drop = self._step_idx >= self.lane_ticks          # past own horizon
+        if self.early_exit:
+            # chaos resolved: every injection fired and recovered
+            drop = drop | (self._had_fail & np.isinf(self._next_fail)
+                           & ~self.down & ~self.af_active)
+        nd = int(drop.sum())
+        if nd == 0 or nd * 8 < drop.size:                 # amortize copies
+            return
+        self._compact(drop)
+
+    def _compact(self, drop: np.ndarray) -> None:
+        full_idx = self._active
+        dropped = full_idx[drop]
+        self._exec_override[dropped] = np.minimum(self.lane_ticks[drop],
+                                                  self._step_idx)
+        if self._final is None:
+            # first compaction: the working arrays ARE the full-size
+            # masters — park them (retired entries keep terminal values)
+            self._final = {n: getattr(self, n) for n in self._PER_LANE}
+            self._final["_rates_tm"] = self._rates_tm
+        else:
+            for n in self._PER_LANE:
+                self._final[n][full_idx] = getattr(self, n)
+            # λ columns are immutable: the master already holds every lane
+        self._active = full_idx[~drop]
+        self._pos = np.full(self.n_lanes, -1, dtype=np.int64)
+        self._pos[self._active] = np.arange(self._active.size)
+        for n in self._PER_LANE:
+            setattr(self, n, self._final[n][self._active].copy())
+        self._rates_tm = np.ascontiguousarray(
+            self._final["_rates_tm"][:, self._active])
+        self._refresh_lane_cache()
+        self.compactions += 1
+        self.lanes_compacted += len(dropped)
+
+    def _finalize(self) -> None:
+        """Restore full-size arrays in original lane order once stepping is
+        over (results are then indexed exactly as in a compaction-free
+        run)."""
+        if self._finished:
+            return
+        self._finished = True
+        if self._final is None:
+            return
+        full_idx = self._active
+        for n in self._PER_LANE:
+            self._final[n][full_idx] = getattr(self, n)
+            setattr(self, n, self._final[n])
+        self._rates_tm = self._final["_rates_tm"]
+        self._final = None
+        self._active = np.arange(self.n_lanes)
+        self._pos = np.arange(self.n_lanes)
+        self._refresh_lane_cache()
+
+    def _lane_value(self, name: str, lane: int):
+        """Read a per-lane field by ORIGINAL lane index, live or retired."""
+        pos = int(self._pos[lane])
+        if pos >= 0:
+            return getattr(self, name)[pos]
+        return self._final[name][lane]
 
     # ------------------------------------------------------------------
     def _begin_failure(self, mask: np.ndarray, kind: np.ndarray,
@@ -339,9 +474,13 @@ class BatchedCampaign:
                 processed = np.minimum(inflow, mu)
                 self.lag = np.maximum(0.0, inflow - processed)
             self.consumed += processed
+            self.processed_total += processed
 
         if self._lag_hist_tm is not None:
-            self._lag_hist_tm[k] = self.lag
+            if self._final is None:
+                self._lag_hist_tm[k] = self.lag
+            else:      # compacted: scatter into the full-width history row
+                self._lag_hist_tm[k, self._active] = self.lag
 
         # recovery bookkeeping (ground truth: lag back to steady envelope)
         if self.af_active.any():
@@ -359,12 +498,13 @@ class BatchedCampaign:
             if near.any():
                 for i in np.flatnonzero(near):
                     lvl = int(self.af_level[i])
-                    self.recoveries[i].append({
+                    oi = int(self._active[i])     # original lane index
+                    self.recoveries[oi].append({
                         "t_start": float(self.af_t0[i]),
                         "kind": KINDS[int(self.af_kind[i])],
                         "ci": float(self.af_ci[i]),
                         "restore_level": LEVELS[lvl] if lvl >= 0 else None,
-                        "plan": self.lane_plan_name[i],
+                        "plan": self.lane_plan_name[oi],
                         "t_end": float(t[i]),
                         "recovery_s": float(t[i] - self.af_t0[i]),
                     })
@@ -388,15 +528,29 @@ class BatchedCampaign:
     def run(self, n_ticks: Optional[int] = None) -> "BatchedCampaign":
         end = self.horizon if n_ticks is None \
             else min(self.horizon, self._step_idx + n_ticks)
-        while self._step_idx < end:
+        ce = self.compact_every
+        while self._step_idx < end and self._active.size:
             self._step()
+            if ce and self._step_idx % ce == 0:
+                self._maybe_compact()
+        if self.done:
+            self._finalize()
         return self
+
+    @property
+    def done(self) -> bool:
+        """True once no lane has work left (horizon reached, or every lane
+        retired by compaction)."""
+        return (self._finished or self._step_idx >= self.horizon
+                or not self._active.size)
 
     # -- results --------------------------------------------------------
     @property
     def rates(self) -> np.ndarray:
         """(N, T) dense λ matrix (lane-major view of the time-major store)."""
-        return self._rates_tm.T
+        src = self._final["_rates_tm"] if self._final is not None \
+            else self._rates_tm
+        return src.T
 
     @property
     def lag_hist(self) -> Optional[np.ndarray]:
@@ -405,12 +559,15 @@ class BatchedCampaign:
 
     @property
     def ticks_run(self) -> int:
-        """Total alive lane-ticks advanced so far (the throughput unit)."""
-        return int(np.minimum(self.lane_ticks, self._step_idx).sum())
+        """Total alive lane-ticks advanced so far (the throughput unit);
+        early-exited lanes count the ticks they actually executed."""
+        executed = np.where(self._exec_override >= 0, self._exec_override,
+                            np.minimum(self._lane_ticks_all, self._step_idx))
+        return int(executed.sum())
 
     def times(self, lane: int) -> np.ndarray:
         """The tick clock of ``lane`` (t values its samples were taken at)."""
-        return self.t0[lane] + np.arange(int(self.lane_ticks[lane]))
+        return self._t0_all[lane] + np.arange(int(self._lane_ticks_all[lane]))
 
     def latency_history(self) -> np.ndarray:
         """(N, T) end-to-end latency, derived exactly as the scalar tick
@@ -424,6 +581,153 @@ class BatchedCampaign:
         """First recorded recovery_s of ``lane`` (scalar: recoveries[0])."""
         r = self.recoveries[lane]
         return float(r[0]["recovery_s"]) if r else None
+
+    def lane_rates(self, lane: int) -> np.ndarray:
+        """(T,) dense λ column for an ORIGINAL lane index (valid whether or
+        not the lane is currently compacted away — λ is immutable)."""
+        src = self._final["_rates_tm"] if self._final is not None \
+            else self._rates_tm
+        return src[:, lane]
+
+    def lane_plan(self, lane: int) -> CheckpointPlan:
+        """The plan currently in force on ``lane`` (original index), with
+        its live interval."""
+        pid = int(self._lane_value("plan_id", lane))
+        ci = float(self._lane_value("interval", lane))
+        return replace(self.table.plans[pid], interval_s=ci)
+
+    # -- per-lane actuation (the controller's knobs) --------------------
+    def _plan_index(self, plan: CheckpointPlan) -> int:
+        """Table id for ``plan``, extending the pricing tables when the
+        controller actuates a mechanism the campaign has not seen yet."""
+        key = replace(plan, interval_s=0.0, levels=tuple(plan.levels))
+        pid = self._plan_keys.get(key)
+        if pid is None:
+            pid = self._plan_keys.setdefault(key, len(self._plan_keys))
+            self.table = _PlanTable(self.cost, list(self._plan_keys.keys()))
+        return pid
+
+    def _require_live(self, lane: int) -> int:
+        i = int(self._pos[lane])
+        if i < 0:
+            raise ValueError(f"lane {lane} already finished (compacted)")
+        return i
+
+    def lane_set_ci(self, lane: int, ci_s: float) -> None:
+        """Per-lane ``StreamSimulator.set_ci``: hot CI change, or savepoint
+        + controlled restart under flink semantics — statement-for-
+        statement the scalar actuation, so a controller-in-the-loop lane
+        stays bit-exact against its scalar twin."""
+        i = self._require_live(lane)
+        self.interval[i] = float(ci_s)
+        if self.flink_semantics:
+            # savepoint immediately, restart; no offset rollback
+            self.ck_active[i] = False
+            self.last_off[i] = self.consumed[i]
+            lvls = self.table.level_mask[self.plan_id[i]]
+            self.off_lvl[i, lvls] = self.consumed[i]
+            self.down[i] = True
+            self.down_until[i] = self.t[i] + self.cost.reconfig_restart_s
+            self.pending_ro[i] = self.consumed[i]   # savepoint: nothing lost
+
+    def lane_set_plan(self, lane: int, plan: CheckpointPlan) -> None:
+        """Per-lane ``StreamSimulator.set_plan``: controlled mechanism
+        switch (savepoint + restart under flink semantics)."""
+        i = self._require_live(lane)
+        pid = self._plan_index(plan)
+        self.ck_active[i] = False      # in-flight write dies with the switch
+        # levels absent from the new plan drop their offsets (the scalar
+        # rebuilds its offset dict over plan.levels; missing levels read 0)
+        self.off_lvl[i, ~self.table.level_mask[pid]] = 0.0
+        self.plan_id[i] = pid
+        self._period[i] = self.table.period[pid]
+        self._sync[i] = self.table.sync[pid]
+        self._mu_ck[i] = self.cost.capacity_eps * (
+            1.0 - (self.cost.ckpt_sync_penalty if self.table.sync[pid]
+                   else self.cost.async_overhead))
+        self.lane_plan_name[lane] = self.table.names[pid]
+        self.save_count[i] = 0
+        self.lane_set_ci(lane, plan.interval_s)
+
+
+class BatchedLaneHandle:
+    """``core.controller.JobHandle`` over ONE lane of a running campaign.
+
+    N of these under N independent ``KhaosController`` instances turn a
+    fixed-plan campaign into a controller-IN-THE-LOOP one
+    (``core.runtime.KhaosRuntime.drive_campaign``): the campaign advances
+    all lanes with the fused tick, and at optimization-period boundaries
+    each lane's controller observes its windows and actuates its knobs —
+    the vectorized twin of the scalar ``SimJobHandle`` loop.  Requires the
+    campaign to record history (the latency window reads it).
+    """
+
+    def __init__(self, camp: BatchedCampaign, lane: int):
+        assert camp._lag_hist_tm is not None, \
+            "controller-in-the-loop lanes need record_history=True"
+        self.camp = camp
+        self.lane = int(lane)
+        self.reconfigurations: list[tuple[float, float]] = []
+        self.plan_changes: list[tuple[float, str]] = []
+
+    def alive(self) -> bool:
+        """Lane still stepping (not past its horizon, not compacted out)."""
+        i = int(self.camp._pos[self.lane])
+        return i >= 0 and self.camp._step_idx < int(self.camp.lane_ticks[i])
+
+    # -- observation ----------------------------------------------------
+    def now(self) -> float:
+        return float(self.camp._lane_value("t", self.lane))
+
+    def current_ci(self) -> float:
+        return float(self.camp._lane_value("interval", self.lane))
+
+    def current_plan(self) -> CheckpointPlan:
+        return self.camp.lane_plan(self.lane)
+
+    def _window(self, window_s: float) -> slice:
+        """Sample indices with t in [now - window, now] — the same
+        inclusive window ``TimeSeries.mean_over`` resolves for the scalar
+        handle (samples land on the tick clock t0 + k)."""
+        camp, lane = self.camp, self.lane
+        n = min(camp._step_idx, int(camp._lane_ticks_all[lane]))
+        t_now = self.now()
+        t0 = float(camp._t0_all[lane])
+        lo = max(0, int(np.ceil(t_now - window_s - t0)))
+        hi = min(n, int(np.floor(t_now - t0)) + 1)
+        return slice(lo, max(lo, hi))
+
+    def avg_latency(self, window_s: float) -> float:
+        camp = self.camp
+        lag = camp._lag_hist_tm[self._window(window_s), self.lane]
+        if not lag.size:
+            return float("nan")
+        steady_mu = max(camp.cost.capacity_eps, 1e-9)
+        return float(np.mean(camp.cost.base_latency_s + lag / steady_mu))
+
+    def avg_throughput(self, window_s: float) -> float:
+        lam = self.camp.lane_rates(self.lane)[self._window(window_s)]
+        return float(np.mean(lam)) if lam.size else float("nan")
+
+    def healthy(self) -> bool:
+        i = int(self.camp._pos[self.lane])
+        if i < 0:
+            return True
+        return not (self.camp.down[i] or self.camp.af_active[i])
+
+    # -- actuation ------------------------------------------------------
+    def drain(self) -> None:
+        """No-op by design: the flink-semantics controlled restart in
+        ``reconfigure``/``reconfigure_plan`` takes the savepoint."""
+
+    def reconfigure(self, new_ci: float) -> None:
+        self.reconfigurations.append((self.now(), new_ci))
+        self.camp.lane_set_ci(self.lane, new_ci)
+
+    def reconfigure_plan(self, plan: CheckpointPlan) -> None:
+        self.reconfigurations.append((self.now(), plan.interval_s))
+        self.plan_changes.append((self.now(), plan.name))
+        self.camp.lane_set_plan(self.lane, plan)
 
 
 # boolean wipe masks indexed by kind id, built once at import

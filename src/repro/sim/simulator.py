@@ -341,7 +341,10 @@ class SimDeployment:
 # ---------------------------------------------------------------------------
 
 class SimJobHandle:
-    """core.controller.JobHandle over a running StreamSimulator."""
+    """``core.controller.JobHandle`` over a running StreamSimulator — the
+    complete protocol (including ``drain``/``reconfigure_plan``), so the
+    controller and ``KhaosRuntime`` drive the sim and the live trainer
+    identically."""
 
     def __init__(self, sim: StreamSimulator):
         self.sim = sim
@@ -367,6 +370,11 @@ class SimJobHandle:
 
     def healthy(self) -> bool:
         return self.sim.down_until is None and self.sim._active_failure is None
+
+    def drain(self) -> None:
+        """No-op by design: the simulator's reconfigure path IS a drain —
+        under flink semantics ``set_ci``/``set_plan`` take a savepoint
+        (checkpoint-now, no offset rollback) before restarting."""
 
     def reconfigure(self, new_ci: float) -> None:
         self.reconfigurations.append((self.sim.t, new_ci))

@@ -191,6 +191,59 @@ def test_campaign_smoke():
     assert camp.ticks_run == 4 * T
 
 
+def test_mixed_horizon_compaction_is_invisible_to_results():
+    """Terminal lanes are compacted out of the array state mid-run; every
+    result (lag trajectories, recoveries, conservation, tick accounting)
+    still matches the scalar oracle lane-for-lane."""
+    sched = constant_rate(3000.0)
+    horizons = (500, 4000, 700, 2500, 900, 1400)
+    lanes, scalars = [], []
+    for j, T in enumerate(horizons):
+        ci = 30.0 + 15 * j
+        t = _worst_case(ci)
+        lanes.append(LaneSpec(rates=dense_rates(0.0, T, schedule=sched),
+                              ci_s=ci, failures=((t, "node"),)))
+        scalars.append(_scalar_twin(ci, None, "node", t, T, sched))
+    camp = BatchedCampaign(COST, lanes, compact_every=64).run()
+    assert camp.compactions > 0, "mixed horizons must trigger compaction"
+    assert camp.ticks_run == sum(horizons)
+    for i, sim in enumerate(scalars):
+        lag_scalar = np.array(sim.metrics.series("consumer_lag").values)
+        np.testing.assert_array_equal(lag_scalar,
+                                      camp.lag_hist[i][:len(lag_scalar)])
+        rec = sim.recoveries[0]["recovery_s"] if sim.recoveries else None
+        assert camp.lane_recovery(i) == rec
+        assert camp.produced[i] == sim.produced
+        assert camp.consumed[i] == sim.consumed
+        assert camp.ckpt_count[i] == sim.ckpt_count
+
+
+def test_early_exit_retires_recovered_lanes():
+    """early_exit=True retires chaos-resolved lanes before their horizon:
+    fewer lane-ticks executed, identical recovery measurements."""
+    sched = constant_rate(3000.0)
+    T = 4000
+    lanes, scalars = [], []
+    for ci in (20.0, 40.0, 60.0, 80.0):
+        t = _worst_case(ci)
+        lanes.append(LaneSpec(rates=dense_rates(0.0, T, schedule=sched),
+                              ci_s=ci, failures=((t, "node"),)))
+        scalars.append(_scalar_twin(ci, None, "node", t, T, sched))
+    camp = BatchedCampaign(COST, lanes, record_history=False,
+                           early_exit=True, compact_every=64).run()
+    assert camp.done
+    assert camp.lanes_compacted == len(lanes)
+    assert camp.ticks_run < len(lanes) * T, "no lane exited early"
+    for i, sim in enumerate(scalars):
+        assert camp.lane_recovery(i) == sim.recoveries[0]["recovery_s"]
+    # failure-free lanes are never early-exited (nothing was "resolved")
+    camp2 = BatchedCampaign(
+        COST, [LaneSpec(rates=dense_rates(0.0, 1200, schedule=sched),
+                        ci_s=30.0)],
+        record_history=False, early_exit=True, compact_every=64).run()
+    assert camp2.ticks_run == 1200
+
+
 def test_optimize_plan_simulate_to_verify():
     """The verifier replays the surface top-k and re-ranks by measured
     objective; replayed candidates carry their measurement."""

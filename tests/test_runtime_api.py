@@ -1,0 +1,400 @@
+"""The unified control-plane API: JobHandle protocol conformance across
+every substrate, KhaosRuntime phase transitions, the TrainerJobHandle
+drain + manager-rebuild plan switch, and Decision-kind integrity."""
+import inspect
+
+import numpy as np
+import pytest
+
+from repro.config import CheckpointPlan, KhaosConfig, OptimizerConfig
+from repro.core import (Decision, KhaosController, KhaosRuntime,
+                        missing_handle_methods, PhaseError, QoSModel)
+from repro.data.stream import (EventStream, constant_rate, dense_rates,
+                               record_workload)
+from repro.sim import (BatchedCampaign, BatchedDeployment, BatchedLaneHandle,
+                       LaneSpec, SimCostModel, SimJobHandle, StreamSimulator)
+
+COST = SimCostModel(capacity_eps=2600.0, ckpt_duration_s=1.0)
+
+
+def _prior_models(lo=10, hi=300):
+    rng = np.random.default_rng(0)
+    ci = rng.uniform(lo, hi, 150)
+    tr = rng.uniform(800, 2200, 150)
+    m_l = QoSModel().fit(ci, tr, COST.base_latency_s + 2.0 / ci)
+    m_r = QoSModel().fit(ci, tr, 80 + 1.2 * ci + 0.02 * tr)
+    return m_l, m_r
+
+
+def _sim_handle():
+    sim = StreamSimulator(COST, ci_s=60.0, schedule=constant_rate(1800.0))
+    return SimJobHandle(sim)
+
+
+def _lane_handle():
+    lanes = [LaneSpec(rates=dense_rates(0.0, 200,
+                                        schedule=constant_rate(1800.0)),
+                      ci_s=60.0)]
+    camp = BatchedCampaign(COST, lanes)
+    camp.run(n_ticks=50)
+    return BatchedLaneHandle(camp, 0)
+
+
+def _trainer_handle(tmp_path):
+    from repro.configs import get_smoke_config
+    from repro.runtime import ResilientTrainer, TrainerConfig, TrainerJobHandle
+    stream = EventStream(schedule=constant_rate(500.0))
+    tcfg = TrainerConfig(batch=4, seq_len=16, ckpt_dir=str(tmp_path),
+                         ckpt_interval_s=5.0, time_scale=20.0,
+                         detect_s=1.0, restart_s=1.0)
+    trainer = ResilientTrainer(get_smoke_config("yi-6b"), tcfg, stream,
+                               OptimizerConfig(total_steps=1000, lr=1e-3))
+    return TrainerJobHandle(trainer)
+
+
+# ---------------------------------------------------------------------------
+# protocol conformance — ONE shared test over every handle implementation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("factory", ["sim", "lane", "trainer"])
+def test_job_handle_protocol_conformance(factory, tmp_path):
+    """Every handle implements the complete protocol — same methods, sane
+    return types — so the controller drives all substrates identically."""
+    handle = {"sim": _sim_handle, "lane": _lane_handle,
+              "trainer": lambda: _trainer_handle(tmp_path)}[factory]()
+    missing = missing_handle_methods(handle)
+    assert not missing, f"{type(handle).__name__} missing {missing}"
+    assert np.isfinite(handle.now())
+    assert handle.current_ci() > 0
+    plan = handle.current_plan()
+    assert isinstance(plan, CheckpointPlan)
+    assert plan.interval_s == handle.current_ci()
+    assert isinstance(handle.healthy(), bool)
+    handle.avg_latency(30.0)            # may be NaN, must not raise
+    handle.avg_throughput(30.0)
+    handle.drain()                      # must be safe at any time
+    handle.reconfigure(handle.current_ci())
+    assert handle.reconfigurations
+
+
+def test_controller_module_has_no_capability_probing():
+    """The acceptance gate: the controller trusts the protocol — no
+    getattr-based optional-method fallbacks anywhere in the module."""
+    import repro.core.controller as controller
+    assert "getattr" not in inspect.getsource(controller)
+
+
+def test_decision_kinds_closed_set():
+    assert set(Decision.KINDS) == {"none", "defer", "reconfigure",
+                                   "infeasible", "cooldown", "unhealthy"}
+    with pytest.raises(AssertionError):
+        Decision(0.0, "bogus", 0.0, 0.0, 0.0)
+
+
+def test_controller_emits_only_documented_kinds():
+    m_l, m_r = _prior_models()
+    cfg = KhaosConfig(latency_constraint=1.0, recovery_constraint=240.0,
+                      optimization_period=30.0, ci_min=10, ci_max=300,
+                      reconfig_cooldown=60.0)
+    sim = StreamSimulator(COST, ci_s=290.0, schedule=constant_rate(1800.0))
+    sim.inject_failure(200.0)
+    job = SimJobHandle(sim)
+    ctl = KhaosController(cfg=cfg, m_l=m_l, m_r=m_r, cost=COST)
+    while sim.t < 900.0:
+        sim.tick()
+        ctl.maybe_optimize(job)
+    assert ctl.decisions
+    assert {d.kind for d in ctl.decisions} <= set(Decision.KINDS)
+
+
+# ---------------------------------------------------------------------------
+# KhaosRuntime phase machine
+# ---------------------------------------------------------------------------
+
+def _tiny_recording():
+    return record_workload(constant_rate(1800.0), duration=900, seed=0)
+
+
+def test_runtime_phases_in_order():
+    kcfg = KhaosConfig(num_failure_points=2, num_configs=2,
+                       ci_min=20, ci_max=90)
+    rt = KhaosRuntime(kcfg)
+    rec = _tiny_recording()
+    rt.record_steady_state(rec)
+    assert rt.phase == "steady_state"
+    rt.run_profiling(BatchedDeployment(COST, rec, warmup_s=120,
+                                       max_recovery_s=600.0), margin=60)
+    assert rt.phase == "profiled"
+    assert rt.m_l is not None and rt.m_r is not None
+    ctl = rt.attach(_sim_handle())
+    assert rt.phase == "optimizing"
+    assert isinstance(ctl, KhaosController)
+    assert rt.phase_sequence() == ["steady_state", "profiled", "optimizing"]
+
+
+def test_runtime_rejects_out_of_order_phases():
+    kcfg = KhaosConfig(num_failure_points=2, num_configs=2)
+    rec = _tiny_recording()
+    with pytest.raises(PhaseError):
+        KhaosRuntime(kcfg).run_profiling(BatchedDeployment(COST, rec))
+    with pytest.raises(PhaseError):
+        KhaosRuntime(kcfg).attach(_sim_handle())
+    with pytest.raises(PhaseError):
+        KhaosRuntime(kcfg).step()
+    rt = KhaosRuntime(kcfg)
+    rt.record_steady_state(rec)
+    with pytest.raises(PhaseError):         # phase 1 cannot repeat
+        rt.record_steady_state(rec)
+    m_l, m_r = _prior_models()
+    with pytest.raises(PhaseError):         # install_models only from idle
+        rt.install_models(m_l, m_r)
+
+
+def test_runtime_install_models_skips_but_logs_phases():
+    m_l, m_r = _prior_models()
+    rt = KhaosRuntime(KhaosConfig())
+    rt.install_models(m_l, m_r)
+    assert rt.phase == "profiled"
+    assert [ev.phase for ev in rt.phase_log] == ["steady_state", "profiled"]
+    assert all(ev.info.get("skipped") for ev in rt.phase_log)
+    job = _sim_handle()
+    rt.attach(job)
+    sim = job.sim
+    while sim.t < 100.0:
+        sim.tick()
+        rt.step()
+    assert rt.controller.decisions
+
+
+def test_runtime_rejects_incomplete_handle():
+    m_l, m_r = _prior_models()
+    rt = KhaosRuntime(KhaosConfig())
+    rt.install_models(m_l, m_r)
+
+    class Partial:                          # the old duck-typed shape
+        def now(self): return 0.0
+        def current_ci(self): return 60.0
+        def avg_latency(self, w): return 0.1
+        def avg_throughput(self, w): return 1000.0
+        def healthy(self): return True
+        def reconfigure(self, ci): pass
+
+    with pytest.raises(TypeError, match="reconfigure_plan"):
+        rt.attach(Partial())
+
+
+# ---------------------------------------------------------------------------
+# controller-in-the-loop batched campaigns (Phase 3, vectorized)
+# ---------------------------------------------------------------------------
+
+def test_drive_campaign_lane_matches_scalar_controlled_run():
+    """A controller-in-the-loop lane polled every tick is bit-exact against
+    the scalar sim + controller loop — including a mechanism switch."""
+    m_l, m_r = _prior_models()
+    cfg = KhaosConfig(latency_constraint=1.0, recovery_constraint=240.0,
+                      optimization_period=30.0, ci_min=10, ci_max=300,
+                      reconfig_cooldown=60.0)
+    T = 901    # (T-1) % period == 0: a decision falls due exactly at the
+               # final tick, exercising the post-loop poll
+    # scalar oracle (mechanism search active: decisions carry plans)
+    sim = StreamSimulator(COST, ci_s=290.0, schedule=constant_rate(1800.0))
+    job = SimJobHandle(sim)
+    ctl = KhaosController(cfg=cfg, m_l=m_l, m_r=m_r, cost=COST)
+    while sim.t < T:
+        sim.tick()
+        ctl.maybe_optimize(job)
+    assert job.plan_changes, "scenario must exercise a plan switch"
+    # campaign twin
+    rt = KhaosRuntime(cfg, cost=COST)
+    rt.install_models(m_l, m_r)
+    lanes = [LaneSpec(rates=dense_rates(0.0, T,
+                                        schedule=constant_rate(1800.0)),
+                      ci_s=290.0)]
+    camp = BatchedCampaign(COST, lanes)
+    sup = rt.drive_campaign(camp, period_ticks=1)
+    h = sup.handles[0]
+    assert h.reconfigurations == job.reconfigurations
+    assert h.plan_changes == job.plan_changes
+    np.testing.assert_array_equal(
+        np.array(sim.metrics.series("consumer_lag").values),
+        camp.lag_hist[0])
+    assert camp.lane_plan(0).name == sim.plan.name
+    assert camp.interval[0] == sim.policy.interval_s
+    assert [(d.t, d.kind) for d in sup.controllers[0].decisions] \
+        == [(d.t, d.kind) for d in ctl.decisions]
+
+
+def test_drive_campaign_supervises_selected_lanes_only():
+    m_l, m_r = _prior_models()
+    cfg = KhaosConfig(latency_constraint=1.0, recovery_constraint=240.0,
+                      optimization_period=30.0, ci_min=10, ci_max=300,
+                      reconfig_cooldown=60.0)
+    rt = KhaosRuntime(cfg)
+    rt.install_models(m_l, m_r)
+    T = 400
+    lanes = [LaneSpec(rates=dense_rates(0.0, T,
+                                        schedule=constant_rate(1800.0)),
+                      ci_s=290.0) for _ in range(3)]
+    camp = BatchedCampaign(COST, lanes)
+    sup = rt.drive_campaign(camp, lanes=[1])
+    assert camp.done
+    assert sup.summary()["lanes"] == 1
+    assert sup.reconfigurations(1)          # supervised lane acted
+    # unsupervised lanes kept their CI
+    assert camp.interval[0] == 290.0 and camp.interval[2] == 290.0
+    assert camp.interval[1] != 290.0
+
+
+# ---------------------------------------------------------------------------
+# TrainerJobHandle: live drain + manager rebuild
+# ---------------------------------------------------------------------------
+
+NEW_PLAN = CheckpointPlan(interval_s=3.0, mode="incremental", full_every=2,
+                          levels=("memory", "local"), sync=False,
+                          num_shards=2)
+
+
+def test_trainer_reconfigure_plan_drains_and_rebuilds(tmp_path):
+    """State survives a plan switch mid-run: the drain checkpoint lands
+    under the OLD plan, the next checkpoint under the NEW plan, and a
+    failure after the switch restores the drained state."""
+    job = _trainer_handle(tmp_path)
+    tr = job.tr
+    tr.run(duration_s=12.0)
+    old_manager = tr.ckpt
+    old_plan_name = tr.ckpt.plan.name
+    step_at_switch = int(tr.state["step"])
+    job.reconfigure_plan(NEW_PLAN)
+    # drain happened: the OLD manager persisted the pre-switch step
+    assert old_manager.stats()["saves"] >= 1
+    assert tr.ckpt is not old_manager, "manager must be rebuilt"
+    assert tr.ckpt.plan.name == NEW_PLAN.name
+    assert tr.policy is tr.ckpt.policy, "policy clock must carry over"
+    assert tr.policy.interval_s == NEW_PLAN.interval_s
+    assert job.plan_changes and job.plan_changes[0][1] == NEW_PLAN.name
+    # metrics-window continuity: the same store keeps pre-switch samples
+    assert len(tr.metrics.series("latency")) > 0
+    # training continues and the next checkpoint lands under the new plan
+    tr.run(duration_s=12.0)
+    summary = tr.summary()
+    assert summary["plan_switches"] == 1
+    assert int(tr.state["step"]) > step_at_switch
+    st = summary["ckpt_stats"]
+    assert st["plan"] == NEW_PLAN.name
+    assert st["saves"] >= 1
+    post_switch_ckpts = [e for e in tr.events
+                         if e["event"] == "checkpoint"
+                         and e["t"] > job.plan_changes[0][0]]
+    assert post_switch_ckpts, "no checkpoint landed under the new plan"
+    assert any("memory" in e["levels"] for e in post_switch_ckpts)
+    # a failure after the switch restores from the new plane's state
+    tr.inject_failure_at(tr.t + 2.0)
+    tr.run(duration_s=15.0)
+    summary = tr.summary()
+    assert summary["restores"] >= 1
+    assert int(tr.state["step"]) >= step_at_switch, \
+        "restore lost the drained progress"
+
+
+def test_controller_decision_switches_trainer_plan_mid_run(tmp_path):
+    """The acceptance scenario: a live ResilientTrainer run switches
+    checkpoint plans mid-run via a controller Decision."""
+    from repro.core import RescalingTracker
+
+    job = _trainer_handle(tmp_path)
+    tr = job.tr
+    # models that violate the recovery constraint at the starting CI but
+    # admit feasible (plan, CI) points lower in the window
+    rng = np.random.default_rng(1)
+    ci = rng.uniform(2, 60, 120)
+    trr = rng.uniform(100, 800, 120)
+    m_l = QoSModel().fit(ci, trr, 0.05 + 0.4 / ci)
+    m_r = QoSModel().fit(ci, trr, 5.0 + 1.2 * ci + 0.005 * trr)
+    cost = SimCostModel(capacity_eps=500.0, ckpt_duration_s=0.5)
+    rt = KhaosRuntime(
+        KhaosConfig(latency_constraint=1.0, recovery_constraint=20.0,
+                    optimization_period=4.0, ci_min=2, ci_max=60,
+                    reconfig_cooldown=8.0),
+        cost=cost, mtbf_s=600.0)
+    rt.install_models(m_l, m_r)
+    rt.attach(job)
+
+    class FixedP(RescalingTracker):
+        """Pin the localization factor: the micro trainer's measured
+        latency has nothing to do with the installed prior models, and
+        this test exercises the actuation path, not the model fit."""
+        @property
+        def p(self) -> float:
+            return 1.0
+
+    rt.controller.rescaler = FixedP()
+    tr.set_ci(50.0)     # start far above the feasible region
+    tr.run(duration_s=30.0, on_second=lambda s: rt.step())
+    switches = [d for d in rt.controller.decisions
+                if d.kind == "reconfigure" and d.new_plan is not None]
+    assert switches, "controller never issued a plan-switch Decision"
+    assert job.plan_changes
+    assert tr.ckpt.plan.name == switches[-1].new_plan.name
+    assert tr.summary()["plan_switches"] >= 1
+    assert {d.kind for d in rt.controller.decisions} <= set(Decision.KINDS)
+
+
+def test_drain_persists_under_sparse_level_cadences(tmp_path):
+    """drain() must be cadence-exempt: under a plan whose disk level only
+    writes every Nth trigger, a cadence-gated save could land memory-only
+    and the plan-switch rebuild would then lose the drained progress."""
+    from repro.configs import get_smoke_config
+    from repro.runtime import ResilientTrainer, TrainerConfig, TrainerJobHandle
+    stream = EventStream(schedule=constant_rate(500.0))
+    sparse = CheckpointPlan(interval_s=4.0, levels=("memory", "local"),
+                            local_every=4, num_shards=2)
+    tcfg = TrainerConfig(batch=4, seq_len=16, ckpt_dir=str(tmp_path),
+                         time_scale=20.0, detect_s=1.0, restart_s=1.0,
+                         plan=sparse)
+    tr = ResilientTrainer(get_smoke_config("yi-6b"), tcfg, stream,
+                          OptimizerConfig(total_steps=1000, lr=1e-3))
+    job = TrainerJobHandle(tr)
+    tr.run(duration_s=6.0)      # trigger count sits mid-cadence
+    drained_step = int(tr.state["step"])
+    job.reconfigure_plan(CheckpointPlan(interval_s=5.0, num_shards=2))
+    assert tr.ckpt.stats()["plan"] == "full-sync"
+    # a node failure right after the switch (memory level gone) must
+    # restore the drained step from disk, not an older cadence-gated write
+    tr.inject_failure_at(tr.t + 0.1)
+    tr.run(duration_s=8.0)
+    restore = next(e for e in tr.events if e["event"] == "restore")
+    assert restore["step"] >= drained_step, \
+        "drain savepoint was not durable across the plan switch"
+
+
+# ---------------------------------------------------------------------------
+# eager_snapshot knob (donated-buffer states)
+# ---------------------------------------------------------------------------
+
+def test_eager_snapshot_disables_deferred_transfer(tmp_path, monkeypatch):
+    import jax.numpy as jnp
+
+    import repro.checkpoint.manager as manager_mod
+    from repro.checkpoint import CheckpointManager
+    from repro.checkpoint.pipeline import ChunkedHostSnapshot
+
+    seen = []
+
+    class Spy(ChunkedHostSnapshot):
+        def __init__(self, state, chunk_bytes, defer_device=True):
+            seen.append(defer_device)
+            super().__init__(state, chunk_bytes, defer_device=defer_device)
+
+    monkeypatch.setattr(manager_mod, "ChunkedHostSnapshot", Spy)
+    state = {"w": jnp.arange(64, dtype=jnp.float32),
+             "step": np.int64(3)}
+    for eager in (False, True):
+        plan = CheckpointPlan(levels=("memory", "local"), sync=False,
+                              num_shards=1, eager_snapshot=eager)
+        mgr = CheckpointManager(str(tmp_path / f"eager{eager}"), plan)
+        mgr.save(1, state, 0.0)
+        mgr.wait()
+        report = mgr.restore(state, "task")
+        np.testing.assert_array_equal(np.asarray(report.state["w"]),
+                                      np.asarray(state["w"]))
+    assert seen == [True, False]

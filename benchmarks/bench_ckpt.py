@@ -9,14 +9,17 @@ cost (reported as ``blocking_s`` and compared against the monolithic
 stream to the leaf-parallel encode/compress/write workers on the io pool.
 
 Besides the printed tables, ``main`` emits a ``BENCH_ckpt.json``
-calibration artifact (schema "bench_ckpt/1": state bytes, full write
-seconds, restore seconds, measured delta byte fractions, and the per-byte
-host encode CPU of the delta path) that
+calibration artifact (schema "bench_ckpt/2": state bytes, full write
+seconds, restore seconds, measured delta byte fractions, the per-byte
+host encode CPU of the delta path, AND the ``device`` section — per-codec
+on-device encode seconds and bytes-on-link of the ``DeltaLeafSource``
+path, where the ckpt_delta kernels run in front of D2H) that
 ``sim.costmodel.SimCostModel.from_calibration`` loads — closing the loop
-so the Khaos plan optimizer prices checkpoint mechanisms with measured
-numbers instead of the hand-set ``delta_fraction``/level defaults.  The
-final scenario runs the plan optimizer against that calibration and shows
-the (mode, CI) it picks vs the full-sync baseline.
+so the Khaos plan optimizer prices checkpoint mechanisms AND encode
+placements with measured numbers instead of the hand-set
+``delta_fraction``/level defaults.  The final scenario runs the plan
+optimizer against that calibration and shows the (mode, CI) it picks vs
+the full-sync baseline.
 
 ``smoke()`` (wired as ``benchmarks/run.py --smoke``) runs the same flow on
 a tiny state and validates the emitted artifact's schema — a
@@ -35,6 +38,7 @@ import numpy as np
 
 from repro.checkpoint import (AsyncCheckpointer, CheckpointManager,
                               CheckpointPlan, CheckpointStore,
+                              DeltaLeafSource, DeviceDeltaBase,
                               IncrementalCheckpointer)
 from repro.checkpoint.async_ckpt import snapshot_to_host
 from repro.config import OptimizerConfig
@@ -127,6 +131,11 @@ PLANS = {
     "incr8-sync": CheckpointPlan(mode="incremental", full_every=8),
     "incr8-async": CheckpointPlan(mode="incremental", full_every=8,
                                   sync=False, busy_policy="block"),
+    "dev-lossless": CheckpointPlan(mode="incremental", full_every=8,
+                                   encode_placement="device"),
+    "dev-int8": CheckpointPlan(mode="incremental", full_every=8,
+                               encode_placement="device",
+                               delta_codec="int8"),
     "multilevel": CheckpointPlan(levels=("memory", "local", "remote"),
                                  local_every=2, remote_every=8),
     "ml+delta": CheckpointPlan(mode="incremental", full_every=8,
@@ -147,7 +156,8 @@ def bench_plans(tmpdir: str = "/tmp/repro_bench_ckpt_plans",
     print(f"\n=== Checkpoint plans ({triggers} triggers, "
           f"state = {nbytes/2**20:.1f} MiB) ===")
     print(f"{'plan':12s} {'bytes_written':>14s} {'vs_full':>8s} "
-          f"{'write_ms':>9s} {'block_ms':>9s} {'encode_ms':>9s}")
+          f"{'write_ms':>9s} {'block_ms':>9s} {'encode_ms':>9s} "
+          f"{'link_frac':>9s}")
     rows = []
     plan_stats: dict[str, dict] = {}
     baseline_bytes = None
@@ -156,6 +166,7 @@ def bench_plans(tmpdir: str = "/tmp/repro_bench_ckpt_plans",
         mgr = CheckpointManager(f"{tmpdir}/{name}", plan)
         cur = state
         block, writes, encode, deltas = [], [], [], 0
+        link, delta_link = [], []
         for i in range(triggers):
             cur = _bump(cur)
             rep = mgr.save(i, cur, float(i))
@@ -163,7 +174,10 @@ def bench_plans(tmpdir: str = "/tmp/repro_bench_ckpt_plans",
             mgr.wait()
             writes.append(rep.duration_s)
             encode.append(rep.encode_s)
-            deltas += rep.kind == "delta"
+            link.append(rep.bytes_on_link)
+            if rep.kind == "delta":
+                deltas += 1
+                delta_link.append(rep.bytes_on_link)
         st = mgr.stats()
         total = st["bytes_written"]
         if baseline_bytes is None:
@@ -175,29 +189,72 @@ def bench_plans(tmpdir: str = "/tmp/repro_bench_ckpt_plans",
             "encode_cpu_s": float(np.sum(encode)),
             "delta_triggers": deltas,
             "bytes_by_kind": st["bytes_by_kind"],
+            # pre-compression post-encode D2H traffic — the link/disk
+            # distinction the cost model prices (host encodes move the raw
+            # state; device encodes move only the payload)
+            "bytes_on_link_per_trigger": float(np.mean(link)),
+            "delta_bytes_on_link": (float(np.mean(delta_link))
+                                    if delta_link else 0.0),
+            "encode_placement": plan.encode_placement,
+            "delta_codec": plan.delta_codec,
         }
         rows.append((name, total, total / baseline_bytes,
                      1e3 * float(np.mean(writes)),
                      1e3 * float(np.mean(block))))
         print(f"{name:12s} {total:>14d} {total/baseline_bytes:>8.3f} "
               f"{1e3*np.mean(writes):>9.1f} {1e3*np.mean(block):>9.1f} "
-              f"{1e3*np.sum(encode):>9.1f}")
+              f"{1e3*np.sum(encode):>9.1f} {np.mean(link)/nbytes:>9.3f}")
     return rows, plan_stats
+
+
+# ---------------------------------------------------------------------------
+# device-placement encode (DeltaLeafSource: kernels in front of D2H)
+# ---------------------------------------------------------------------------
+
+def bench_device_delta(scale: int = 4) -> dict:
+    """Measure the on-device delta encode per codec: encode+payload-D2H
+    seconds and bytes-on-link of one delta trigger vs the full state —
+    the ``device`` section of the bench_ckpt/2 artifact
+    (``SimCostModel.device_encode_s*`` / ``device_link_fraction*``)."""
+    state = _mk_state(scale)
+    jax.block_until_ready(state)
+    bumped = _bump(state)
+    jax.block_until_ready(bumped)
+    nbytes = tree_bytes(state)
+    base = DeviceDeltaBase(state)
+    print(f"\n=== Device-placement delta encode "
+          f"(state = {nbytes/2**20:.1f} MiB) ===")
+    out: dict[str, dict] = {}
+    for codec in ("lossless", "int8"):
+        # warm the per-leaf-shape kernel jit caches so encode_s measures
+        # the steady-state trigger, not compilation
+        DeltaLeafSource(bumped, base, codec=codec).wait()
+        t0 = time.monotonic()
+        src = DeltaLeafSource(bumped, base, codec=codec)
+        src.wait()
+        encode_s = time.monotonic() - t0
+        link = src.bytes_on_link()
+        out[codec] = {"bytes_on_link": int(link),
+                      "link_fraction": link / nbytes,
+                      "encode_s": encode_s}
+        print(f"device_{codec}: {1e3*encode_s:.1f} ms, "
+              f"{link} B on link ({link/nbytes:.3f}x full state)")
+    return out
 
 
 # ---------------------------------------------------------------------------
 # calibration artifact (BENCH_ckpt.json  <->  SimCostModel.from_calibration)
 # ---------------------------------------------------------------------------
 
-def build_calibration(meas: dict, plan_stats: dict) -> dict:
-    """Assemble the "bench_ckpt/1" artifact from the measured tables."""
+def build_calibration(meas: dict, plan_stats: dict, device: dict) -> dict:
+    """Assemble the "bench_ckpt/2" artifact from the measured tables."""
     incr = plan_stats.get("incr8-sync", {})
     encode_per_byte = 0.0
     if incr.get("delta_triggers"):
         encode_per_byte = incr["encode_cpu_s"] / (
             meas["state_bytes"] * incr["delta_triggers"])
     return {
-        "schema": "bench_ckpt/1",
+        "schema": "bench_ckpt/2",
         "state_bytes": meas["state_bytes"],
         "full_write_s": meas["full_write_s"],
         "restore_s": meas["restore_s"],
@@ -206,6 +263,7 @@ def build_calibration(meas: dict, plan_stats: dict) -> dict:
         "delta_encode_s_per_byte": encode_per_byte,
         "snapshot_full_copy_s": meas["snapshot_full_copy_s"],
         "async_blocking_s": meas["async_blocking_s"],
+        "device": device,
         "plans": plan_stats,
     }
 
@@ -214,7 +272,8 @@ def validate_calibration(cal: dict) -> None:
     """Schema check for the artifact (the ``run.py --smoke`` gate).
     Key/schema-version checking is delegated to the consumer
     (``SimCostModel.from_calibration``) so the contract lives in one
-    place; the numeric and plans-table checks below are bench-side only."""
+    place; the numeric, plans-table and device-section checks below are
+    bench-side only."""
     SimCostModel.from_calibration(cal)      # raises ValueError on mismatch
     for k in CALIBRATION_KEYS[1:]:
         if not isinstance(cal[k], (int, float)) or cal[k] < 0:
@@ -226,13 +285,31 @@ def validate_calibration(cal: dict) -> None:
         raise ValueError("plans table missing or empty")
     for name, st in cal["plans"].items():
         for k in ("bytes_per_trigger", "write_s", "blocking_s",
-                  "encode_cpu_s"):
+                  "encode_cpu_s", "bytes_on_link_per_trigger",
+                  "encode_placement", "delta_codec"):
             if k not in st:
                 raise ValueError(f"plan {name!r} missing {k}")
+    if cal["schema"] == "bench_ckpt/2":
+        # device-encoded delta triggers must beat the full-state D2H —
+        # the whole point of moving the encode in front of the link
+        int8 = cal["device"]["int8"]
+        if not int8["bytes_on_link"] < cal["state_bytes"]:
+            raise ValueError(
+                f"device int8 delta moved {int8['bytes_on_link']} B over "
+                f"the link, >= the {cal['state_bytes']} B full state")
+        for pname, st in cal["plans"].items():
+            if (st.get("encode_placement") == "device"
+                    and st.get("delta_codec") == "int8"
+                    and st.get("delta_triggers")
+                    and not st["delta_bytes_on_link"] < cal["state_bytes"]):
+                raise ValueError(
+                    f"plan {pname!r}: delta-trigger bytes_on_link "
+                    f"{st['delta_bytes_on_link']} not under the full state")
 
 
-def emit_calibration(path: str, meas: dict, plan_stats: dict) -> dict:
-    cal = build_calibration(meas, plan_stats)
+def emit_calibration(path: str, meas: dict, plan_stats: dict,
+                     device: dict) -> dict:
+    cal = build_calibration(meas, plan_stats, device)
     validate_calibration(cal)
     with open(path, "w") as f:
         json.dump(cal, f, indent=2)
@@ -307,33 +384,102 @@ def bench_calibrated_optimize(cal: dict):
 def main(out: str = "BENCH_ckpt.json"):
     rows, meas = bench_checkpoint()
     plan_rows, plan_stats = bench_plans()
+    device = bench_device_delta()
     rows += [(n, ms, f"bytes={b} vs_full={r:.3f}")
              for n, b, r, ms, _ in plan_rows]
-    cal = emit_calibration(out, meas, plan_stats)
+    cal = emit_calibration(out, meas, plan_stats, device)
     bench_optimize_plan()
     bench_calibrated_optimize(cal)
     return rows
 
 
+def _smoke_device_trainer(tmpdir: str) -> None:
+    """Drive one micro live trainer on an ``encode_placement="device"``
+    plan (interpret-mode kernels on CPU): a device-encoded delta must land
+    and restore through the manager's decode path."""
+    from repro.config import CheckpointPlan as Plan
+    from repro.configs import get_smoke_config
+    from repro.data.stream import EventStream, constant_rate
+    from repro.runtime import ResilientTrainer, TrainerConfig
+
+    plan = Plan(interval_s=2.0, mode="incremental", full_every=2,
+                encode_placement="device", num_shards=2)
+    tcfg = TrainerConfig(batch=2, seq_len=16, ckpt_dir=tmpdir,
+                         time_scale=40.0, detect_s=1.0, restart_s=1.0,
+                         plan=plan)
+    from repro.config import OptimizerConfig as Opt
+    trainer = ResilientTrainer(get_smoke_config("yi-6b"), tcfg,
+                               EventStream(schedule=constant_rate(400.0)),
+                               Opt(total_steps=500, lr=1e-3))
+    trainer.run(duration_s=12.0)
+    st = trainer.ckpt.stats()
+    if st["bytes_by_kind"]["delta"] <= 0:
+        raise ValueError(f"no device-encoded delta landed: {st}")
+    if not 0 < st["bytes_on_link"] < st["bytes_written"] * 1000:
+        raise ValueError(f"implausible bytes_on_link accounting: {st}")
+    rep = trainer.ckpt.restore(trainer.state, "node")
+    if rep.kind not in ("full", "full+delta"):
+        raise ValueError(f"unexpected restore kind {rep.kind!r}")
+    print(f"device-plan micro trainer OK: {st['saves']} triggers, "
+          f"{st['bytes_by_kind']['delta']} delta bytes, restored "
+          f"step {rep.step} ({rep.kind}) via the {plan.encode_placement} "
+          f"decode path")
+
+
 def smoke(tmpdir: str = "/tmp/repro_bench_ckpt_smoke") -> dict:
     """Tiny-state end-to-end check of the calibration loop: run the plan
-    bench, emit BENCH_ckpt.json, validate its schema and load it back
-    through ``SimCostModel.from_calibration``."""
+    bench (device placements included), emit BENCH_ckpt.json, validate its
+    bench_ckpt/2 schema (placement/codec fields, delta-trigger
+    bytes-on-link under the full state), load it back through
+    ``SimCostModel.from_calibration`` (plus a v1 artifact for the
+    versioned fallback), and drive a micro trainer on a device-encode
+    plan."""
     shutil.rmtree(tmpdir, ignore_errors=True)
     os.makedirs(tmpdir, exist_ok=True)
     _, meas = bench_checkpoint(tmpdir + "/micro", scale=1)
     _, plan_stats = bench_plans(tmpdir + "/plans", triggers=6, scale=1)
+    device = bench_device_delta(scale=1)
     path = os.path.join(tmpdir, "BENCH_ckpt.json")
-    cal = emit_calibration(path, meas, plan_stats)
+    cal = emit_calibration(path, meas, plan_stats, device)
     with open(path) as f:
         validate_calibration(json.load(f))
     cost = SimCostModel.from_calibration(path, capacity_eps=3000.0)
     assert cost.state_bytes > 0 and cost.ckpt_duration_s > 0
     assert cost.write_duration("delta") <= cost.write_duration("full") \
         or cost.delta_encode_s_per_byte > 0
+    assert cost.device_link_fraction_int8 < 1.0, \
+        "int8 device deltas must shrink the link traffic"
+    # placement pricing: device deltas swap the host encode term
+    # (delta_encode_s_per_byte * state_bytes) for the measured device
+    # encode — the difference must be exactly that swap, nothing dropped
+    # or double-charged
+    host_d = cost.write_duration("delta")
+    dev_d = cost.write_duration("delta", placement="device")
+    swap = cost.device_encode_s \
+        - cost.delta_encode_s_per_byte * cost.state_bytes
+    assert abs((dev_d - host_d) - swap) < 1e-12, \
+        f"device placement mispriced: {dev_d - host_d} != {swap}"
+    # link accounting: the modeled per-trigger link bytes must rank the
+    # int8-device plan under the host plan (and match the artifact's
+    # measured fraction on delta triggers)
+    incr8 = CheckpointPlan(mode="incremental", full_every=8)
+    dev8 = CheckpointPlan(mode="incremental", full_every=8,
+                          encode_placement="device", delta_codec="int8")
+    assert cost.avg_link_bytes(dev8) < cost.avg_link_bytes(incr8) \
+        == cost.state_bytes, "link-bytes model lost the placement dimension"
+    # versioned fallback: a v1 artifact (no device section) still loads,
+    # with the device fields at their modeled defaults
+    v1 = {k: v for k, v in cal.items() if k != "device"}
+    v1["schema"] = "bench_ckpt/1"
+    cost_v1 = SimCostModel.from_calibration(v1)
+    assert cost_v1.device_link_fraction_int8 == \
+        SimCostModel.device_link_fraction_int8
+    _smoke_device_trainer(tmpdir + "/trainer")
     print(f"smoke OK: {path} validates and loads "
           f"(delta_fraction={cost.delta_fraction:.4f}, "
-          f"encode_s_per_byte={cost.delta_encode_s_per_byte:.3e})")
+          f"encode_s_per_byte={cost.delta_encode_s_per_byte:.3e}, "
+          f"device int8 link fraction "
+          f"{cost.device_link_fraction_int8:.3f})")
     return cal
 
 

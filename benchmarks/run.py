@@ -14,11 +14,15 @@
 Usage: PYTHONPATH=src python -m benchmarks.run [--quick | --smoke]
 
 ``--smoke`` is the tier-1-adjacent CI check: it runs the E5 checkpoint
-bench on a tiny state, a tiny 4-lane E4 campaign, and a tiny end-to-end
-``KhaosRuntime`` (all three phases on a 4-lane controller-in-the-loop
-campaign + a micro live trainer with a mid-run plan switch), validating
-that the emitted BENCH_ckpt.json / BENCH_sim.json artifacts match their
-schemas ("bench_ckpt/1" via ``SimCostModel.from_calibration``,
+bench on a tiny state (device-placement delta encodes included, plus a
+micro trainer on an ``encode_placement="device"`` plan in interpret
+mode), a tiny 4-lane E4 campaign, and a tiny end-to-end ``KhaosRuntime``
+(all three phases on a 4-lane controller-in-the-loop campaign + a micro
+live trainer with a mid-run plan switch), validating that the emitted
+BENCH_ckpt.json / BENCH_sim.json artifacts match their schemas
+("bench_ckpt/2" via ``SimCostModel.from_calibration`` — placement/codec
+fields, delta-trigger bytes-on-link under the full state, with
+"bench_ckpt/1" artifacts still loadable as the versioned fallback;
 "bench_sim/1" via ``bench_recovery.validate_sim_artifact``) and that the
 phase order / JobHandle protocol have not regressed — exiting non-zero on
 any mismatch.

@@ -2,7 +2,8 @@ from repro.checkpoint.store import CheckpointStore, CheckpointMeta, HAVE_ZSTD
 from repro.checkpoint.async_ckpt import AsyncCheckpointer, BackgroundCommitter
 from repro.checkpoint.incremental import IncrementalCheckpointer
 from repro.checkpoint.multilevel import MultiLevelCheckpointer
-from repro.checkpoint.pipeline import (ChunkedHostSnapshot, LeafSource,
+from repro.checkpoint.pipeline import (ChunkedHostSnapshot, DeltaLeafSource,
+                                       DeviceDeltaBase, LeafSource,
                                        PlainLeafSource, as_leaf_source)
 from repro.checkpoint.policy import CheckpointPolicy
 from repro.checkpoint.manager import (CheckpointManager, Checkpointer,
@@ -14,6 +15,6 @@ __all__ = [
     "BackgroundCommitter", "IncrementalCheckpointer",
     "MultiLevelCheckpointer", "CheckpointPolicy", "CheckpointManager",
     "Checkpointer", "CheckpointPlan", "SaveReport", "RestoreReport",
-    "HAVE_ZSTD", "ChunkedHostSnapshot", "LeafSource", "PlainLeafSource",
-    "as_leaf_source",
+    "HAVE_ZSTD", "ChunkedHostSnapshot", "DeltaLeafSource", "DeviceDeltaBase",
+    "LeafSource", "PlainLeafSource", "as_leaf_source",
 ]

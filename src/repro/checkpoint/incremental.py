@@ -91,14 +91,21 @@ def write_delta(directory: str, step: int, state_np: Any, base: Any,
     ``pipeline.io_pool``; ``state_np`` and ``base`` may be pytrees or
     ``pipeline.LeafSource``s (a chunked snapshot still transferring from
     the device overlaps its D2H with the encode of already-landed leaves).
-    An unchanged leaf (raw bytes equal to the base's) is recorded as a
+    A ``pipeline.DeltaLeafSource`` arrives PRE-encoded (the delta ran on
+    device, in front of D2H): its payloads are compressed and written
+    as-is — byte-identical blobs to the host encoder's, so placement never
+    changes what restore reads — and only leaves it could not
+    device-encode fall back to the host path against ``base``.  An
+    unchanged leaf (raw bytes equal to the base's) is recorded as a
     ``"zero"`` marker in the manifest instead of compressing and writing a
     full-size all-zeros blob.
 
     Returns (path, payload_bytes, encode_cpu_s) where ``encode_cpu_s``
     sums per-worker CPU seconds spent encoding+compressing — the quantity
-    ``SimCostModel.delta_encode_s_per_byte`` is calibrated from.  The
-    delta manifest records the codec and mode so ``apply_delta`` is
+    ``SimCostModel.delta_encode_s_per_byte`` is calibrated from (for a
+    device source this is compress-only CPU; the device encode seconds are
+    measured separately by ``bench_ckpt``).  The delta manifest records
+    the codec, mode and encode placement so ``apply_delta`` is
     self-describing.
     """
     from repro.checkpoint.pipeline import as_leaf_source, io_pool
@@ -106,21 +113,34 @@ def write_delta(directory: str, step: int, state_np: Any, base: Any,
     codec_name, compress = get_compressor(codec, level)
     src = as_leaf_source(state_np)
     base_src = as_leaf_source(base)
+    placement = getattr(src, "placement", "host")
+    pre_encoded = getattr(src, "encoded", None)
+    if pre_encoded is not None:
+        assert getattr(src, "codec", mode) == mode, \
+            (f"pre-encoded source codec {src.codec!r} does not match the "
+             f"requested delta mode {mode!r}")
     path = delta_dir(directory, step)
     tmp = fresh_tmp_dir(path)
 
     def encode_leaf(name: str) -> tuple[str, int, float, bool]:
-        leaf = np.asarray(src.get(name))
-        b = np.asarray(base_src.get(name))
         key = name.replace("/", "::")
         t0 = time.thread_time()
-        # skip-zero fast path: byte-level equality, compared through u8
-        # views (reshape keeps 0-d leaves viewable) so no copies are made
-        if leaf.dtype == b.dtype and leaf.shape == b.shape and \
-                np.array_equal(leaf.reshape(-1).view(np.uint8),
-                               b.reshape(-1).view(np.uint8)):
+        payload = pre_encoded(name) if pre_encoded is not None else None
+        if payload == "zero":       # device-side unchanged-leaf detection
             return key, 0, time.thread_time() - t0, True
-        blobs = _encode_leaf_blobs(key, leaf, b, mode, compress)
+        if payload is not None:
+            blobs = {key + sfx: compress(arr.tobytes())
+                     for sfx, arr in payload.items()}
+        else:
+            leaf = np.asarray(src.get(name))
+            b = np.asarray(base_src.get(name))
+            # skip-zero fast path: byte-level equality, compared through u8
+            # views (reshape keeps 0-d leaves viewable) so no copies are made
+            if leaf.dtype == b.dtype and leaf.shape == b.shape and \
+                    np.array_equal(leaf.reshape(-1).view(np.uint8),
+                                   b.reshape(-1).view(np.uint8)):
+                return key, 0, time.thread_time() - t0, True
+            blobs = _encode_leaf_blobs(key, leaf, b, mode, compress)
         cpu_s = time.thread_time() - t0
         nbytes = 0
         for k, blob in blobs.items():
@@ -136,6 +156,7 @@ def write_delta(directory: str, step: int, state_np: Any, base: Any,
     encode_cpu_s = sum(c for _, _, c, _ in results)
     meta = {"base_step": base_step, "step": step, "timestamp": timestamp,
             "mode": mode, "codec": codec_name, "scheme": "sub+xor",
+            "placement": placement,
             "zero": [k for k, _, _, z in results if z],
             "extra": extra or {}}
     write_json_atomic(os.path.join(tmp, "delta_manifest.json"), meta)
@@ -165,8 +186,14 @@ def newest_delta_step(directory: str) -> Optional[int]:
 
 
 def _decode_leaf(ddir: str, name: str, leaf: np.ndarray, mode: str,
-                 xor_ints: bool, zero: frozenset, decompress) -> np.ndarray:
-    """Read + decompress + decode one leaf (runs on an io worker)."""
+                 xor_ints: bool, zero: frozenset, decompress,
+                 device: bool = False) -> np.ndarray:
+    """Read + decompress + decode one leaf (runs on an io worker).
+
+    ``device=True`` runs the f32 decode through the ``kernels/ckpt_delta``
+    Pallas kernels instead of the ref.py host oracle — bit-identical
+    output (the kernels are oracle-verified), so either placement restores
+    blobs written by either encoder."""
     key = name.replace("/", "@")
     if name.replace("/", "::") in zero:     # unchanged leaf: base as-is
         return leaf
@@ -177,9 +204,16 @@ def _decode_leaf(ddir: str, name: str, leaf: np.ndarray, mode: str,
             delta = np.frombuffer(raw, np.float32)
             rpath = os.path.join(ddir, key + "@r.bin")
             if os.path.exists(rpath):        # bit-exactness correction
-                from repro.kernels.ckpt_delta.ref import lossless_decode_ref
                 with open(rpath, "rb") as f:
                     resid = np.frombuffer(decompress(f.read()), np.uint32)
+                if device:
+                    from repro.kernels.ckpt_delta.ops import (
+                        default_interpret, lossless_decode)
+                    out = np.asarray(lossless_decode(
+                        leaf.reshape(-1), delta, resid,
+                        interpret=default_interpret()))[:leaf.size]
+                    return out.reshape(leaf.shape)
+                from repro.kernels.ckpt_delta.ref import lossless_decode_ref
                 return lossless_decode_ref(leaf, delta,
                                            resid).reshape(leaf.shape)
             return (leaf.reshape(-1) + delta).reshape(leaf.shape)
@@ -201,19 +235,34 @@ def _decode_leaf(ddir: str, name: str, leaf: np.ndarray, mode: str,
                                  leaf.dtype).reshape(leaf.shape)
         # legacy scheme stored the raw leaf bytes
         return np.frombuffer(raw, leaf.dtype).reshape(leaf.shape)
-    from repro.kernels.ckpt_delta.ref import decode_ref
     with open(os.path.join(ddir, key + "@q.bin"), "rb") as f:
         q = np.frombuffer(decompress(f.read()), np.int8)
     with open(os.path.join(ddir, key + "@s.bin"), "rb") as f:
         s = np.frombuffer(decompress(f.read()), np.float32)
-    delta = decode_ref(q, s)[:leaf.size].reshape(leaf.shape)
+    if device:
+        from repro.kernels.ckpt_delta.ops import (default_interpret,
+                                                  delta_decode)
+        delta = np.asarray(delta_decode(
+            q, s, interpret=default_interpret()))[:leaf.size]
+        delta = delta.reshape(leaf.shape)
+    else:
+        from repro.kernels.ckpt_delta.ref import decode_ref
+        delta = decode_ref(q, s)[:leaf.size].reshape(leaf.shape)
     return (leaf.astype(np.float32) + delta).astype(leaf.dtype)
 
 
-def apply_delta(directory: str, step: int, base_state: Any) -> Any:
+def apply_delta(directory: str, step: int, base_state: Any,
+                placement: str = "host") -> Any:
     """Apply the delta at ``step`` on top of ``base_state`` (the restored
     base full snapshot).  Codec and mode come from the delta manifest;
-    leaves decode concurrently (mirror of the pipelined write path)."""
+    leaves decode concurrently (mirror of the pipelined write path).
+
+    ``placement`` selects where the DECODE runs ("host" via ref.py, or
+    "device" via the Pallas kernels) and is independent of the placement
+    the delta was encoded with — blobs are byte-compatible both ways, so
+    a host-encoded checkpoint restores through the device path and vice
+    versa."""
+    assert placement in ("host", "device"), placement
     meta = read_delta_manifest(directory, step)
     if meta is None:
         raise FileNotFoundError(f"delta {step} is corrupt or missing")
@@ -230,7 +279,8 @@ def apply_delta(directory: str, step: int, base_state: Any) -> Any:
     leaves = [np.asarray(l) for l in jax.tree_util.tree_leaves(base_state)]
     from repro.checkpoint.pipeline import io_pool
     futures = [io_pool().submit(_decode_leaf, ddir, name, leaf, mode,
-                                xor_ints, zero, decompress)
+                                xor_ints, zero, decompress,
+                                placement == "device")
                for name, leaf in zip(names, leaves)]
     out = [f.result() for f in futures]
     treedef = jax.tree_util.tree_structure(base_state)
@@ -252,11 +302,18 @@ class IncrementalCheckpointer:
         self._base_step: Optional[int] = None
         self.bytes_written_full = 0
         self.bytes_written_delta = 0
+        # pre-compression, post-encode bytes (this legacy checkpointer is
+        # host-encode only, so every save moves the raw state D2H) — kept
+        # separate from the post-compression bytes above so the BENCH
+        # artifacts and the cost model don't conflate link and disk traffic
+        self.bytes_on_link = 0
 
     # ------------------------------------------------------------------
     def save(self, step: int, state: Any, timestamp: float = 0.0,
              extra: Optional[dict] = None) -> str:
         state_np = jax.tree_util.tree_map(np.asarray, state)
+        self.bytes_on_link += sum(l.nbytes for l in
+                                  jax.tree_util.tree_leaves(state_np))
         if self._count % self.full_every == 0 or self._base is None:
             path = self.store.save(step, state_np, timestamp,
                                    {**(extra or {}), "kind": "full"})
@@ -294,4 +351,5 @@ class IncrementalCheckpointer:
     def stats(self) -> dict:
         return {"saves": self._count,
                 "bytes_written_full": self.bytes_written_full,
-                "bytes_written_delta": self.bytes_written_delta}
+                "bytes_written_delta": self.bytes_written_delta,
+                "bytes_on_link": self.bytes_on_link}

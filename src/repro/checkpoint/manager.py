@@ -19,7 +19,13 @@ single protocol, configured by ``config.CheckpointPlan``:
            |                  ref.py host oracle), leaf-parallel on the
            |                  io pool, overlapped with the D2H stream;
            |                  unchanged leaves short-circuit to a "zero"
-           |                  manifest marker
+           |                  manifest marker.
+           |               plan.encode_placement == "device" swaps the
+           |                 order of the two stages above: the Pallas
+           |                 codec runs on device against a device-resident
+           |                 base (pipeline.DeltaLeafSource) and only the
+           |                 encoded payload crosses the link — bytes_on_-
+           |                 link drops to ~0.25x state bytes for int8
            |
         compress           zstd when installed, zlib otherwise; the codec
            |                 used is recorded in the delta manifest
@@ -60,7 +66,8 @@ from repro.checkpoint.async_ckpt import BackgroundCommitter
 from repro.checkpoint.incremental import (apply_delta, newest_delta_step,
                                           read_delta_manifest, write_delta)
 from repro.checkpoint.multilevel import allowed_levels
-from repro.checkpoint.pipeline import ChunkedHostSnapshot, PlainLeafSource
+from repro.checkpoint.pipeline import (ChunkedHostSnapshot, DeltaLeafSource,
+                                       DeviceDeltaBase, PlainLeafSource)
 from repro.checkpoint.policy import CheckpointPolicy
 from repro.checkpoint.store import CheckpointStore
 from repro.config import CheckpointPlan
@@ -73,7 +80,13 @@ class SaveReport:
     step: int
     kind: str                       # full | delta | skipped
     levels: tuple = ()              # levels written this trigger
-    bytes_written: int = 0
+    bytes_written: int = 0          # post-compression bytes on disk
+    bytes_on_link: int = 0          # pre-compression post-encode bytes the
+                                    # trigger moved device->host — raw state
+                                    # for host-encode paths, encoded payload
+                                    # for device-encode deltas; the quantity
+                                    # bench_ckpt/2 and the cost model price,
+                                    # NOT the same thing as bytes_written
     duration_s: float = 0.0         # total write work (wall)
     blocking_s: float = 0.0         # portion that blocked the caller
     encode_s: float = 0.0           # delta encode+compress CPU seconds
@@ -128,10 +141,16 @@ class CheckpointManager:
         self._memory: Optional[tuple[int, Any, dict]] = None   # newest only
         self._base: Optional[Any] = None       # last full snapshot (host)
         self._base_step: Optional[int] = None
+        # device-resident twin of the host base (plan.encode_placement ==
+        # "device"): immutable references to the last full's device leaves,
+        # refreshed on every full trigger/savepoint so delta triggers can
+        # encode on device without a host round trip
+        self._device_base: Optional[DeviceDeltaBase] = None
         self._count = 0
         self._committer = (None if plan.sync
                            else BackgroundCommitter(plan.busy_policy))
         # accounting
+        self.link_bytes = 0           # pre-compression post-encode (D2H)
         self.bytes_by_kind = {"full": 0, "delta": 0}
         self.saves_by_level = {l: 0 for l in ("memory", "local", "remote")}
         self.skips = 0
@@ -169,9 +188,21 @@ class CheckpointManager:
         # the "immutable" device arrays are re-used by the next step)
         need_copy = (self._committer is not None or "memory" in levels
                      or self.plan.mode == "incremental")
-        snap = (ChunkedHostSnapshot(state, self.plan.chunk_bytes,
-                                    defer_device=not self.plan.eager_snapshot)
-                if need_copy else PlainLeafSource(state))
+        device_delta = (kind == "delta"
+                        and self.plan.encode_placement == "device"
+                        and self._device_base is not None)
+        if device_delta:
+            # encode in front of D2H: only the encoded payload crosses the
+            # link; raw leaves stay lazily reachable (memory-level parking,
+            # delta-upgraded-to-full self-heal) through immutable refs
+            snap = DeltaLeafSource(state, self._device_base,
+                                   codec=self.plan.delta_codec,
+                                   chunk_bytes=self.plan.chunk_bytes)
+        else:
+            snap = (ChunkedHostSnapshot(
+                        state, self.plan.chunk_bytes,
+                        defer_device=not self.plan.eager_snapshot)
+                    if need_copy else PlainLeafSource(state))
         if "memory" in levels:
             # the memory level always holds the decoded newest state (as a
             # possibly-still-transferring snapshot source) — a task restart
@@ -180,6 +211,8 @@ class CheckpointManager:
             self.saves_by_level["memory"] += 1
         if kind == "full":
             self._base, self._base_step = snap, step
+            if self.plan.encode_placement == "device":
+                self._device_base = DeviceDeltaBase(state)
         base, base_step = self._base, self._base_step
         self._count += 1
 
@@ -204,7 +237,7 @@ class CheckpointManager:
                     p, n, enc = write_delta(store.directory, step, snap,
                                             base, base_step, timestamp,
                                             extra,
-                                            self.plan.delta_encoding,
+                                            self.plan.delta_codec,
                                             self.plan.codec)
                     paths.append(p)
                     nbytes += n
@@ -212,6 +245,8 @@ class CheckpointManager:
                     self.bytes_by_kind["delta"] += n
                 self.saves_by_level[level] += 1
             report.bytes_written = nbytes
+            report.bytes_on_link = snap.bytes_on_link()
+            self.link_bytes += report.bytes_on_link
             report.encode_s = encode_s
             report.paths = tuple(paths)
             report.duration_s = time.monotonic() - t0
@@ -247,6 +282,10 @@ class CheckpointManager:
             self.saves_by_level["memory"] += 1
             levels.append("memory")
         self._base, self._base_step = snap, step
+        if self.plan.encode_placement == "device":
+            # the savepoint anchors a fresh delta chain; refresh the
+            # device-resident base so post-drain deltas encode against it
+            self._device_base = DeviceDeltaBase(state)
         nbytes, paths = 0, []
         for level, store in self.stores.items():
             paths.append(store.save(step, snap, timestamp,
@@ -259,7 +298,10 @@ class CheckpointManager:
         self.savepoints += 1
         self.policy.mark(timestamp)
         dur = time.monotonic() - t0
-        return SaveReport(step, "full", tuple(levels), nbytes, dur, dur,
+        self.link_bytes += snap.bytes_on_link()
+        return SaveReport(step, "full", tuple(levels), nbytes,
+                          bytes_on_link=snap.bytes_on_link(),
+                          duration_s=dur, blocking_s=dur,
                           paths=tuple(paths), synchronous=True)
 
     # -- restore ------------------------------------------------------------
@@ -310,7 +352,11 @@ class CheckpointManager:
             kind = "full"
             if restore_step > full_step:
                 meta = read_delta_manifest(store.directory, restore_step)
-                state = apply_delta(store.directory, restore_step, state)
+                # decode where this plan encodes; blobs are byte-compatible
+                # across placements, so a host-written delta restores here
+                # and a device-written one restores under a host plan
+                state = apply_delta(store.directory, restore_step, state,
+                                    placement=self.plan.encode_placement)
                 extra = meta.get("extra", extra)
                 kind = "full+delta"
             report = RestoreReport(state, restore_step, level, kind,
@@ -324,9 +370,13 @@ class CheckpointManager:
         this one replaces (the plan-switch rebuild): the predecessor's
         drain savepoint is the newest state, so task restarts keep their
         RAM path and incremental plans delta against the drained full —
-        the invariant lives here, next to the fields it protects."""
+        the invariant lives here, next to the fields it protects.  The
+        device-resident delta base rides along, so a plan switch onto (or
+        between) device-encode plans deltas against the drained full
+        without re-uploading it."""
         self._memory = old._memory
         self._base, self._base_step = old._base, old._base_step
+        self._device_base = old._device_base
 
     def wait(self) -> None:
         """Drain any in-flight async commit."""
@@ -339,6 +389,7 @@ class CheckpointManager:
             self._memory = None
             self._base = None     # host RAM gone: next save must be a full
             self._base_step = None
+            self._device_base = None   # the device died with the job too
         if failure_kind == "cluster" and "local" in self.stores:
             # the sim's cluster failure loses node-local disks too; real
             # deployments re-point the store at an empty scratch dir
@@ -372,6 +423,7 @@ class CheckpointManager:
             "savepoints": self.savepoints,
             "bytes_by_kind": dict(self.bytes_by_kind),
             "bytes_written": sum(self.bytes_by_kind.values()),
+            "bytes_on_link": self.link_bytes,
             "saves_by_level": dict(self.saves_by_level),
             "restores": list(self.restores),
             "async_errors": errors,

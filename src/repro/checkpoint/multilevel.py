@@ -21,10 +21,16 @@ import numpy as np
 
 from repro.checkpoint.store import CheckpointStore
 
+#: failure kind -> minimum level that survives it.  NOTE the deliberate
+#: modeling assumption ``"node" -> "local"``: node-local checkpoints are
+#: treated as surviving a node loss, i.e. the level-2 store behaves as if
+#: peers replicate it (paper-cited SCR/multi-level schemes).  Plain
+#: un-replicated node-local disk would degrade node failures to "remote".
+#: ``sim.costmodel.SimCostModel`` asserts this exact mapping at
+#: construction so a silent edit here cannot skew priced recoveries.
 LEVEL_COVERAGE = {
-    # failure kind -> minimum level that survives it
     "task": "memory",
-    "node": "local",      # with peer replication; plain node-local would be remote
+    "node": "local",
     "cluster": "remote",
 }
 _LEVELS = ("memory", "local", "remote")
@@ -98,6 +104,12 @@ class MultiLevelCheckpointer:
 
 
 def allowed_levels(failure_kind: str) -> tuple[str, ...]:
-    """Levels that survive ``failure_kind``, fastest-to-restore first."""
+    """Levels that survive ``failure_kind``, fastest-to-restore first.
+    Unknown kinds are an error, not a silent worst-case default — a typo'd
+    kind would otherwise quietly restore from the wrong level."""
+    if failure_kind not in LEVEL_COVERAGE:
+        raise ValueError(
+            f"unknown failure kind {failure_kind!r}; known kinds are "
+            f"{sorted(LEVEL_COVERAGE)} (see LEVEL_COVERAGE)")
     min_level = LEVEL_COVERAGE[failure_kind]
     return _LEVELS[_LEVELS.index(min_level):]

@@ -1,12 +1,22 @@
 """Pipelined checkpoint hot path: chunked device->host transfer feeding a
-parallel compression/write worker pool.
+parallel compression/write worker pool, with the delta encode placeable on
+EITHER side of the link.
 
 The pre-pipeline save path was serial end-to-end: a monolithic
 ``snapshot_to_host`` deep copy of the whole state blocked the step stream,
 then every leaf was encoded and compressed one after another on the commit
-thread.  This module breaks that into overlapping stages:
+thread.  This module breaks that into overlapping stages.  Host placement
+(``CheckpointPlan.encode_placement="host"``, the default) ships the raw
+state and encodes behind the link:
 
     trigger -> chunked D2H transfer  ||  encode  ||  compress  ||  write
+
+Device placement runs the ``kernels/ckpt_delta`` codec in front of D2H
+(``DeltaLeafSource``), so only the encoded payload crosses the link —
+delta + sparse residual (lossless) or int8 q + scales (~4x fewer bytes):
+
+    trigger -> device encode -> chunked D2H of encoded payload
+                                          ||  compress  ||  write
 
   * ``ChunkedHostSnapshot`` partitions the state's leaves into byte-bounded
     chunks.  Mutable host leaves (``np.ndarray``) are deep-copied eagerly —
@@ -97,6 +107,15 @@ class LeafSource:
 
     def get(self, name: str) -> np.ndarray:
         raise NotImplementedError
+
+    def bytes_on_link(self) -> int:
+        """Bytes this snapshot moves across the device->host link
+        (pre-compression, post-encode).  Raw sources move every leaf's raw
+        bytes; ``DeltaLeafSource`` overrides with the encoded-payload
+        accounting — the quantity ``SaveReport.bytes_on_link`` reports and
+        the cost model prices, distinct from the post-compression bytes
+        that hit the disk."""
+        return sum(self.nbytes(n) for n in self.names)
 
     def wait(self) -> None:
         """Block until every leaf is host-resident."""
@@ -196,6 +215,198 @@ class ChunkedHostSnapshot(LeafSource):
     def wait(self) -> None:
         for fut in self._future_of.values():
             fut.result()
+
+
+class DeviceDeltaBase:
+    """The delta base held device-resident across triggers.
+
+    Because ``jax.Array``s are immutable, holding references to the last
+    full snapshot's device leaves is free — no extra HBM beyond delaying
+    the old buffers' release — and gives the on-device encoder a base to
+    diff against without any host round trip.  Mutable host leaves are
+    deep-copied eagerly (the same aliasing contract as
+    ``ChunkedHostSnapshot``).  ``CheckpointManager`` refreshes this on
+    every full trigger/savepoint and carries it across plan-switch
+    rebuilds (``adopt_runtime_state``).
+    """
+
+    def __init__(self, state: Any):
+        self.leaves: dict[str, Any] = {}
+        for name, leaf in tree_flatten_with_names(state):
+            if isinstance(leaf, jax.Array):
+                self.leaves[name] = leaf          # immutable: ref == copy
+            else:
+                self.leaves[name] = np.array(leaf, copy=True)
+
+
+class DeltaLeafSource(LeafSource):
+    """Delta-encode on device, then stream only the ENCODED chunks D2H.
+
+    The ``kernels/ckpt_delta`` encoders are dispatched per f32 device leaf
+    in ``__init__`` (async on real accelerators), against the
+    device-resident base.  The encoded outputs are then pulled host-side
+    with the same first-chunk-sync contract as ``ChunkedHostSnapshot``:
+    the first payload chunk materializes synchronously (that device sync
+    is the caller-blocking cost), the rest on ``transfer_pool``.
+
+    Consumed two ways:
+
+      * ``encoded(name)`` — the pre-encoded payload for the delta writer
+        (``incremental.write_delta``): a dict of blob-suffix -> array
+        whose bytes are identical to the host encoder's blobs, the
+        ``"zero"`` marker for an unchanged leaf, or None for a leaf this
+        source could not device-encode (non-f32, host-resident, or
+        base-shape mismatch — the writer falls back to host encode).
+      * ``get(name)`` — the raw leaf, materialized lazily (memory-level
+        parking and the rare delta-upgraded-to-full self-heal write);
+        device refs are immutable so the late D2H is safe.
+
+    Lossless payloads are delta (f32, full size) + XOR residual (u32) —
+    but the residual is all-zero for any element within 2x of its base
+    (Sterbenz), so its D2H is skipped when the on-device nonzero count is
+    0 and the host writes a reconstructed zero blob: link traffic drops to
+    ~1.0x state bytes + the change flags, and the host CPU encode
+    disappears.  int8 payloads are q (1 B/elem) + per-1024 scales —
+    ~0.25x state bytes on the link.
+    """
+
+    placement = "device"
+
+    def __init__(self, state: Any, base: DeviceDeltaBase,
+                 codec: str = "lossless",
+                 chunk_bytes: int = DEFAULT_CHUNK_BYTES,
+                 interpret: Optional[bool] = None):
+        assert codec in ("lossless", "int8"), codec
+        from repro.kernels.ckpt_delta.ops import (default_interpret,
+                                                  int8_encode_leaf,
+                                                  lossless_encode_leaf)
+        self.codec = codec
+        self.interpret = default_interpret() if interpret is None \
+            else interpret
+        named = tree_flatten_with_names(state)
+        self.treedef = jax.tree_util.tree_structure(state)
+        self.names = [n for n, _ in named]
+        self._spec: dict[str, tuple[tuple, np.dtype]] = {}
+        self._raw: dict[str, Any] = {}
+        self._enc: dict[str, Any] = {}           # first-chunk payloads
+        self._future_of: dict[str, Future] = {}
+        self._link_lock = threading.Lock()
+        self._link_bytes = 0
+
+        pending: list[tuple[str, tuple]] = []    # (name, device outputs)
+        for name, leaf in named:
+            if isinstance(leaf, jax.Array):
+                self._spec[name] = (tuple(leaf.shape), np.dtype(leaf.dtype))
+                self._raw[name] = leaf
+                b = base.leaves.get(name)
+                if (np.dtype(leaf.dtype) == np.float32 and b is not None
+                        and tuple(getattr(b, "shape", ())) == tuple(leaf.shape)
+                        and np.dtype(b.dtype) == np.float32):
+                    bj = b if isinstance(b, jax.Array) else jax.numpy.asarray(b)
+                    fn = (lossless_encode_leaf if codec == "lossless"
+                          else int8_encode_leaf)
+                    pending.append((name, fn(leaf, bj,
+                                             interpret=self.interpret)))
+                    continue
+                # non-f32 device leaf: host-encode fallback, raw D2H lazily
+                self._account(self.nbytes(name))
+            else:
+                arr = np.array(leaf, copy=True)   # mutable host leaf
+                self._spec[name] = (tuple(arr.shape), arr.dtype)
+                self._raw[name] = arr
+                self._account(arr.nbytes)
+
+        # byte-bounded chunks over the encoded payloads (worst-case size)
+        chunks: list[list[tuple[str, tuple]]] = []
+        cur: list[tuple[str, tuple]] = []
+        cur_bytes = 0
+        for name, outs in pending:
+            cur.append((name, outs))
+            cur_bytes += sum(int(np.prod(o.shape, dtype=np.int64))
+                             * np.dtype(o.dtype).itemsize for o in outs)
+            if cur_bytes >= chunk_bytes:
+                chunks.append(cur)
+                cur, cur_bytes = [], 0
+        if cur:
+            chunks.append(cur)
+
+        if chunks:      # first chunk synchronously: the device sync point
+            self._enc.update(self._materialize(chunks[0]))
+        pool = transfer_pool()
+        for chunk in chunks[1:]:
+            fut = pool.submit(self._materialize, chunk)
+            for name, _ in chunk:
+                self._future_of[name] = fut
+
+    def _account(self, nbytes: int) -> None:
+        with self._link_lock:
+            self._link_bytes += int(nbytes)
+
+    def _materialize(self, chunk: list) -> dict[str, Any]:
+        return {name: self._pull(name, outs) for name, outs in chunk}
+
+    def _pull(self, name: str, outs: tuple) -> Any:
+        """D2H one leaf's encoded payload (or detect it unchanged)."""
+        shape, _ = self._spec[name]
+        n = int(np.prod(shape, dtype=np.int64)) if shape else 1
+        if self.codec == "lossless":
+            delta, resid, changed, nnz = outs
+            if not bool(np.asarray(changed)):
+                return "zero"
+            payload = {"": np.asarray(delta)[:n]}
+            self._account(n * 4)
+            if int(np.asarray(nnz)):
+                payload["::r"] = np.asarray(resid)[:n]
+                self._account(n * 4)
+            else:       # residual known all-zero: reconstruct host-side —
+                        # the on-disk blob stays byte-identical, the link
+                        # transfer is skipped
+                payload["::r"] = np.zeros(n, np.uint32)
+            return payload
+        q, scales, changed = outs
+        if not bool(np.asarray(changed)):
+            return "zero"
+        q_np, s_np = np.asarray(q), np.asarray(scales)
+        self._account(q_np.nbytes + s_np.nbytes)
+        return {"::q": q_np, "::s": s_np}
+
+    # -- LeafSource interface -------------------------------------------
+    def spec(self, name: str) -> tuple[tuple, np.dtype]:
+        return self._spec[name]
+
+    def get(self, name: str) -> np.ndarray:
+        leaf = self._raw[name]
+        if isinstance(leaf, np.ndarray):
+            return leaf
+        arr = np.asarray(leaf)
+        with self._link_lock:
+            cur = self._raw[name]
+            if isinstance(cur, np.ndarray):     # another worker won the race
+                return cur
+            self._raw[name] = arr
+            # a raw pull IS link traffic (remote/self-heal full writes and
+            # memory-level restores pull raw leaves from a delta source) —
+            # count it so bytes_on_link never under-reports a delta trigger
+            # that also performed a full write
+            self._link_bytes += arr.nbytes
+        return arr
+
+    def encoded(self, name: str) -> Any:
+        """Pre-encoded payload dict, ``"zero"``, or None (host fallback).
+        Blocks until the leaf's encoded chunk has landed."""
+        fut = self._future_of.get(name)
+        if fut is not None:
+            return fut.result()[name]
+        return self._enc.get(name)
+
+    def wait(self) -> None:
+        for fut in self._future_of.values():
+            fut.result()
+
+    def bytes_on_link(self) -> int:
+        self.wait()
+        with self._link_lock:
+            return self._link_bytes
 
 
 def as_leaf_source(state: Any) -> LeafSource:

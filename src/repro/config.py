@@ -285,7 +285,13 @@ class CheckpointPlan:
     interval_s: float = 60.0          # CI — the Khaos-controlled cadence knob
     mode: str = "full"                # full | incremental
     full_every: int = 8               # full snapshot every N triggers (incremental)
-    delta_encoding: str = "lossless"  # lossless | int8 (Pallas ckpt_delta codec)
+    delta_codec: str = "lossless"     # lossless | int8 (Pallas ckpt_delta codec)
+    encode_placement: str = "host"    # host | device: where the delta encode
+                                      # runs.  "device" moves the ckpt_delta
+                                      # kernels in front of D2H, so only the
+                                      # encoded payload (delta+sparse residual,
+                                      # or int8 q+scales — ~4x fewer bytes)
+                                      # crosses the device->host link
     codec: str = "auto"               # auto | zstd | zlib (auto: zstd if installed)
     levels: Sequence[str] = ("local",)   # subset of {memory, local, remote}
     local_every: int = 1              # write local level every N triggers
@@ -306,7 +312,16 @@ class CheckpointPlan:
 
     def __post_init__(self) -> None:
         assert self.mode in ("full", "incremental"), self.mode
-        assert self.delta_encoding in ("lossless", "int8"), self.delta_encoding
+        assert self.delta_codec in ("lossless", "int8"), self.delta_codec
+        assert self.encode_placement in ("host", "device"), \
+            self.encode_placement
+        # device encode holds references to the live device buffers between
+        # the trigger and the D2H of the encoded chunks — that relies on JAX
+        # immutability, which donated buffers (the eager_snapshot case)
+        # break by re-using device memory on the next step
+        assert not (self.encode_placement == "device" and self.eager_snapshot), \
+            "encode_placement='device' requires non-donated (immutable) " \
+            "device buffers; eager_snapshot marks a donating step"
         assert self.busy_policy in ("skip", "block"), self.busy_policy
         unknown = set(self.levels) - {"memory", "local", "remote"}
         assert not unknown, f"unknown checkpoint levels {unknown}"
@@ -341,11 +356,23 @@ class CheckpointPlan:
         return tuple(l for l in self.levels if l in ("local", "remote"))
 
     @property
+    def delta_encoding(self) -> str:
+        """Pre-PR-5 alias of ``delta_codec`` (read-only)."""
+        return self.delta_codec
+
+    @property
     def name(self) -> str:
-        """Short human tag, e.g. 'incr8-async-mlr' — used in Decisions,
-        benchmark tables and event logs."""
+        """Short human tag, e.g. 'incr8-async-dev-int8-mlr' — used in
+        Decisions, benchmark tables and event logs.  Codec/placement parts
+        appear only when they differ from the host-lossless default, so
+        pre-existing plan names are unchanged."""
         parts = ["full" if self.mode == "full" else f"incr{self.full_every}"]
         parts.append("sync" if self.sync else "async")
+        if self.mode == "incremental":
+            if self.encode_placement == "device":
+                parts.append("dev")
+            if self.delta_codec == "int8":
+                parts.append("int8")
         if tuple(self.levels) != ("local",):
             parts.append("".join(l[0] for l in self.levels))
         return "-".join(parts)
@@ -367,7 +394,7 @@ class CheckpointConfig:
             interval_s=self.interval_seconds,
             mode="incremental" if self.incremental else "full",
             full_every=self.full_every,
-            delta_encoding="int8" if self.incremental else "lossless",
+            delta_codec="int8" if self.incremental else "lossless",
             levels=tuple(self.levels),
             sync=self.mode != "async",
             keep=self.keep)

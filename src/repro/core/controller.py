@@ -166,9 +166,18 @@ class KhaosController:
                           self.cfg.ci_min, self.cfg.ci_max)
         return res.ci if res.feasible else None
 
-    def maybe_optimize(self, job: JobHandle) -> Optional[Decision]:
+    def maybe_optimize(self, job: JobHandle,
+                       shared_pred: Optional[tuple] = None
+                       ) -> Optional[Decision]:
         """Run one optimization cycle if the period elapsed. Returns the
-        decision made (or None if not yet due)."""
+        decision made (or None if not yet due).
+
+        ``shared_pred`` is the batched-evaluation hook used by
+        ``KhaosRuntime.drive_campaign``: a pre-computed ``(pred_lat,
+        pred_rec)`` pair for this job's current (CI, TR), evaluated ONCE
+        over all lanes' vectors per period instead of twice per lane.
+        ``QoSModel.predict`` is row-independent, so the shared values are
+        bit-identical to the per-lane ones and Decisions are unchanged."""
         t = job.now()
         if t - self._last_opt_t < self.cfg.optimization_period:
             return None
@@ -188,12 +197,15 @@ class KhaosController:
             return self._decide(t, "none", lat, tr_avg, float("nan"))
 
         # localize M_L predictions to current conditions (rescaling factor p)
-        pred_lat = float(self.m_l.predict(np.array([ci_now]), tr_avg)[0])
+        if shared_pred is not None:
+            pred_lat, pred_rec = float(shared_pred[0]), float(shared_pred[1])
+        else:
+            pred_lat = float(self.m_l.predict(np.array([ci_now]), tr_avg)[0])
+            pred_rec = float(self.m_r.predict(np.array([ci_now]), tr_avg)[0])
         self.rescaler.track(lat, pred_lat)
         self.latency_obs.append((ci_now, tr_avg, lat))
 
         # violation checks
-        pred_rec = float(self.m_r.predict(np.array([ci_now]), tr_avg)[0])
         lat_violation = lat > self.cfg.latency_constraint
         rec_violation = pred_rec > self.cfg.recovery_constraint
         if not (lat_violation or rec_violation):

@@ -59,7 +59,12 @@ class QoSModel:
         assert self._beta is not None, "fit first"
         ci = np.asarray(ci, np.float64)
         tr = np.broadcast_to(np.asarray(tr, np.float64), ci.shape)
-        return self._design(ci, tr) @ self._beta
+        # row-independent reduction (not BLAS matmul): each prediction is
+        # its own pairwise sum, so predicting a stacked batch of (ci, tr)
+        # rows is BIT-identical to predicting them one at a time — the
+        # property the controller's shared per-period evaluation
+        # (KhaosRuntime.drive_campaign) relies on
+        return (self._design(ci, tr) * self._beta).sum(axis=-1)
 
     def avg_percent_error(self, ci, tr, y) -> float:
         """The paper's post-execution error analysis (Tables II(a)/III(a))."""

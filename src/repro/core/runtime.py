@@ -255,15 +255,50 @@ class KhaosRuntime:
                              lanes=len(lane_ids))
         while not campaign.done:
             campaign.run(n_ticks=period)
-            for ctl, h in zip(controllers, handles):
-                if h.alive():
-                    ctl.maybe_optimize(h)
+            live = [(ctl, h) for ctl, h in zip(controllers, handles)
+                    if h.alive()]
+            preds = self._shared_predictions(live)
+            for (ctl, h), pred in zip(live, preds):
+                ctl.maybe_optimize(h, shared_pred=pred)
         # the scalar loop polls once more after its final tick (alive()
         # is already False there, so the in-loop polls skip it); actuation
         # on a finished lane is as inert as the scalar's post-loop one
-        for ctl, h in zip(controllers, handles):
-            ctl.maybe_optimize(h)
+        pairs = list(zip(controllers, handles))
+        for (ctl, h), pred in zip(pairs, self._shared_predictions(pairs)):
+            ctl.maybe_optimize(h, shared_pred=pred)
         return CampaignSupervision(campaign, lane_ids, handles, controllers)
+
+    def _shared_predictions(self, pairs: Sequence[tuple]) -> list:
+        """One ``QoSModel.predict`` over ALL lanes' (CI, TR) vectors per
+        optimization period, instead of two scalar evaluations per lane —
+        the vectorized-controller cut for very wide supervised campaigns.
+        Only lanes whose ``maybe_optimize`` will actually reach the
+        prediction site are evaluated (the gating predicates below mirror
+        its early exits exactly), and ``QoSModel.predict`` is
+        row-independent, so per-lane Decisions are BIT-identical to the
+        per-lane evaluation loop (asserted in tests)."""
+        window = self.cfg.optimization_period
+        rows: list[tuple[int, float, float]] = []
+        for i, (ctl, h) in enumerate(pairs):
+            if h.now() - ctl._last_opt_t < self.cfg.optimization_period:
+                continue                      # not due: returns None
+            if not h.healthy():
+                continue                      # "unhealthy" decision
+            lat = h.avg_latency(window)
+            tr = h.avg_throughput(window)
+            if not (np.isfinite(lat) and np.isfinite(tr)):
+                continue                      # empty-window "none" decision
+            rows.append((i, h.current_ci(), tr))
+        preds: list = [None] * len(pairs)
+        if rows:
+            idx, ci, tr = zip(*rows)
+            p_l = self.m_l.predict(np.asarray(ci, np.float64),
+                                   np.asarray(tr, np.float64))
+            p_r = self.m_r.predict(np.asarray(ci, np.float64),
+                                   np.asarray(tr, np.float64))
+            for j, i in enumerate(idx):
+                preds[i] = (float(p_l[j]), float(p_r[j]))
+        return preds
 
 
 @dataclass

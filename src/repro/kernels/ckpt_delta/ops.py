@@ -1,14 +1,26 @@
-"""Public jit'd wrappers for the delta codec kernel."""
+"""Public jit'd wrappers for the delta codec kernel, plus the per-leaf
+fused entry points the device-resident delta plane
+(``checkpoint.pipeline.DeltaLeafSource``) dispatches in front of D2H:
+encode + unchanged-leaf detection + residual-sparsity count in ONE jitted
+call per leaf, so the snapshot path issues a single async dispatch per
+encodable leaf and the host only ever pulls the encoded payload."""
 from __future__ import annotations
 
 from functools import partial
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels.ckpt_delta.kernel import (delta_decode_fwd,
                                              delta_encode_fwd,
                                              lossless_decode_fwd,
                                              lossless_encode_fwd)
+
+
+def default_interpret() -> bool:
+    """Pallas interpret mode is required off-accelerator (the CPU backend
+    has no Mosaic lowering); on TPU the compiled kernels run."""
+    return jax.default_backend() == "cpu"
 
 
 @partial(jax.jit, static_argnames=("block_groups", "interpret"))
@@ -39,3 +51,46 @@ def lossless_decode(base, delta, resid, *, block_groups: int = 8,
     """Bit-exact inverse of lossless_encode (returns the original f32)."""
     return lossless_decode_fwd(base, delta, resid, block_groups=block_groups,
                                interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Per-leaf fused entry points for the device-resident delta plane
+# ---------------------------------------------------------------------------
+
+def _bits_changed(new_f32: jax.Array, base_f32: jax.Array) -> jax.Array:
+    """True iff any f32 bit pattern differs — the device twin of the host
+    path's raw-byte equality check that gates the manifest "zero" marker."""
+    return jnp.any(jax.lax.bitcast_convert_type(new_f32, jnp.uint32)
+                   != jax.lax.bitcast_convert_type(base_f32, jnp.uint32))
+
+
+@partial(jax.jit, static_argnames=("block_groups", "interpret"))
+def lossless_encode_leaf(new, base, *, block_groups: int = 8,
+                         interpret: bool = False):
+    """One leaf's on-device lossless encode: (delta f32, resid u32 — both
+    GROUP-padded), plus ``changed`` (any bit differs -> leaf must be
+    written) and ``resid_nnz`` (nonzero residual words).  The residual is
+    almost always all-zero (base + delta rounds back exactly whenever
+    new/base are within 2x of each other), so the caller skips its D2H
+    when ``resid_nnz == 0`` and reconstructs zeros host-side — the blob on
+    disk stays byte-identical to the host encoder's."""
+    nf = new.reshape(-1).astype(jnp.float32)
+    bf = base.reshape(-1).astype(jnp.float32)
+    d, r = lossless_encode_fwd(nf, bf, block_groups=block_groups,
+                               interpret=interpret)
+    return d, r, _bits_changed(nf, bf), jnp.count_nonzero(r)
+
+
+@partial(jax.jit, static_argnames=("block_groups", "interpret"))
+def int8_encode_leaf(new, base, *, block_groups: int = 8,
+                     interpret: bool = False):
+    """One leaf's on-device int8 group-quantized delta encode: (q int8
+    GROUP-padded, per-group f32 scales, changed).  Worst-case error per
+    element is half a quantization step: |err| <= max|delta_group| / 254
+    (scale = amax/127, round-to-nearest) — the documented bound the
+    round-trip test asserts."""
+    nf = new.reshape(-1).astype(jnp.float32)
+    bf = base.reshape(-1).astype(jnp.float32)
+    q, s = delta_encode_fwd(nf, bf, block_groups=block_groups,
+                            interpret=interpret)
+    return q, s, _bits_changed(nf, bf)

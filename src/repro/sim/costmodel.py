@@ -33,12 +33,19 @@ from typing import Any, Optional, Union
 
 from repro.config import CheckpointPlan
 
-#: required keys of the BENCH_ckpt.json calibration artifact (schema
-#: "bench_ckpt/1", written by benchmarks/bench_ckpt.py and validated by
-#: ``benchmarks/run.py --smoke``)
+#: required keys of the BENCH_ckpt.json calibration artifact (written by
+#: benchmarks/bench_ckpt.py and validated by ``benchmarks/run.py --smoke``)
 CALIBRATION_KEYS = ("schema", "state_bytes", "full_write_s", "restore_s",
                     "delta_fraction", "delta_int8_fraction",
                     "delta_encode_s_per_byte")
+
+#: accepted artifact schemas; "bench_ckpt/2" adds the ``device`` section
+#: (per-codec on-device encode measurements).  /1 artifacts stay loadable:
+#: the device fields then keep their modeled defaults
+CALIBRATION_SCHEMAS = ("bench_ckpt/1", "bench_ckpt/2")
+
+#: per-codec keys of each ``device`` entry in a bench_ckpt/2 artifact
+DEVICE_CALIBRATION_KEYS = ("bytes_on_link", "link_fraction", "encode_s")
 
 
 def levels_due(plan: CheckpointPlan, trigger_index: int
@@ -74,6 +81,30 @@ class SimCostModel:
     # -- measured host-CPU cost of the delta encode (calibrated) ------------
     delta_encode_s_per_byte: float = 0.0   # encode+compress CPU s per STATE byte
     state_bytes: float = 0.0               # full state size the above scales by
+    # -- device-placement delta encode (plan.encode_placement == "device"):
+    #    the ckpt_delta kernels run in front of D2H, so the host-CPU encode
+    #    term above is replaced by the measured on-device encode+payload-
+    #    transfer seconds, and bytes on the link shrink to the payload.
+    #    Defaults model the payload sizes analytically (lossless: f32 delta
+    #    + skipped all-zero residual ~= 1.0x; int8: q + 1/256 scales
+    #    ~= 0.26x); bench_ckpt/2 artifacts replace all four with measured
+    #    values
+    device_link_fraction: float = 1.0       # lossless payload / state bytes
+    device_link_fraction_int8: float = 0.26 # int8 payload / state bytes
+    device_encode_s: float = 0.0            # per-trigger device encode (lossless)
+    device_encode_s_int8: float = 0.0       # per-trigger device encode (int8)
+
+    def __post_init__(self) -> None:
+        # the priced restore paths hang off the LEVEL_COVERAGE mapping;
+        # assert the documented assumption (node failures survive at the
+        # peer-replicated node-local level) so a drive-by edit of the
+        # coverage table cannot silently skew every recovery estimate
+        from repro.checkpoint.multilevel import LEVEL_COVERAGE
+        expected = {"task": "memory", "node": "local", "cluster": "remote"}
+        assert LEVEL_COVERAGE == expected, (
+            f"LEVEL_COVERAGE changed to {LEVEL_COVERAGE!r}; SimCostModel "
+            f"prices restores under {expected!r} (node -> local assumes "
+            "peer-replicated level-2) — recalibrate before relaxing this")
 
     # -- calibration ---------------------------------------------------------
     @classmethod
@@ -92,7 +123,7 @@ class SimCostModel:
         missing = [k for k in CALIBRATION_KEYS if k not in cal]
         if missing:
             raise ValueError(f"calibration artifact missing keys {missing}")
-        if cal["schema"] != "bench_ckpt/1":
+        if cal["schema"] not in CALIBRATION_SCHEMAS:
             raise ValueError(f"unknown calibration schema {cal['schema']!r}")
         kw: dict[str, Any] = {
             "ckpt_duration_s": float(cal["full_write_s"]),
@@ -102,6 +133,25 @@ class SimCostModel:
             "delta_encode_s_per_byte": float(cal["delta_encode_s_per_byte"]),
             "state_bytes": float(cal["state_bytes"]),
         }
+        if cal["schema"] == "bench_ckpt/2":
+            dev = cal.get("device")
+            if not isinstance(dev, dict):
+                raise ValueError("bench_ckpt/2 artifact missing the "
+                                 "'device' measurement section")
+            for codec in ("lossless", "int8"):
+                entry = dev.get(codec)
+                bad = [k for k in DEVICE_CALIBRATION_KEYS
+                       if not isinstance((entry or {}).get(k), (int, float))]
+                if entry is None or bad:
+                    raise ValueError(
+                        f"device section entry {codec!r} missing or "
+                        f"non-numeric keys {bad or DEVICE_CALIBRATION_KEYS}")
+            kw["device_link_fraction"] = float(dev["lossless"]["link_fraction"])
+            kw["device_link_fraction_int8"] = float(dev["int8"]["link_fraction"])
+            kw["device_encode_s"] = float(dev["lossless"]["encode_s"])
+            kw["device_encode_s_int8"] = float(dev["int8"]["encode_s"])
+        # bench_ckpt/1: device fields keep their modeled defaults (the
+        # versioned fallback — old artifacts stay loadable)
         known = {f.name for f in fields(cls)}
         unknown = set(overrides) - known
         if unknown:
@@ -125,19 +175,27 @@ class SimCostModel:
 
     # -- per-kind / per-level pricing ---------------------------------------
     def write_duration(self, kind: str = "full", level: str = "local",
-                       encoding: str = "lossless") -> float:
-        """Seconds one write of ``kind`` takes at ``level``.  A delta write
-        additionally pays the host encode+compress CPU (which reads the
-        whole state regardless of how small the delta compresses) — priced
-        so ``optimize_plan`` stops recommending delta plans whose encode
-        exceeds the write win."""
+                       encoding: str = "lossless",
+                       placement: str = "host") -> float:
+        """Seconds one write of ``kind`` takes at ``level``.  A host-encoded
+        delta write additionally pays the host encode+compress CPU (which
+        reads the whole state regardless of how small the delta
+        compresses) — priced so ``optimize_plan`` stops recommending delta
+        plans whose encode exceeds the write win.  A device-encoded delta
+        (``plan.encode_placement == "device"``) replaces that term with the
+        measured per-trigger on-device encode+payload-transfer seconds —
+        the placement dimension the optimizer searches over."""
         d = self.ckpt_duration_s * {"memory": self.memory_write_factor,
                                     "local": 1.0,
                                     "remote": self.remote_write_factor}[level]
         if kind == "delta":
             d *= (self.delta_int8_fraction if encoding == "int8"
                   else self.delta_fraction)
-            d += self.delta_encode_s_per_byte * self.state_bytes
+            if placement == "device":
+                d += (self.device_encode_s_int8 if encoding == "int8"
+                      else self.device_encode_s)
+            else:
+                d += self.delta_encode_s_per_byte * self.state_bytes
         return d
 
     def restore_duration(self, level: str = "local",
@@ -153,16 +211,52 @@ class SimCostModel:
     def trigger_write_duration(self, plan: CheckpointPlan,
                                trigger_index: int) -> float:
         """Total write seconds for trigger number ``trigger_index``."""
-        return sum(self.write_duration(kind, level, plan.delta_encoding)
+        return sum(self.write_duration(kind, level, plan.delta_codec,
+                                       plan.encode_placement)
                    for level, kind in levels_due(plan, trigger_index))
 
     def avg_write_duration(self, plan: CheckpointPlan) -> float:
         """Steady-state average write seconds per checkpoint trigger."""
-        import math
-        period = max(1, math.lcm(max(plan.full_every, 1),
-                                 max(plan.local_every, 1),
-                                 max(plan.remote_every, 1)))
+        period = self._cadence_period(plan)
         return sum(self.trigger_write_duration(plan, i)
+                   for i in range(period)) / period
+
+    @staticmethod
+    def _cadence_period(plan: CheckpointPlan) -> int:
+        import math
+        return max(1, math.lcm(max(plan.full_every, 1),
+                               max(plan.local_every, 1),
+                               max(plan.remote_every, 1)))
+
+    # -- link-traffic accounting (bytes_on_link, priced per trigger) ---------
+    def trigger_link_bytes(self, plan: CheckpointPlan,
+                           trigger_index: int) -> float:
+        """Pre-compression bytes trigger ``trigger_index`` moves across the
+        device->host link — the modeled twin of ``SaveReport.bytes_on_link``.
+        Host placement ships the raw state every trigger (the snapshot IS
+        the transfer); device placement ships only the encoded payload
+        (``device_link_fraction*``), plus the raw state again whenever a
+        disk level takes a FULL this trigger (remote cadence / self-heal
+        fulls pull raw leaves even from a delta source)."""
+        due = plan.levels_due(trigger_index)
+        if plan.encode_placement != "device" \
+                or plan.is_full_trigger(trigger_index):
+            return self.state_bytes
+        frac = (self.device_link_fraction_int8
+                if plan.delta_codec == "int8" else self.device_link_fraction)
+        link = self.state_bytes * frac
+        if any(kind == "full" for level, kind in due if level != "memory"):
+            link += self.state_bytes
+        return link
+
+    def avg_link_bytes(self, plan: CheckpointPlan) -> float:
+        """Steady-state average ``bytes_on_link`` per trigger — what the
+        Jayasekara-style transfer term costs in bytes under each
+        (placement, codec); calibrated by the bench_ckpt/2 ``device``
+        section and compared against the measured per-plan
+        ``bytes_on_link_per_trigger`` in ``benchmarks/bench_ckpt.py``."""
+        period = self._cadence_period(plan)
+        return sum(self.trigger_link_bytes(plan, i)
                    for i in range(period)) / period
 
     def plan_overhead_fraction(self, plan: CheckpointPlan,
@@ -177,6 +271,10 @@ class SimCostModel:
 
     def surviving_levels(self, plan: CheckpointPlan,
                          failure_kind: str) -> tuple[str, ...]:
+        """Plan levels surviving ``failure_kind`` (fastest first) under the
+        asserted LEVEL_COVERAGE mapping.  Raises ``ValueError`` on an
+        unknown failure kind — silently defaulting would price a typo'd
+        kind as an arbitrary recovery path."""
         from repro.checkpoint.multilevel import allowed_levels
         return tuple(l for l in allowed_levels(failure_kind)
                      if l in plan.levels)

@@ -66,7 +66,7 @@ def test_crash_mid_delta_falls_back_to_base_full(tmp_path):
 
 def test_multilevel_delta_lossless_bit_exact(tmp_path):
     plan = CheckpointPlan(mode="incremental", full_every=3,
-                          delta_encoding="lossless",
+                          delta_codec="lossless",
                           levels=("memory", "local", "remote"),
                           local_every=1, remote_every=3)
     mgr = CheckpointManager(str(tmp_path), plan)

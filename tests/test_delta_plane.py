@@ -1,0 +1,474 @@
+"""Device-resident delta plane: on-device encode in front of D2H
+(``pipeline.DeltaLeafSource``), placement/codec as plan dimensions, and
+the batched controller evaluation that rides along in this PR.
+
+All kernel work runs in Pallas interpret mode on the CPU backend
+(``ckpt_delta.ops.default_interpret``), so every test here is tier-1.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointManager, CheckpointPlan,
+                              DeltaLeafSource, DeviceDeltaBase)
+from repro.checkpoint.incremental import (apply_delta, read_delta_manifest,
+                                          write_delta)
+from repro.kernels.ckpt_delta.ref import encode_ref, lossless_encode_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _state(seed=0, n=3000):
+    rng = np.random.default_rng(seed)
+    return {
+        "params": {"w": jnp.asarray(rng.standard_normal((n,))
+                                    .astype(np.float32)),
+                   "frozen": jnp.asarray(rng.standard_normal((256,))
+                                         .astype(np.float32))},
+        "host": rng.standard_normal((128,)).astype(np.float32),
+        "ids": np.arange(64, dtype=np.int64),
+        "step": jnp.asarray(np.int32(seed)),
+    }
+
+
+def _bump(state, eps=np.float32(1e-4)):
+    out = dict(state)
+    out["params"] = {"w": state["params"]["w"] + eps,
+                     "frozen": state["params"]["frozen"]}     # unchanged
+    out["host"] = state["host"] + np.float32(0.5)
+    return out
+
+
+def _bit_exact(a, b) -> bool:
+    la = [np.asarray(x) for x in jax.tree_util.tree_leaves(a)]
+    lb = [np.asarray(x) for x in jax.tree_util.tree_leaves(b)]
+    return all(np.array_equal(x, y) for x, y in zip(la, lb))
+
+
+# ---------------------------------------------------------------------------
+# DeltaLeafSource output == ref.py host oracle (kernel parity, tier-1)
+# ---------------------------------------------------------------------------
+
+def test_delta_leaf_source_matches_host_oracle_lossless():
+    s0 = _state(0)
+    s1 = _bump(s0)
+    src = DeltaLeafSource(s1, DeviceDeltaBase(s0), codec="lossless")
+    src.wait()
+    d_ref, r_ref = lossless_encode_ref(np.asarray(s1["params"]["w"]),
+                                       np.asarray(s0["params"]["w"]))
+    enc = src.encoded("params/w")
+    assert np.array_equal(enc[""], d_ref)
+    assert enc[""].dtype == np.float32 and enc["::r"].dtype == np.uint32
+    assert np.array_equal(enc["::r"], r_ref)
+    # unchanged device leaf -> device-side zero marker
+    assert src.encoded("params/frozen") == "zero"
+    # host and non-f32 leaves fall back (None) and stay raw-readable
+    assert src.encoded("host") is None
+    assert src.encoded("ids") is None
+    assert np.array_equal(src.get("host"), s1["host"])
+    # encoded link accounting: w delta (resid all-zero => skipped) +
+    # raw fallbacks; strictly under the raw state bytes
+    raw = sum(np.asarray(l).nbytes for l in jax.tree_util.tree_leaves(s1))
+    assert 0 < src.bytes_on_link() < raw
+
+
+def test_delta_leaf_source_matches_host_oracle_int8():
+    s0 = _state(1)
+    s1 = _bump(s0, eps=np.float32(3e-3))
+    src = DeltaLeafSource(s1, DeviceDeltaBase(s0), codec="int8")
+    src.wait()
+    delta = np.asarray(s1["params"]["w"]) - np.asarray(s0["params"]["w"])
+    q_ref, s_ref = encode_ref(delta.reshape(-1))
+    enc = src.encoded("params/w")
+    assert np.array_equal(enc["::q"], q_ref)
+    assert np.array_equal(enc["::s"], s_ref)
+    # int8 payload is ~1.25 B/elem vs 4 B/elem raw for the encoded leaves
+    w_bytes = np.asarray(s1["params"]["w"]).nbytes
+    assert enc["::q"].nbytes + enc["::s"].nbytes < 0.5 * w_bytes
+
+
+def test_delta_leaf_source_residual_transferred_when_nonzero():
+    """Elements whose base and new values are far apart (ratio > 2) make
+    base + delta round away from new — the residual must cross the link
+    and restore must stay bit-exact."""
+    base_w = np.array([1.0, 1e-8, -3.0, 1e20] * 256, np.float32)
+    new_w = np.array([1.0 + 1e-7, 7.25, 3e-8, -1.5] * 256, np.float32)
+    s0 = {"w": jnp.asarray(base_w)}
+    s1 = {"w": jnp.asarray(new_w)}
+    src = DeltaLeafSource(s1, DeviceDeltaBase(s0), codec="lossless")
+    src.wait()
+    d_ref, r_ref = lossless_encode_ref(new_w, base_w)
+    assert r_ref.any(), "fixture must produce a nonzero residual"
+    enc = src.encoded("w")
+    assert np.array_equal(enc["::r"], r_ref)
+    assert np.array_equal(enc[""], d_ref)
+
+
+# ---------------------------------------------------------------------------
+# int8 round trip obeys the documented group-quantization bound
+# ---------------------------------------------------------------------------
+
+def test_int8_roundtrip_error_within_group_bound(tmp_path):
+    """|err| <= max|delta_group| / 254 per element (scale = amax/127,
+    round-to-nearest) — the bound documented on ``int8_encode_leaf``."""
+    from repro.kernels.ckpt_delta.ref import GROUP, decode_ref
+
+    rng = np.random.default_rng(5)
+    base = rng.standard_normal((4 * GROUP,)).astype(np.float32)
+    new = (base + rng.uniform(-0.01, 0.01, base.shape)
+           .astype(np.float32)).astype(np.float32)
+    src = DeltaLeafSource({"w": jnp.asarray(new)},
+                          DeviceDeltaBase({"w": jnp.asarray(base)}),
+                          codec="int8")
+    src.wait()
+    enc = src.encoded("w")
+    got = decode_ref(enc["::q"], enc["::s"])[:new.size]
+    delta = new - base
+    amax = np.abs(delta.reshape(-1, GROUP)).max(axis=1)
+    bound = np.repeat(np.maximum(amax, 1e-12) / 254.0, GROUP)
+    err = np.abs(got - delta)
+    assert (err <= bound + 1e-9).all(), float((err - bound).max())
+
+
+# ---------------------------------------------------------------------------
+# cross-placement restore: blobs are byte-compatible both ways
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("save_placement,restore_placement",
+                         [("device", "host"), ("host", "device")])
+def test_cross_placement_restore_bit_exact(tmp_path, save_placement,
+                                           restore_placement):
+    plan_save = CheckpointPlan(mode="incremental", full_every=4,
+                               encode_placement=save_placement)
+    d = str(tmp_path / "ckpt")
+    mgr = CheckpointManager(d, plan_save)
+    s0, s1 = _state(0), _bump(_state(0))
+    mgr.save(0, s0, 0.0)
+    rep = mgr.save(1, s1, 1.0)
+    assert rep.kind == "delta"
+    meta = read_delta_manifest(os.path.join(d, "local"), 1)
+    assert meta["placement"] == save_placement
+    # restore through a manager configured for the OTHER placement
+    mgr2 = CheckpointManager(d, CheckpointPlan(
+        mode="incremental", full_every=4,
+        encode_placement=restore_placement))
+    got = mgr2.restore(_state(0), "node")
+    assert got.step == 1 and got.kind == "full+delta"
+    assert _bit_exact(got.state, s1)
+
+
+@pytest.mark.parametrize("codec", ["lossless", "int8"])
+def test_device_delta_blobs_byte_identical_to_host(tmp_path, codec):
+    """Acceptance: a fixed-seed device-encoded delta produces the same
+    blobs (and the same manifest, modulo the placement field) as the host
+    encoder, and both restore identically."""
+    s0, s1 = _state(3), _bump(_state(3), eps=np.float32(2e-3))
+    dirs = {}
+    for placement in ("host", "device"):
+        d = str(tmp_path / placement)
+        os.makedirs(d)
+        if placement == "device":
+            src = DeltaLeafSource(s1, DeviceDeltaBase(s0), codec=codec)
+        else:
+            src = jax.tree_util.tree_map(np.asarray, s1)
+        base = jax.tree_util.tree_map(np.asarray, s0)
+        write_delta(d, 1, src, base, 0, 1.0, mode=codec, codec="zlib")
+        dirs[placement] = os.path.join(d, "delta_0000000001")
+    host_files = sorted(os.listdir(dirs["host"]))
+    assert sorted(os.listdir(dirs["device"])) == host_files
+    for fname in host_files:
+        with open(os.path.join(dirs["host"], fname), "rb") as f:
+            h = f.read()
+        with open(os.path.join(dirs["device"], fname), "rb") as f:
+            dev = f.read()
+        if fname == "delta_manifest.json":
+            import json
+            mh, md = json.loads(h), json.loads(dev)
+            assert mh.pop("placement") == "host"
+            assert md.pop("placement") == "device"
+            assert mh == md
+        else:
+            assert h == dev, f"blob {fname} differs across placements"
+    base_np = jax.tree_util.tree_map(np.asarray, s0)
+    a = apply_delta(str(tmp_path / "host"), 1, base_np)
+    b = apply_delta(str(tmp_path / "device"), 1, base_np,
+                    placement="device")
+    assert _bit_exact(a, b)
+    if codec == "lossless":
+        assert _bit_exact(a, s1)
+
+
+# ---------------------------------------------------------------------------
+# device base lifecycle: plan-switch carry-over, failure wipe, savepoint
+# ---------------------------------------------------------------------------
+
+def test_plan_switch_carries_device_base_over(tmp_path):
+    plan = CheckpointPlan(mode="incremental", full_every=8,
+                          encode_placement="device")
+    mgr = CheckpointManager(str(tmp_path), plan)
+    s0 = _state(0)
+    mgr.savepoint(0, s0, 0.0)
+    assert mgr._device_base is not None
+    # the rebuild (set_plan semantics): a fresh manager adopting runtime
+    # state must keep device-encoding deltas against the drained full
+    mgr2 = CheckpointManager(str(tmp_path), CheckpointPlan(
+        mode="incremental", full_every=8, encode_placement="device",
+        interval_s=10.0))
+    mgr2.adopt_runtime_state(mgr)
+    # the drained device base rides the rebuild (no re-upload)
+    assert mgr2._device_base is mgr._device_base
+    s1 = _bump(s0)
+    rep = mgr2.save(1, s1, 1.0)      # trigger 0 of the new cadence: full
+    assert rep.kind == "full"
+    s2 = _bump(s1)
+    rep = mgr2.save(2, s2, 2.0)
+    assert rep.kind == "delta"
+    meta = read_delta_manifest(str(tmp_path / "local"), 2)
+    assert meta["placement"] == "device"
+    got = mgr2.restore(_state(0), "node")
+    assert got.step == 2 and _bit_exact(got.state, s2)
+    # a node failure wipes the device base with the rest of runtime state
+    mgr2.on_failure("node")
+    assert mgr2._device_base is None
+    rep2 = mgr2.save(3, s2, 3.0)
+    assert rep2.kind == "full"          # chain restarts
+
+
+def test_save_report_bytes_on_link_distinguishes_link_from_disk(tmp_path):
+    """Satellite: bytes_on_link (pre-compression, post-encode) vs
+    bytes_written (post-compression).  Host deltas move the raw state;
+    device int8 deltas move ~0.3x of it."""
+    s0 = _state(0, n=8192)
+    s1 = _bump(s0)
+    raw = sum(np.asarray(l).nbytes for l in jax.tree_util.tree_leaves(s0))
+    host = CheckpointManager(str(tmp_path / "h"), CheckpointPlan(
+        mode="incremental", full_every=4))
+    host.save(0, s0, 0.0)
+    rep = host.save(1, s1, 1.0)
+    assert rep.kind == "delta" and rep.bytes_on_link == raw
+    dev = CheckpointManager(str(tmp_path / "d"), CheckpointPlan(
+        mode="incremental", full_every=4, encode_placement="device",
+        delta_codec="int8"))
+    full_rep = dev.save(0, s0, 0.0)
+    assert full_rep.bytes_on_link == raw      # fulls always move the state
+    drep = dev.save(1, s1, 1.0)
+    assert drep.kind == "delta"
+    assert 0 < drep.bytes_on_link < 0.5 * raw
+    st = dev.stats()
+    assert st["bytes_on_link"] == full_rep.bytes_on_link + drep.bytes_on_link
+    # a device delta trigger that ALSO takes a remote full pulls the raw
+    # state for that write — the raw D2H must be accounted, not just the
+    # encoded payload
+    ml = CheckpointManager(str(tmp_path / "ml"), CheckpointPlan(
+        mode="incremental", full_every=4, levels=("local", "remote"),
+        remote_every=2, encode_placement="device", delta_codec="int8"))
+    ml.save(0, s0, 0.0)                       # full everywhere
+    ml.save(1, _bump(s0), 1.0)                # delta, local only
+    rep2 = ml.save(2, _bump(_bump(s0)), 2.0)  # delta local + remote FULL
+    assert rep2.kind == "delta" and "remote" in rep2.levels
+    assert rep2.bytes_on_link > raw           # payload + raw full pull
+    # legacy incremental checkpointer reports the link quantity too
+    from repro.checkpoint import CheckpointStore, IncrementalCheckpointer
+    inc = IncrementalCheckpointer(CheckpointStore(str(tmp_path / "l"),
+                                                  num_shards=2))
+    inc.save(0, jax.tree_util.tree_map(np.asarray, s0))
+    assert inc.stats()["bytes_on_link"] == raw
+
+
+# ---------------------------------------------------------------------------
+# cost model: placement pricing, v2 calibration, coverage assertions
+# ---------------------------------------------------------------------------
+
+def _v2_calibration():
+    return {
+        "schema": "bench_ckpt/2",
+        "state_bytes": 32 * 2**20,
+        "full_write_s": 2.0,
+        "restore_s": 1.5,
+        "delta_fraction": 0.05,
+        "delta_int8_fraction": 0.01,
+        "delta_encode_s_per_byte": 3.0 / (32 * 2**20),
+        "device": {
+            "lossless": {"bytes_on_link": 33 * 2**20 // 32,
+                         "link_fraction": 1.01, "encode_s": 0.02},
+            "int8": {"bytes_on_link": 8 * 2**20,
+                     "link_fraction": 0.25, "encode_s": 0.01},
+        },
+        "plans": {"incr8-sync": {"bytes_per_trigger": 1.0, "write_s": 0.1,
+                                 "blocking_s": 0.1, "encode_cpu_s": 0.5}},
+    }
+
+
+def test_from_calibration_v2_prices_device_placement():
+    from repro.sim import SimCostModel
+
+    cost = SimCostModel.from_calibration(_v2_calibration())
+    assert cost.device_link_fraction_int8 == 0.25
+    assert cost.device_encode_s == 0.02
+    # device delta drops the per-trigger host encode (3 s) for the
+    # measured device encode (0.01-0.02 s)
+    host_d = cost.write_duration("delta", encoding="int8")
+    dev_d = cost.write_duration("delta", encoding="int8",
+                                placement="device")
+    assert dev_d < host_d
+    assert np.isclose(host_d - dev_d, 3.0 - 0.01)
+    # plan-level: the device-int8 plan has the cheapest trigger average
+    incr = CheckpointPlan(mode="incremental", full_every=8)
+    dev8 = CheckpointPlan(mode="incremental", full_every=8,
+                          encode_placement="device", delta_codec="int8")
+    assert cost.avg_write_duration(dev8) < cost.avg_write_duration(incr)
+    # link-bytes accounting: host plans move the raw state every trigger;
+    # the device-int8 plan averages fulls at 1.0x with deltas at 0.25x
+    assert cost.avg_link_bytes(incr) == cost.state_bytes
+    want = (cost.state_bytes + 7 * 0.25 * cost.state_bytes) / 8
+    assert np.isclose(cost.avg_link_bytes(dev8), want)
+    # a delta trigger that also takes a remote full pays payload + raw
+    dev_ml = CheckpointPlan(mode="incremental", full_every=8,
+                            levels=("local", "remote"), remote_every=4,
+                            encode_placement="device", delta_codec="int8")
+    assert np.isclose(cost.trigger_link_bytes(dev_ml, 4),
+                      1.25 * cost.state_bytes)
+
+
+def test_from_calibration_v1_fallback_and_v2_rejects_bad_device():
+    from repro.sim import SimCostModel
+
+    v1 = {k: v for k, v in _v2_calibration().items() if k != "device"}
+    v1["schema"] = "bench_ckpt/1"
+    cost = SimCostModel.from_calibration(v1)
+    assert cost.device_link_fraction_int8 == \
+        SimCostModel.device_link_fraction_int8   # modeled default
+    bad = _v2_calibration()
+    del bad["device"]["int8"]["encode_s"]
+    with pytest.raises(ValueError, match="device"):
+        SimCostModel.from_calibration(bad)
+    bad2 = _v2_calibration()
+    del bad2["device"]
+    with pytest.raises(ValueError, match="device"):
+        SimCostModel.from_calibration(bad2)
+
+
+def test_surviving_levels_rejects_unknown_failure_kind():
+    from repro.checkpoint.multilevel import allowed_levels
+    from repro.sim import SimCostModel
+
+    cost = SimCostModel()
+    plan = CheckpointPlan(levels=("memory", "local", "remote"))
+    assert cost.surviving_levels(plan, "node") == ("local", "remote")
+    with pytest.raises(ValueError, match="unknown failure kind"):
+        cost.surviving_levels(plan, "rack")
+    with pytest.raises(ValueError, match="known kinds"):
+        allowed_levels("typo")
+
+
+# ---------------------------------------------------------------------------
+# optimizer: (placement x codec) variants, campaign-verified
+# ---------------------------------------------------------------------------
+
+def test_optimize_plan_surfaces_campaign_verified_device_int8():
+    """Acceptance: with a calibrated cost model, the default variant grid
+    contains (placement=device, codec=int8) candidates and the campaign
+    verifier scores at least one of them end-to-end."""
+    from repro.core import QoSModel, optimize_plan
+    from repro.core.ci_optimizer import default_plan_variants
+    from repro.data.stream import constant_rate
+    from repro.sim import SimCostModel
+    from repro.sim.batched import make_plan_verifier
+
+    cost = SimCostModel.from_calibration(
+        _v2_calibration(), capacity_eps=4600.0, ckpt_sync_penalty=0.6)
+    variants = default_plan_variants(cost, ci_ref=60.0)
+    dev_int8 = [p for p in variants if p.encode_placement == "device"
+                and p.delta_codec == "int8"]
+    assert dev_int8, "variant grid lost the device-int8 dimension"
+    rng = np.random.default_rng(0)
+    ci = rng.uniform(10, 120, 200)
+    tr = rng.uniform(1000, 4000, 200)
+    m_l = QoSModel().fit(ci, tr, cost.base_latency_s + 40.0 / ci + tr * 1e-5)
+    m_r = QoSModel().fit(ci, tr, 80.0 + 1.2 * ci + 0.01 * tr)
+    verifier = make_plan_verifier(cost, schedule=constant_rate(2500.0),
+                                  max_recovery_s=900.0)
+    res = optimize_plan(m_l, m_r, tr_avg=2500.0, l_const=1.0, r_const=240.0,
+                        p=1.0, ci_min=10, ci_max=120, cost=cost,
+                        verifier=verifier, verify_top_k=4)
+    assert res.feasible and res.verified
+    scored = [c for c in res.candidates
+              if c.plan.encode_placement == "device"
+              and c.plan.delta_codec == "int8" and c.sim is not None]
+    assert scored, "no device-int8 candidate was campaign-verified"
+    assert {"latency_s", "recovery_s"} <= set(scored[0].sim)
+
+
+# ---------------------------------------------------------------------------
+# drive_campaign: shared QoS evaluation, Decisions bit-identical
+# ---------------------------------------------------------------------------
+
+def test_drive_campaign_batched_predictions_bit_identical_decisions():
+    """Satellite: the per-period QoS-model reads are batched (one
+    ``QoSModel.predict`` over all lanes), and the per-lane Decisions are
+    BIT-identical to the per-lane evaluation loop."""
+    from repro.config import KhaosConfig
+    from repro.core import KhaosRuntime
+    from repro.data.stream import constant_rate, dense_rates
+    from repro.sim import BatchedCampaign, LaneSpec, SimCostModel
+    from repro.sim.batched import BatchedLaneHandle
+
+    cost = SimCostModel(capacity_eps=2600.0, ckpt_duration_s=1.0)
+    kcfg = KhaosConfig(latency_constraint=1.2, recovery_constraint=240.0,
+                       optimization_period=30.0, ci_min=10, ci_max=120,
+                       reconfig_cooldown=60.0)
+    sched = constant_rate(1800.0)
+
+    def make_campaign():
+        lanes = [LaneSpec(rates=dense_rates(0.0, 400, schedule=sched),
+                          ci_s=float(ci),
+                          failures=((120.0, "node"),) if i % 2 else ())
+                 for i, ci in enumerate((15, 40, 80, 115))]
+        return BatchedCampaign(cost, lanes)
+
+    def fresh_runtime():
+        rt = KhaosRuntime(kcfg, cost=cost)
+        from repro.core.qos_models import QoSModel
+        rng = np.random.default_rng(0)
+        ci = rng.uniform(10, 120, 150)
+        tr = rng.uniform(1000, 2400, 150)
+        m_l = QoSModel().fit(ci, tr, cost.base_latency_s + 30.0 / ci)
+        m_r = QoSModel().fit(ci, tr, 60.0 + 1.1 * ci + 0.02 * tr)
+        rt.install_models(m_l, m_r)
+        return rt
+
+    # batched path: drive_campaign (shared predictions)
+    rt = fresh_runtime()
+    sup = rt.drive_campaign(make_campaign())
+
+    # oracle: the pre-batching per-lane loop, scalar predict per lane
+    rt2 = fresh_runtime()
+    camp = make_campaign()
+    handles = [BatchedLaneHandle(camp, i) for i in range(camp.n_lanes)]
+    controllers = [rt2._make_controller() for _ in handles]
+    period = max(1, int(round(kcfg.optimization_period)))
+    while not camp.done:
+        camp.run(n_ticks=period)
+        for ctl, h in zip(controllers, handles):
+            if h.alive():
+                ctl.maybe_optimize(h)
+    for ctl, h in zip(controllers, handles):
+        ctl.maybe_optimize(h)
+
+    for lane, (ctl, got) in enumerate(zip(controllers, sup.controllers)):
+        want = ctl.decisions
+        have = got.decisions
+        assert len(want) == len(have), (lane, len(want), len(have))
+        for dw, dh in zip(want, have):
+            assert (dw.t, dw.kind) == (dh.t, dh.kind), lane
+            for f in ("latency", "tr_avg", "predicted_recovery", "new_ci"):
+                a, b = getattr(dw, f), getattr(dh, f)
+                assert (a is None and b is None) or \
+                    np.array_equal(np.float64(a), np.float64(b),
+                                   equal_nan=True), (lane, f, a, b)
+            assert (dw.new_plan is None) == (dh.new_plan is None)
+            if dw.new_plan is not None:
+                assert dw.new_plan == dh.new_plan

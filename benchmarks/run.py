@@ -20,12 +20,13 @@ mode), a tiny 4-lane E4 campaign, and a tiny end-to-end ``KhaosRuntime``
 (all three phases on a 4-lane controller-in-the-loop campaign + a micro
 live trainer with a mid-run plan switch), validating that the emitted
 BENCH_ckpt.json / BENCH_sim.json artifacts match their schemas
-("bench_ckpt/2" via ``SimCostModel.from_calibration`` — placement/codec
-fields, delta-trigger bytes-on-link under the full state, with
-"bench_ckpt/1" artifacts still loadable as the versioned fallback;
-"bench_sim/1" via ``bench_recovery.validate_sim_artifact``) and that the
-phase order / JobHandle protocol have not regressed — exiting non-zero on
-any mismatch.
+("bench_ckpt/3" via ``SimCostModel.from_calibration`` — placement/codec
+fields, int8 link fraction <= 0.26, the fused flat device encode under
+the per-leaf dispatch baseline, with "bench_ckpt/1" and "/2" artifacts
+still loadable as the versioned fallbacks; "bench_sim/1" via
+``bench_recovery.validate_sim_artifact``) and that the phase order /
+JobHandle protocol have not regressed — exiting non-zero on any
+mismatch.
 """
 from __future__ import annotations
 

@@ -3,8 +3,9 @@ from repro.checkpoint.async_ckpt import AsyncCheckpointer, BackgroundCommitter
 from repro.checkpoint.incremental import IncrementalCheckpointer
 from repro.checkpoint.multilevel import MultiLevelCheckpointer
 from repro.checkpoint.pipeline import (ChunkedHostSnapshot, DeltaLeafSource,
-                                       DeviceDeltaBase, LeafSource,
-                                       PlainLeafSource, as_leaf_source)
+                                       DeviceDeltaBase, FlatLayout,
+                                       LeafSource, PlainLeafSource,
+                                       as_leaf_source)
 from repro.checkpoint.policy import CheckpointPolicy
 from repro.checkpoint.manager import (CheckpointManager, Checkpointer,
                                       RestoreReport, SaveReport)
@@ -16,5 +17,5 @@ __all__ = [
     "MultiLevelCheckpointer", "CheckpointPolicy", "CheckpointManager",
     "Checkpointer", "CheckpointPlan", "SaveReport", "RestoreReport",
     "HAVE_ZSTD", "ChunkedHostSnapshot", "DeltaLeafSource", "DeviceDeltaBase",
-    "LeafSource", "PlainLeafSource", "as_leaf_source",
+    "FlatLayout", "LeafSource", "PlainLeafSource", "as_leaf_source",
 ]

@@ -18,6 +18,20 @@ Compression: zstd when ``zstandard`` is installed, stdlib zlib otherwise.
 The codec actually used is recorded in each delta manifest so restore picks
 the matching decompressor even if the environment changed in between.
 
+Two blob layouts coexist, selected by the source:
+
+  * per-leaf (v2, and always the host path): one ``key@suffix.bin`` blob
+    set per leaf, encoded/compressed/written concurrently on the io pool.
+  * flat (v3, device placement): a ``pipeline.DeltaLeafSource`` hands over
+    ONE already-encoded mega-buffer payload covering its packed f32
+    subtree; it is frame-compressed (``store.compress_frames``) into
+    ``flat@d.bin``/``flat@r.bin`` (lossless) or ``flat@q.bin``/
+    ``flat@s.bin`` (int8) and described by the manifest's ``"flat"``
+    section (size, group, per-leaf layout rows, per-array frame lengths).
+    Leaves outside the packed subtree still get per-leaf blobs in the
+    same delta, and ``apply_delta`` restores BOTH layouts — so v2 deltas
+    written before the flat path existed keep restoring unchanged.
+
 Chain layout: full_0, delta_1..delta_{k-1}, full_k, ...; restore loads the
 newest full plus its newest delta (deltas are vs the base full, not
 chained, so restore reads at most two objects).
@@ -37,9 +51,11 @@ import numpy as np
 
 import jax
 
-from repro.checkpoint.store import (CheckpointStore, fresh_tmp_dir,
+from repro.checkpoint.store import (CheckpointStore, compress_frames,
+                                    decompress_frames, fresh_tmp_dir,
                                     get_compressor, get_decompressor,
                                     publish_dir_atomic, write_json_atomic)
+from repro.kernels.ckpt_delta.ref import GROUP
 from repro.utils.trees import tree_flatten_with_names
 
 
@@ -91,14 +107,14 @@ def write_delta(directory: str, step: int, state_np: Any, base: Any,
     ``pipeline.io_pool``; ``state_np`` and ``base`` may be pytrees or
     ``pipeline.LeafSource``s (a chunked snapshot still transferring from
     the device overlaps its D2H with the encode of already-landed leaves).
-    A ``pipeline.DeltaLeafSource`` arrives PRE-encoded (the delta ran on
-    device, in front of D2H): its payloads are compressed and written
-    as-is — byte-identical blobs to the host encoder's, so placement never
-    changes what restore reads — and only leaves it could not
-    device-encode fall back to the host path against ``base``.  An
-    unchanged leaf (raw bytes equal to the base's) is recorded as a
-    ``"zero"`` marker in the manifest instead of compressing and writing a
-    full-size all-zeros blob.
+    A ``pipeline.DeltaLeafSource`` arrives FLAT-encoded (one fused device
+    kernel ran in front of D2H): its packed mega-buffer payload is
+    frame-compressed and written as ``flat@*.bin`` under the manifest's
+    ``"flat"`` section, its fused per-leaf change counts become ``"zero"``
+    markers, and only leaves outside the packed subtree fall back to the
+    per-leaf host path against ``base``.  A host-path unchanged leaf (raw
+    bytes equal to the base's) is likewise recorded as a ``"zero"`` marker
+    instead of compressing and writing a full-size all-zeros blob.
 
     Returns (path, payload_bytes, encode_cpu_s) where ``encode_cpu_s``
     sums per-worker CPU seconds spent encoding+compressing — the quantity
@@ -114,33 +130,27 @@ def write_delta(directory: str, step: int, state_np: Any, base: Any,
     src = as_leaf_source(state_np)
     base_src = as_leaf_source(base)
     placement = getattr(src, "placement", "host")
-    pre_encoded = getattr(src, "encoded", None)
-    if pre_encoded is not None:
+    layout = getattr(src, "layout", None)
+    if layout is not None:
         assert getattr(src, "codec", mode) == mode, \
-            (f"pre-encoded source codec {src.codec!r} does not match the "
+            (f"flat-encoded source codec {src.codec!r} does not match the "
              f"requested delta mode {mode!r}")
+    packed = frozenset(layout.names) if layout is not None else frozenset()
     path = delta_dir(directory, step)
     tmp = fresh_tmp_dir(path)
 
     def encode_leaf(name: str) -> tuple[str, int, float, bool]:
         key = name.replace("/", "::")
         t0 = time.thread_time()
-        payload = pre_encoded(name) if pre_encoded is not None else None
-        if payload == "zero":       # device-side unchanged-leaf detection
+        leaf = np.asarray(src.get(name))
+        b = np.asarray(base_src.get(name))
+        # skip-zero fast path: byte-level equality, compared through u8
+        # views (reshape keeps 0-d leaves viewable) so no copies are made
+        if leaf.dtype == b.dtype and leaf.shape == b.shape and \
+                np.array_equal(leaf.reshape(-1).view(np.uint8),
+                               b.reshape(-1).view(np.uint8)):
             return key, 0, time.thread_time() - t0, True
-        if payload is not None:
-            blobs = {key + sfx: compress(arr.tobytes())
-                     for sfx, arr in payload.items()}
-        else:
-            leaf = np.asarray(src.get(name))
-            b = np.asarray(base_src.get(name))
-            # skip-zero fast path: byte-level equality, compared through u8
-            # views (reshape keeps 0-d leaves viewable) so no copies are made
-            if leaf.dtype == b.dtype and leaf.shape == b.shape and \
-                    np.array_equal(leaf.reshape(-1).view(np.uint8),
-                                   b.reshape(-1).view(np.uint8)):
-                return key, 0, time.thread_time() - t0, True
-            blobs = _encode_leaf_blobs(key, leaf, b, mode, compress)
+        blobs = _encode_leaf_blobs(key, leaf, b, mode, compress)
         cpu_s = time.thread_time() - t0
         nbytes = 0
         for k, blob in blobs.items():
@@ -150,15 +160,50 @@ def write_delta(directory: str, step: int, state_np: Any, base: Any,
             nbytes += len(blob)
         return key, nbytes, cpu_s, False
 
-    futures = [io_pool().submit(encode_leaf, n) for n in src.names]
+    # per-leaf host encodes for everything the flat payload doesn't cover
+    futures = [io_pool().submit(encode_leaf, n) for n in src.names
+               if n not in packed]
+
+    flat_meta = None
+    flat_bytes = 0
+    flat_cpu = 0.0
+    zero_flat: list[str] = []
+    if layout is not None:
+        payload = src.flat_payload()            # blocks until chunks land
+        zero_flat = [n.replace("/", "::") for n in src.zero_names]
+        flat_meta = {"size": layout.total, "group": GROUP,
+                     "layout": [[name.replace("/", "::"), off, size, shape]
+                                for name, off, size, shape
+                                in layout.to_manifest()],
+                     "arrays": {}}
+        for sfx in (("d", "r") if mode == "lossless" else ("q", "s")):
+            arr = payload.get(sfx)
+            if arr is None:             # every packed leaf unchanged
+                continue
+            if isinstance(arr, str):    # "zero": residual D2H was skipped
+                flat_meta["arrays"][sfx] = "zero"
+                continue
+            frames, lens, cpu = compress_frames(arr, compress, io_pool())
+            fname = f"flat@{sfx}.bin"
+            with open(os.path.join(tmp, fname), "wb") as f:
+                for frame in frames:
+                    f.write(frame)
+            flat_meta["arrays"][sfx] = {"file": fname,
+                                        "dtype": str(arr.dtype),
+                                        "frames": lens}
+            flat_bytes += sum(lens)
+            flat_cpu += cpu
+
     results = [f.result() for f in futures]
-    nbytes = sum(n for _, n, _, _ in results)
-    encode_cpu_s = sum(c for _, _, c, _ in results)
+    nbytes = sum(n for _, n, _, _ in results) + flat_bytes
+    encode_cpu_s = sum(c for _, _, c, _ in results) + flat_cpu
     meta = {"base_step": base_step, "step": step, "timestamp": timestamp,
             "mode": mode, "codec": codec_name, "scheme": "sub+xor",
             "placement": placement,
-            "zero": [k for k, _, _, z in results if z],
+            "zero": [k for k, _, _, z in results if z] + zero_flat,
             "extra": extra or {}}
+    if flat_meta is not None:
+        meta["flat"] = flat_meta
     write_json_atomic(os.path.join(tmp, "delta_manifest.json"), meta)
     publish_dir_atomic(tmp, path)
     return path, nbytes, encode_cpu_s
@@ -251,11 +296,76 @@ def _decode_leaf(ddir: str, name: str, leaf: np.ndarray, mode: str,
     return (leaf.astype(np.float32) + delta).astype(leaf.dtype)
 
 
+def _decode_flat(ddir: str, flat: dict, mode: str, zero: frozenset,
+                 base_leaves: dict, decompress, device: bool) -> dict:
+    """Decode the flat mega-buffer payload back into per-leaf arrays.
+
+    Rebuilds the packed base from the restored base leaves (host-side,
+    matching ``FlatLayout``'s GROUP-aligned zero-padding), applies the
+    flat delta — sub+XOR-residual or int8 dequant, through the Pallas
+    kernels when ``device=True``, the ref.py oracles otherwise — in ONE
+    vectorized pass, then slices each leaf back out by its manifest
+    extent.  Leaves in ``zero`` take the base as-is.  Returns
+    {name: decoded array} for every packed leaf."""
+    entries = [(key.replace("::", "/"), int(off), int(size), tuple(shape))
+               for key, off, size, shape in flat["layout"]]
+    from repro.checkpoint.pipeline import io_pool
+    arrays: dict[str, np.ndarray] = {}
+    for sfx, spec in flat.get("arrays", {}).items():
+        if spec == "zero":
+            continue
+        arrays[sfx] = decompress_frames(
+            os.path.join(ddir, spec["file"]), spec["frames"],
+            np.dtype(spec["dtype"]), decompress, io_pool())
+    if not arrays:                  # every packed leaf was unchanged
+        return {name: base_leaves[name] for name, _, _, _ in entries}
+    total = int(flat["size"])
+    base_flat = np.zeros(total, np.float32)
+    for name, off, size, _ in entries:
+        base_flat[off:off + size] = np.ascontiguousarray(
+            base_leaves[name], np.float32).reshape(-1)
+    if mode == "lossless":
+        delta = arrays["d"]
+        resid = arrays.get("r")
+        if resid is None:           # skipped all-zero residual plane
+            resid = np.zeros(total, np.uint32)
+        if device:
+            from repro.kernels.ckpt_delta.ops import (default_interpret,
+                                                      lossless_decode)
+            out_flat = np.asarray(lossless_decode(
+                base_flat, delta, resid,
+                interpret=default_interpret()))[:total]
+        else:
+            from repro.kernels.ckpt_delta.ref import lossless_decode_ref
+            out_flat = lossless_decode_ref(base_flat, delta, resid)
+    else:
+        if device:
+            from repro.kernels.ckpt_delta.ops import (default_interpret,
+                                                      delta_decode)
+            dflat = np.asarray(delta_decode(
+                arrays["q"], arrays["s"],
+                interpret=default_interpret()))[:total]
+        else:
+            from repro.kernels.ckpt_delta.ref import decode_ref
+            dflat = decode_ref(arrays["q"], arrays["s"])[:total]
+        out_flat = base_flat + dflat
+    out: dict[str, np.ndarray] = {}
+    for name, off, size, shape in entries:
+        if name.replace("/", "::") in zero:
+            out[name] = base_leaves[name]       # unchanged: base as-is
+        else:
+            out[name] = out_flat[off:off + size].reshape(shape)
+    return out
+
+
 def apply_delta(directory: str, step: int, base_state: Any,
                 placement: str = "host") -> Any:
     """Apply the delta at ``step`` on top of ``base_state`` (the restored
-    base full snapshot).  Codec and mode come from the delta manifest;
-    leaves decode concurrently (mirror of the pipelined write path).
+    base full snapshot).  Codec and mode come from the delta manifest; the
+    flat mega-buffer section (if present) decodes in one vectorized pass
+    and the remaining per-leaf blobs decode concurrently (mirror of the
+    pipelined write path) — so v3 flat deltas, v2 per-leaf deltas, and
+    mixed deltas all restore through this one reader.
 
     ``placement`` selects where the DECODE runs ("host" via ref.py, or
     "device" via the Pallas kernels) and is independent of the placement
@@ -277,12 +387,19 @@ def apply_delta(directory: str, step: int, base_state: Any,
     ddir = delta_dir(directory, step)
     names = [n for n, _ in tree_flatten_with_names(base_state)]
     leaves = [np.asarray(l) for l in jax.tree_util.tree_leaves(base_state)]
-    from repro.checkpoint.pipeline import io_pool
-    futures = [io_pool().submit(_decode_leaf, ddir, name, leaf, mode,
-                                xor_ints, zero, decompress,
+    flat_out: dict[str, np.ndarray] = {}
+    flat = meta.get("flat")
+    if flat:
+        flat_out = _decode_flat(ddir, flat, mode, zero,
+                                dict(zip(names, leaves)), decompress,
                                 placement == "device")
-               for name, leaf in zip(names, leaves)]
-    out = [f.result() for f in futures]
+    from repro.checkpoint.pipeline import io_pool
+    futures = {name: io_pool().submit(_decode_leaf, ddir, name, leaf, mode,
+                                      xor_ints, zero, decompress,
+                                      placement == "device")
+               for name, leaf in zip(names, leaves) if name not in flat_out}
+    out = [flat_out[name] if name in flat_out else futures[name].result()
+           for name in names]
     treedef = jax.tree_util.tree_structure(base_state)
     return jax.tree_util.tree_unflatten(treedef, out)
 

@@ -21,11 +21,12 @@ single protocol, configured by ``config.CheckpointPlan``:
            |                  unchanged leaves short-circuit to a "zero"
            |                  manifest marker.
            |               plan.encode_placement == "device" swaps the
-           |                 order of the two stages above: the Pallas
-           |                 codec runs on device against a device-resident
-           |                 base (pipeline.DeltaLeafSource) and only the
+           |                 order of the two stages above: ONE fused
+           |                 Pallas kernel encodes the packed f32 subtree
+           |                 against the device-resident flat base
+           |                 (pipeline.DeltaLeafSource) and only the
            |                 encoded payload crosses the link — bytes_on_-
-           |                 link drops to ~0.25x state bytes for int8
+           |                 link drops to ~0.26x state bytes for int8
            |
         compress           zstd when installed, zlib otherwise; the codec
            |                 used is recorded in the delta manifest

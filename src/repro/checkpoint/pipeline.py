@@ -15,8 +15,41 @@ Device placement runs the ``kernels/ckpt_delta`` codec in front of D2H
 (``DeltaLeafSource``), so only the encoded payload crosses the link —
 delta + sparse residual (lossless) or int8 q + scales (~4x fewer bytes):
 
-    trigger -> device encode -> chunked D2H of encoded payload
-                                          ||  compress  ||  write
+    trigger -> pack -> ONE fused encode -> chunked D2H of encoded payload
+                                                 ||  compress  ||  write
+
+The device encode is FLAT: the f32 subtree of the state is packed into
+one contiguous GROUP-aligned mega-buffer (``FlatLayout`` — each leaf
+zero-padded to a whole number of 1024-element groups, so per-group change
+statistics map exactly onto leaves), diffed against the equally-packed
+``DeviceDeltaBase.flat`` by a single ``flat_lossless_encode``/
+``flat_int8_encode`` dispatch, and the encoded payload streams off-device
+in byte-bounded chunks.  One pack dispatch + one encode dispatch + one
+chunked transfer replace the N per-leaf kernel launches + N small D2H
+copies the pre-flat plane paid (which priced device placement out of the
+optimizer on seconds while winning on bytes).
+
+Flat-layout manifest (the ``"flat"`` section ``incremental.write_delta``
+records, decoded by ``incremental.apply_delta``):
+
+    {"size": <padded elems>, "group": 1024,
+     "layout": [[name, offset, size, shape], ...],   # GROUP-aligned offsets
+     "arrays": {"d": {file, dtype, frames}, "r": "zero" | {...}}}
+
+plus per-leaf skip-zero markers in the manifest's ``zero`` list (from the
+kernel's fused per-leaf change counts) and a ``"zero"`` marker for an
+all-zero residual plane whose D2H was skipped entirely.  Leaves outside
+the packed subtree (non-f32, host-resident, shape-drifted) fall back to
+the per-leaf host encode path and per-leaf blobs — a v3 (flat) delta can
+carry both, and per-leaf-only v2 deltas keep restoring through the same
+reader.
+
+Pack/refresh lifecycle: ``DeviceDeltaBase`` packs its flat buffer ONCE
+per full trigger/savepoint (``CheckpointManager`` refreshes it there and
+carries it across ``set_plan`` rebuilds via ``adopt_runtime_state``);
+every delta trigger then packs only the NEW state (one cached-jit
+dispatch) and encodes against the resident base, so the steady-state
+trigger never re-uploads or re-packs the base.
 
   * ``ChunkedHostSnapshot`` partitions the state's leaves into byte-bounded
     chunks.  Mutable host leaves (``np.ndarray``) are deep-copied eagerly —
@@ -51,11 +84,15 @@ from __future__ import annotations
 import os
 import threading
 from concurrent.futures import Future, ThreadPoolExecutor
+from dataclasses import dataclass
 from typing import Any, Optional
 
 import jax
 import numpy as np
 
+# GROUP comes from the numpy-only oracle module so importing the pipeline
+# never pays for a pallas import (the jit'd ops load lazily, per call site)
+from repro.kernels.ckpt_delta.ref import GROUP
 from repro.utils.trees import tree_flatten_with_names
 
 DEFAULT_CHUNK_BYTES = 4 << 20     # D2H granularity: first chunk = blocking
@@ -217,57 +254,148 @@ class ChunkedHostSnapshot(LeafSource):
             fut.result()
 
 
+@dataclass(frozen=True)
+class FlatEntry:
+    """One leaf's extent inside the packed mega-buffer (element units)."""
+
+    name: str
+    offset: int          # GROUP-aligned start
+    size: int            # true (unpadded) element count
+    shape: tuple
+
+    @property
+    def padded(self) -> int:
+        return -(-self.size // GROUP) * GROUP
+
+
+class FlatLayout:
+    """Where each f32 leaf lives inside the packed mega-buffer.
+
+    Every leaf is zero-padded to a whole number of GROUP(=1024)-element
+    groups, so (a) offsets are GROUP-aligned and every group belongs to
+    exactly ONE leaf — the kernel's per-group change statistics reduce
+    exactly to per-leaf counts via ``group_leaf``, (b) int8 scale groups
+    never straddle leaves, making any flat payload extent bit-identical
+    to the per-leaf encoder's output, and (c) the decoder can slice any
+    leaf back out by ``(offset, size, shape)``.  ``to_manifest()`` is the
+    serialized form the delta manifest's ``"flat"`` section records.
+    """
+
+    def __init__(self, named_shapes: list):
+        self.entries: list[FlatEntry] = []
+        off = 0
+        for name, shape in named_shapes:
+            size = int(np.prod(shape, dtype=np.int64)) if shape else 1
+            entry = FlatEntry(name, off, size, tuple(shape))
+            self.entries.append(entry)
+            off += entry.padded
+        self.total = off
+        self.by_name = {e.name: e for e in self.entries}
+        self.names = [e.name for e in self.entries]
+        group_leaf = np.zeros(self.total // GROUP, np.int32)
+        for i, entry in enumerate(self.entries):
+            group_leaf[entry.offset // GROUP:
+                       (entry.offset + entry.padded) // GROUP] = i
+        self.group_leaf = group_leaf
+        self._group_leaf_dev: Optional[jax.Array] = None
+
+    def group_leaf_device(self) -> jax.Array:
+        """The group->leaf index map, uploaded once and cached (the fused
+        encoders scatter-add per-group stats over it)."""
+        if self._group_leaf_dev is None:
+            self._group_leaf_dev = jax.numpy.asarray(self.group_leaf)
+        return self._group_leaf_dev
+
+    def to_manifest(self) -> list:
+        return [[e.name, e.offset, e.size, list(e.shape)]
+                for e in self.entries]
+
+
 class DeviceDeltaBase:
-    """The delta base held device-resident across triggers.
+    """The delta base held device-resident across triggers — per-leaf refs
+    (for the fallback path and shape checks) plus the PACKED flat
+    mega-buffer the fused encoder diffs against.
 
     Because ``jax.Array``s are immutable, holding references to the last
     full snapshot's device leaves is free — no extra HBM beyond delaying
     the old buffers' release — and gives the on-device encoder a base to
     diff against without any host round trip.  Mutable host leaves are
     deep-copied eagerly (the same aliasing contract as
-    ``ChunkedHostSnapshot``).  ``CheckpointManager`` refreshes this on
-    every full trigger/savepoint and carries it across plan-switch
-    rebuilds (``adopt_runtime_state``).
+    ``ChunkedHostSnapshot``).  The f32 subtree is additionally packed into
+    ``flat`` under ``layout`` by one ``pack_flat`` dispatch — paid once
+    per refresh and amortized over every delta trigger until the next.
+    ``CheckpointManager`` refreshes this on every full trigger/savepoint
+    and carries it across plan-switch rebuilds (``adopt_runtime_state``).
     """
 
     def __init__(self, state: Any):
         self.leaves: dict[str, Any] = {}
+        packable: list[tuple[str, Any]] = []
         for name, leaf in tree_flatten_with_names(state):
             if isinstance(leaf, jax.Array):
                 self.leaves[name] = leaf          # immutable: ref == copy
+                if np.dtype(leaf.dtype) == np.float32 and leaf.size > 0:
+                    packable.append((name, leaf))
             else:
                 self.leaves[name] = np.array(leaf, copy=True)
+        self.layout: Optional[FlatLayout] = None
+        self.flat: Optional[jax.Array] = None
+        if packable:
+            from repro.kernels.ckpt_delta.ops import pack_flat
+            self.layout = FlatLayout(
+                [(name, tuple(leaf.shape)) for name, leaf in packable])
+            self.flat = pack_flat([leaf for _, leaf in packable])
+
+    def flat_subset(self, names: list) -> tuple[FlatLayout, jax.Array]:
+        """The packed base restricted to ``names`` (in that order).  The
+        common case — the new state's packable subtree matches the base's
+        exactly — returns the resident buffer as-is; after a drift
+        (leaves removed or reordered) the surviving GROUP-aligned extents
+        are sliced out and re-concatenated in one dispatch."""
+        assert self.layout is not None and self.flat is not None
+        if names == self.layout.names:
+            return self.layout, self.flat
+        sub = FlatLayout([(n, self.layout.by_name[n].shape) for n in names])
+        parts = [self.flat[e.offset:e.offset + e.padded]
+                 for e in (self.layout.by_name[n] for n in names)]
+        return sub, jax.numpy.concatenate(parts)
 
 
 class DeltaLeafSource(LeafSource):
-    """Delta-encode on device, then stream only the ENCODED chunks D2H.
+    """Delta-encode on device with ONE fused kernel over the packed flat
+    buffer, then stream only the ENCODED payload D2H in chunks.
 
-    The ``kernels/ckpt_delta`` encoders are dispatched per f32 device leaf
-    in ``__init__`` (async on real accelerators), against the
-    device-resident base.  The encoded outputs are then pulled host-side
-    with the same first-chunk-sync contract as ``ChunkedHostSnapshot``:
-    the first payload chunk materializes synchronously (that device sync
-    is the caller-blocking cost), the rest on ``transfer_pool``.
+    ``__init__`` does the whole blocking dance: pack the new state's f32
+    subtree (one ``pack_flat`` dispatch), run one fused
+    ``flat_lossless_encode``/``flat_int8_encode`` against the resident
+    ``DeviceDeltaBase.flat``, pull the per-LEAF change statistics (that
+    tiny stats read is the device sync — the encode is complete), then
+    materialize the FIRST payload chunk synchronously — the same
+    first-chunk-sync ``blocking_s`` contract as ``ChunkedHostSnapshot`` —
+    and queue the remaining byte-bounded chunks on ``transfer_pool``.
 
     Consumed two ways:
 
-      * ``encoded(name)`` — the pre-encoded payload for the delta writer
-        (``incremental.write_delta``): a dict of blob-suffix -> array
-        whose bytes are identical to the host encoder's blobs, the
-        ``"zero"`` marker for an unchanged leaf, or None for a leaf this
-        source could not device-encode (non-f32, host-resident, or
-        base-shape mismatch — the writer falls back to host encode).
+      * ``layout`` + ``flat_payload()`` + ``zero_names`` — the flat
+        protocol ``incremental.write_delta`` detects (via
+        ``getattr(src, "layout", None)``): the packed extents' manifest
+        rows, the host-resident payload arrays ("d"/"r" lossless,
+        "q"/"s" int8; ``"zero"`` marks a residual plane whose D2H was
+        skipped), and the leaves whose fused change count was 0 (the
+        skip-zero manifest markers).  Leaves OUTSIDE the packed subtree
+        (non-f32, host-resident, zero-size, or base-shape drift) are
+        absent from ``layout`` and take the per-leaf host-encode path.
       * ``get(name)`` — the raw leaf, materialized lazily (memory-level
         parking and the rare delta-upgraded-to-full self-heal write);
         device refs are immutable so the late D2H is safe.
 
-    Lossless payloads are delta (f32, full size) + XOR residual (u32) —
-    but the residual is all-zero for any element within 2x of its base
-    (Sterbenz), so its D2H is skipped when the on-device nonzero count is
-    0 and the host writes a reconstructed zero blob: link traffic drops to
-    ~1.0x state bytes + the change flags, and the host CPU encode
-    disappears.  int8 payloads are q (1 B/elem) + per-1024 scales —
-    ~0.25x state bytes on the link.
+    Lossless payloads are delta (f32) + XOR residual (u32) over the whole
+    flat buffer — the residual is all-zero for any element within 2x of
+    its base (Sterbenz), so when the fused per-leaf nonzero counts sum to
+    0 the residual plane's D2H is skipped entirely and the decoder
+    reconstructs zeros.  int8 payloads are q (1 B/elem) + per-1024 f32
+    scales — ~0.26x state bytes on the link.  When EVERY packed leaf is
+    unchanged nothing crosses the link at all.
     """
 
     placement = "device"
@@ -278,8 +406,9 @@ class DeltaLeafSource(LeafSource):
                  interpret: Optional[bool] = None):
         assert codec in ("lossless", "int8"), codec
         from repro.kernels.ckpt_delta.ops import (default_interpret,
-                                                  int8_encode_leaf,
-                                                  lossless_encode_leaf)
+                                                  flat_int8_encode,
+                                                  flat_lossless_encode,
+                                                  pack_flat)
         self.codec = codec
         self.interpret = default_interpret() if interpret is None \
             else interpret
@@ -288,87 +417,94 @@ class DeltaLeafSource(LeafSource):
         self.names = [n for n, _ in named]
         self._spec: dict[str, tuple[tuple, np.dtype]] = {}
         self._raw: dict[str, Any] = {}
-        self._enc: dict[str, Any] = {}           # first-chunk payloads
-        self._future_of: dict[str, Future] = {}
+        self._payload: dict[str, Any] = {}       # suffix -> host np / "zero"
+        self._chunk_futs: list[Future] = []
         self._link_lock = threading.Lock()
         self._link_bytes = 0
+        self.layout: Optional[FlatLayout] = None
+        self.zero_names: tuple = ()
 
-        pending: list[tuple[str, tuple]] = []    # (name, device outputs)
+        packed: list[tuple[str, Any]] = []
         for name, leaf in named:
             if isinstance(leaf, jax.Array):
                 self._spec[name] = (tuple(leaf.shape), np.dtype(leaf.dtype))
                 self._raw[name] = leaf
-                b = base.leaves.get(name)
-                if (np.dtype(leaf.dtype) == np.float32 and b is not None
-                        and tuple(getattr(b, "shape", ())) == tuple(leaf.shape)
-                        and np.dtype(b.dtype) == np.float32):
-                    bj = b if isinstance(b, jax.Array) else jax.numpy.asarray(b)
-                    fn = (lossless_encode_leaf if codec == "lossless"
-                          else int8_encode_leaf)
-                    pending.append((name, fn(leaf, bj,
-                                             interpret=self.interpret)))
-                    continue
-                # non-f32 device leaf: host-encode fallback, raw D2H lazily
-                self._account(self.nbytes(name))
+                entry = None if base.layout is None \
+                    else base.layout.by_name.get(name)
+                if (entry is not None
+                        and np.dtype(leaf.dtype) == np.float32
+                        and entry.shape == tuple(leaf.shape)):
+                    packed.append((name, leaf))
+                # else: fallback leaf — per-leaf host encode; its raw D2H
+                # is accounted when write_delta actually pulls it in get()
             else:
                 arr = np.array(leaf, copy=True)   # mutable host leaf
                 self._spec[name] = (tuple(arr.shape), arr.dtype)
                 self._raw[name] = arr
                 self._account(arr.nbytes)
 
-        # byte-bounded chunks over the encoded payloads (worst-case size)
-        chunks: list[list[tuple[str, tuple]]] = []
-        cur: list[tuple[str, tuple]] = []
-        cur_bytes = 0
-        for name, outs in pending:
-            cur.append((name, outs))
-            cur_bytes += sum(int(np.prod(o.shape, dtype=np.int64))
-                             * np.dtype(o.dtype).itemsize for o in outs)
-            if cur_bytes >= chunk_bytes:
-                chunks.append(cur)
-                cur, cur_bytes = [], 0
-        if cur:
-            chunks.append(cur)
+        if not packed:
+            return
 
-        if chunks:      # first chunk synchronously: the device sync point
-            self._enc.update(self._materialize(chunks[0]))
+        layout, base_flat = base.flat_subset([n for n, _ in packed])
+        self.layout = layout
+        new_flat = pack_flat([leaf for _, leaf in packed])
+        group_leaf = layout.group_leaf_device()
+        if codec == "lossless":
+            d, r, leaf_changed, leaf_rnnz = flat_lossless_encode(
+                new_flat, base_flat, group_leaf, num_leaves=len(packed),
+                interpret=self.interpret)
+            changed = np.asarray(leaf_changed)    # stats pull = device sync
+            arrays: list[tuple[str, Any]] = []
+            if changed.any():
+                arrays.append(("d", d))
+                if int(np.asarray(leaf_rnnz).sum()):
+                    arrays.append(("r", r))
+                else:           # residual known all-zero: skip its D2H —
+                    self._payload["r"] = "zero"   # decoder reconstructs
+        else:
+            q, s, leaf_changed = flat_int8_encode(
+                new_flat, base_flat, group_leaf, num_leaves=len(packed),
+                interpret=self.interpret)
+            changed = np.asarray(leaf_changed)    # stats pull = device sync
+            arrays = [("q", q), ("s", s)] if changed.any() else []
+        self.zero_names = tuple(
+            entry.name for entry, c in zip(layout.entries, changed) if not c)
+        self._start_transfers(arrays, chunk_bytes)
+
+    def _start_transfers(self, arrays: list, chunk_bytes: int) -> None:
+        """Chunk the encoded payload arrays and stream them D2H: first
+        chunk synchronously (the blocking cost), the rest on the pool."""
+        tasks: list[tuple] = []
+        for sfx, dev in arrays:
+            host = np.empty(int(dev.shape[0]), np.dtype(dev.dtype))
+            self._payload[sfx] = host
+            per = max(GROUP, chunk_bytes // host.itemsize)
+            for a in range(0, host.size, per):
+                tasks.append((host, dev, a, min(host.size, a + per)))
+        if not tasks:
+            return
+        self._pull_chunk(*tasks[0])
         pool = transfer_pool()
-        for chunk in chunks[1:]:
-            fut = pool.submit(self._materialize, chunk)
-            for name, _ in chunk:
-                self._future_of[name] = fut
+        self._chunk_futs = [pool.submit(self._pull_chunk, *task)
+                            for task in tasks[1:]]
+
+    def _pull_chunk(self, host: np.ndarray, dev: Any, a: int, b: int) -> None:
+        host[a:b] = np.asarray(dev[a:b])
+        self._account((b - a) * host.itemsize)
 
     def _account(self, nbytes: int) -> None:
         with self._link_lock:
             self._link_bytes += int(nbytes)
 
-    def _materialize(self, chunk: list) -> dict[str, Any]:
-        return {name: self._pull(name, outs) for name, outs in chunk}
-
-    def _pull(self, name: str, outs: tuple) -> Any:
-        """D2H one leaf's encoded payload (or detect it unchanged)."""
-        shape, _ = self._spec[name]
-        n = int(np.prod(shape, dtype=np.int64)) if shape else 1
-        if self.codec == "lossless":
-            delta, resid, changed, nnz = outs
-            if not bool(np.asarray(changed)):
-                return "zero"
-            payload = {"": np.asarray(delta)[:n]}
-            self._account(n * 4)
-            if int(np.asarray(nnz)):
-                payload["::r"] = np.asarray(resid)[:n]
-                self._account(n * 4)
-            else:       # residual known all-zero: reconstruct host-side —
-                        # the on-disk blob stays byte-identical, the link
-                        # transfer is skipped
-                payload["::r"] = np.zeros(n, np.uint32)
-            return payload
-        q, scales, changed = outs
-        if not bool(np.asarray(changed)):
-            return "zero"
-        q_np, s_np = np.asarray(q), np.asarray(scales)
-        self._account(q_np.nbytes + s_np.nbytes)
-        return {"::q": q_np, "::s": s_np}
+    # -- flat protocol for incremental.write_delta ----------------------
+    def flat_payload(self) -> dict:
+        """suffix -> host payload array ("d"/"r" lossless, "q"/"s" int8)
+        or the ``"zero"`` marker for a skipped all-zero residual plane;
+        empty when every packed leaf was unchanged.  Blocks until every
+        chunk has landed."""
+        self.wait()
+        return dict(self._payload)
 
     # -- LeafSource interface -------------------------------------------
     def spec(self, name: str) -> tuple[tuple, np.dtype]:
@@ -384,23 +520,15 @@ class DeltaLeafSource(LeafSource):
             if isinstance(cur, np.ndarray):     # another worker won the race
                 return cur
             self._raw[name] = arr
-            # a raw pull IS link traffic (remote/self-heal full writes and
-            # memory-level restores pull raw leaves from a delta source) —
-            # count it so bytes_on_link never under-reports a delta trigger
-            # that also performed a full write
+            # a raw pull IS link traffic (remote/self-heal full writes,
+            # memory-level restores, and per-leaf fallback encodes pull raw
+            # leaves from a delta source) — count it so bytes_on_link never
+            # under-reports
             self._link_bytes += arr.nbytes
         return arr
 
-    def encoded(self, name: str) -> Any:
-        """Pre-encoded payload dict, ``"zero"``, or None (host fallback).
-        Blocks until the leaf's encoded chunk has landed."""
-        fut = self._future_of.get(name)
-        if fut is not None:
-            return fut.result()[name]
-        return self._enc.get(name)
-
     def wait(self) -> None:
-        for fut in self._future_of.values():
+        for fut in self._chunk_futs:
             fut.result()
 
     def bytes_on_link(self) -> int:

@@ -26,6 +26,7 @@ from __future__ import annotations
 import json
 import os
 import shutil
+import time
 import zlib
 from dataclasses import dataclass
 from typing import Any, Callable, Optional
@@ -79,6 +80,52 @@ def get_decompressor(name: str) -> Callable[[bytes], bytes]:
                                "zstandard is not installed")
         return lambda data: _zstd.ZstdDecompressor().decompress(data)
     return zlib.decompress
+
+
+# ---------------------------------------------------------------------------
+# Framed compression for large single-array payloads (the flat delta
+# mega-buffer): the per-leaf paths get compression parallelism for free
+# (one leaf per io worker), a single big array would serialize it — so it
+# is compressed as independent fixed-size frames whose compressed lengths
+# are recorded in the manifest, letting the decoder split the file and
+# decompress frames in parallel too.
+# ---------------------------------------------------------------------------
+
+FLAT_FRAME_BYTES = 8 << 20
+
+
+def compress_frames(arr: np.ndarray, compress, pool,
+                    frame_bytes: int = FLAT_FRAME_BYTES
+                    ) -> tuple[list, list, float]:
+    """Compress ``arr``'s bytes as independent frames, concurrently on
+    ``pool``.  Returns (frames, frame_lens, cpu_s) — ``frame_lens`` goes in
+    the manifest for ``decompress_frames``; ``cpu_s`` sums per-worker CPU
+    seconds (the encode-cost quantity the calibration records)."""
+    data = memoryview(np.ascontiguousarray(arr).reshape(-1)).cast("B")
+
+    def one(a: int) -> tuple[bytes, float]:
+        t0 = time.thread_time()
+        blob = compress(bytes(data[a:a + frame_bytes]))
+        return blob, time.thread_time() - t0
+
+    futs = [pool.submit(one, a) for a in range(0, len(data), frame_bytes)]
+    results = [f.result() for f in futs]
+    frames = [blob for blob, _ in results]
+    return frames, [len(b) for b in frames], sum(c for _, c in results)
+
+
+def decompress_frames(path: str, frame_lens: list, dtype, decompress,
+                      pool) -> np.ndarray:
+    """Inverse of ``compress_frames``: read the file, split it on the
+    recorded frame lengths, decompress frames in parallel, reassemble."""
+    with open(path, "rb") as f:
+        data = f.read()
+    offs = [0]
+    for n in frame_lens:
+        offs.append(offs[-1] + int(n))
+    futs = [pool.submit(decompress, data[offs[i]:offs[i + 1]])
+            for i in range(len(frame_lens))]
+    return np.frombuffer(b"".join(f.result() for f in futs), dtype)
 
 
 # ---------------------------------------------------------------------------

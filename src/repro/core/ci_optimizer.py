@@ -114,9 +114,13 @@ def default_plan_variants(cost, ci_ref: float,
     with the Young/Daly optimum for that level's write cost — e.g. the
     remote level writes every round(W_yd(remote_cost, MTBF) / CI)-th
     trigger.  The device-placement variants move the ckpt_delta encode in
-    front of D2H: no per-trigger host-CPU encode, and (for int8) ~4x fewer
-    bytes on the link — the dimension a Decision uses to switch a job onto
-    an int8-delta plan when the QoS objective favors it."""
+    front of D2H — priced as one pack dispatch + ONE fused flat-kernel
+    encode (``device_pack_s* + device_encode_s*``) instead of the
+    per-trigger host-CPU encode, with (for int8) ~4x fewer bytes on the
+    link — the dimension a Decision uses to switch a job onto an
+    int8-delta plan when the QoS objective favors it; the multi-level
+    device variant routes those fused deltas through the memory/local/
+    remote cadence as well."""
     def yd_every(level: str) -> int:
         w = young_daly_interval(cost.write_duration("full", level), mtbf_s)
         return int(np.clip(round(w / max(ci_ref, 1e-9)), 2, 32))
@@ -138,6 +142,9 @@ def default_plan_variants(cost, ci_ref: float,
                        remote_every=yd_every("remote")),
         CheckpointPlan(mode="incremental", full_every=8, levels=ml_levels,
                        local_every=1, remote_every=yd_every("remote")),
+        CheckpointPlan(mode="incremental", full_every=8, levels=ml_levels,
+                       local_every=1, remote_every=yd_every("remote"),
+                       encode_placement="device", delta_codec="int8"),
     ]
 
 

@@ -6,7 +6,9 @@ time vs ``r_const``), defers reconfiguration when the TSF expects the
 workload to drop >10%, and otherwise solves Eq. 8 for a new CI — or, when
 a cost model is attached (``cost``), for a new *checkpoint plan*: the
 search then spans mechanism variants (incremental encoding, async commit,
-multi-level routing) in addition to the interval, and a Decision can carry
+multi-level routing, and the encode placement — device variants priced as
+one pack + one fused flat-kernel encode per trigger from the bench_ckpt/3
+calibration) in addition to the interval, and a Decision can carry
 "switch to incr8-async at CI=42s" instead of just a number.
 
 The control-plane contract is the ``JobHandle`` protocol below: ONE

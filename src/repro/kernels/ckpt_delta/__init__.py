@@ -1,3 +1,6 @@
-from repro.kernels.ckpt_delta.ops import delta_encode, delta_decode
+from repro.kernels.ckpt_delta.ops import (delta_decode, delta_encode,
+                                          flat_int8_encode,
+                                          flat_lossless_encode, pack_flat)
 
-__all__ = ["delta_encode", "delta_decode"]
+__all__ = ["delta_encode", "delta_decode", "pack_flat",
+           "flat_lossless_encode", "flat_int8_encode"]

@@ -17,11 +17,33 @@ so less (or cheaper-to-compress) data crosses the device->host link:
     the host CPU used to do per leaf (``ref.py`` is the host oracle and
     the fallback ``checkpoint/incremental.py`` uses off-accelerator).
 
+Both encoders come in two granularities:
+
+  * per-leaf (``delta_encode_fwd``/``lossless_encode_fwd``): one
+    pallas_call per f32 tensor — kept as the building block of the
+    per-leaf host fallback path and the dispatch-overhead baseline that
+    ``benchmarks/bench_ckpt.py`` records.
+
+  * flat (``flat_delta_encode_fwd``/``flat_lossless_encode_fwd``): ONE
+    pallas_call over the packed mega-buffer the whole f32 subtree of a
+    train state is flattened into (``checkpoint.pipeline.FlatLayout``:
+    each leaf starts at a GROUP-aligned offset, zero-padded to a whole
+    number of groups, so every group holds elements of exactly one
+    leaf).  Besides the payload, the flat kernels emit per-GROUP change
+    statistics in the same pass — ``group_changed`` (count of elements
+    whose f32 bit pattern differs from the base) and, for lossless,
+    ``group_rnnz`` (nonzero residual words) — which ``ops.py`` reduces
+    to per-LEAF counts with one scatter-add over the layout's
+    group->leaf map.  That is how the skip-zero manifest markers and the
+    residual-D2H skip survive the fusion of N kernel launches into one.
+
   new, base  (N,)        viewed as (N/G, G); block (bg, G)
   q          (N,) int8   block (bg, G)          [int8 encode]
   scale      (N/G,) f32  block (bg,)            [int8 encode]
   delta      (N,) f32    block (bg, G)          [lossless encode]
   resid      (N,) u32    block (bg, G)          [lossless encode]
+  group_changed (N/G,) i32  block (bg,)         [flat encoders]
+  group_rnnz    (N/G,) i32  block (bg,)         [flat lossless]
 
 VMEM per step: 3-4 * bg * G fp32 (8 x 1024 -> 96-128 KB).
 """
@@ -150,6 +172,96 @@ def lossless_decode_fwd(base: jax.Array, delta: jax.Array, resid: jax.Array,
       resid.reshape(ng, GROUP))
     del n
     return out.reshape(-1)
+
+
+# ---------------------------------------------------------------------------
+# Flat (mega-buffer) encoders: one pallas_call over the packed f32 subtree,
+# with per-group change statistics fused into the same pass
+# ---------------------------------------------------------------------------
+
+def _flat_lossless_encode_kernel(new_ref, base_ref, d_ref, r_ref,
+                                 c_ref, n_ref):
+    new = new_ref[...]
+    base = base_ref[...]
+    d = new - base
+    pred = base + d          # what decode will reconstruct, same rounding
+    r = (jax.lax.bitcast_convert_type(new, jnp.uint32)
+         ^ jax.lax.bitcast_convert_type(pred, jnp.uint32))
+    d_ref[...] = d
+    r_ref[...] = r
+    changed = (jax.lax.bitcast_convert_type(new, jnp.uint32)
+               != jax.lax.bitcast_convert_type(base, jnp.uint32))
+    c_ref[...] = jnp.sum(changed.astype(jnp.int32), axis=1)
+    n_ref[...] = jnp.sum((r != 0).astype(jnp.int32), axis=1)
+
+
+def flat_lossless_encode_fwd(new: jax.Array, base: jax.Array, *,
+                             block_groups: int = 8, interpret: bool = False):
+    """One fused pass over the packed flat buffer (length a multiple of
+    GROUP — ``pipeline.FlatLayout`` guarantees the alignment): returns
+    (delta f32, resid u32, group_changed i32, group_rnnz i32)."""
+    n = new.reshape(-1).shape[0]
+    assert n % GROUP == 0, f"flat buffer length {n} not GROUP-aligned"
+    ng = n // GROUP
+    bg = _grid_block(ng, block_groups)
+    d, r, c, z = pl.pallas_call(
+        _flat_lossless_encode_kernel,
+        grid=(ng // bg,),
+        in_specs=[pl.BlockSpec((bg, GROUP), lambda i: (i, 0)),
+                  pl.BlockSpec((bg, GROUP), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((bg, GROUP), lambda i: (i, 0)),
+                   pl.BlockSpec((bg, GROUP), lambda i: (i, 0)),
+                   pl.BlockSpec((bg,), lambda i: (i,)),
+                   pl.BlockSpec((bg,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((ng, GROUP), jnp.float32),
+                   jax.ShapeDtypeStruct((ng, GROUP), jnp.uint32),
+                   jax.ShapeDtypeStruct((ng,), jnp.int32),
+                   jax.ShapeDtypeStruct((ng,), jnp.int32)],
+        interpret=interpret,
+    )(new.reshape(ng, GROUP).astype(jnp.float32),
+      base.reshape(ng, GROUP).astype(jnp.float32))
+    return d.reshape(-1), r.reshape(-1), c, z
+
+
+def _flat_encode_kernel(new_ref, base_ref, q_ref, s_ref, c_ref):
+    new = new_ref[...].astype(jnp.float32)
+    base = base_ref[...].astype(jnp.float32)
+    d = new - base
+    amax = jnp.max(jnp.abs(d), axis=1)                    # (bg,)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(d / scale[:, None]), -127, 127)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale
+    changed = (jax.lax.bitcast_convert_type(new, jnp.uint32)
+               != jax.lax.bitcast_convert_type(base, jnp.uint32))
+    c_ref[...] = jnp.sum(changed.astype(jnp.int32), axis=1)
+
+
+def flat_delta_encode_fwd(new: jax.Array, base: jax.Array, *,
+                          block_groups: int = 8, interpret: bool = False):
+    """One fused int8 pass over the packed flat buffer: returns
+    (q int8, per-group f32 scales, group_changed i32).  Group alignment
+    means every 1024-group quantizes elements of exactly one leaf, so the
+    payload is numerically identical to the per-leaf encoder's."""
+    n = new.reshape(-1).shape[0]
+    assert n % GROUP == 0, f"flat buffer length {n} not GROUP-aligned"
+    ng = n // GROUP
+    bg = _grid_block(ng, block_groups)
+    q, s, c = pl.pallas_call(
+        _flat_encode_kernel,
+        grid=(ng // bg,),
+        in_specs=[pl.BlockSpec((bg, GROUP), lambda i: (i, 0)),
+                  pl.BlockSpec((bg, GROUP), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((bg, GROUP), lambda i: (i, 0)),
+                   pl.BlockSpec((bg,), lambda i: (i,)),
+                   pl.BlockSpec((bg,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((ng, GROUP), jnp.int8),
+                   jax.ShapeDtypeStruct((ng,), jnp.float32),
+                   jax.ShapeDtypeStruct((ng,), jnp.int32)],
+        interpret=interpret,
+    )(new.reshape(ng, GROUP).astype(jnp.float32),
+      base.reshape(ng, GROUP).astype(jnp.float32))
+    return q.reshape(-1), s, c
 
 
 def delta_decode_fwd(q: jax.Array, scales: jax.Array, *, block_groups: int = 8,

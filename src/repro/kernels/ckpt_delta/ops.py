@@ -1,9 +1,26 @@
-"""Public jit'd wrappers for the delta codec kernel, plus the per-leaf
-fused entry points the device-resident delta plane
-(``checkpoint.pipeline.DeltaLeafSource``) dispatches in front of D2H:
-encode + unchanged-leaf detection + residual-sparsity count in ONE jitted
-call per leaf, so the snapshot path issues a single async dispatch per
-encodable leaf and the host only ever pulls the encoded payload."""
+"""Public jit'd wrappers for the delta codec kernels.
+
+Three tiers of entry points:
+
+  * whole-buffer codec ops (``delta_encode``/``lossless_decode``/...):
+    shape-generic, used by the host<->device decode paths.
+
+  * per-leaf fused ops (``lossless_encode_leaf``/``int8_encode_leaf``):
+    encode + unchanged-leaf detection + residual-sparsity count in one
+    jitted call per leaf.  The pre-flat device delta plane dispatched
+    these once per f32 leaf; they remain as the host-fallback building
+    block and the dispatch-overhead baseline ``bench_ckpt`` records
+    (``per_leaf_encode_s`` in the bench_ckpt/3 artifact).
+
+  * flat fused ops (``pack_flat``/``flat_lossless_encode``/
+    ``flat_int8_encode``): the hot path.  ``pack_flat`` concatenates the
+    f32 subtree into ONE GROUP-aligned device mega-buffer (one jitted
+    dispatch); the flat encoders run ONE pallas_call over it and reduce
+    the kernel's per-group change statistics to per-LEAF counts with a
+    scatter-add over the layout's group->leaf map — all inside the same
+    jit, so a delta trigger costs one pack dispatch + one encode dispatch
+    regardless of how many hundreds of leaves the state has.
+"""
 from __future__ import annotations
 
 from functools import partial
@@ -11,8 +28,10 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.ckpt_delta.kernel import (delta_decode_fwd,
+from repro.kernels.ckpt_delta.kernel import (GROUP, delta_decode_fwd,
                                              delta_encode_fwd,
+                                             flat_delta_encode_fwd,
+                                             flat_lossless_encode_fwd,
                                              lossless_decode_fwd,
                                              lossless_encode_fwd)
 
@@ -94,3 +113,88 @@ def int8_encode_leaf(new, base, *, block_groups: int = 8,
     q, s = delta_encode_fwd(nf, bf, block_groups=block_groups,
                             interpret=interpret)
     return q, s, _bits_changed(nf, bf)
+
+
+# ---------------------------------------------------------------------------
+# Flat (mega-buffer) entry points for the packed device delta plane
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def pack_flat(leaves):
+    """Pack a sequence of f32 leaves into ONE flat device buffer, each
+    leaf zero-padded to a whole number of GROUPs so it starts at a
+    GROUP-aligned offset (``pipeline.FlatLayout`` records the offsets).
+    One jitted dispatch for the whole subtree; jit retraces per distinct
+    layout (leaf shape set), which the device base caches across
+    triggers."""
+    parts = []
+    for leaf in leaves:
+        v = leaf.reshape(-1).astype(jnp.float32)
+        pad = (-v.shape[0]) % GROUP
+        if pad:
+            v = jnp.concatenate([v, jnp.zeros((pad,), jnp.float32)])
+        parts.append(v)
+    return jnp.concatenate(parts)
+
+
+def _flat_blocks(new_flat, base_flat, group_leaf, block_groups: int,
+                 interpret: bool):
+    """Pick the effective block size and zero-pad the flat pair to a whole
+    number of kernel BLOCKS (= bg groups), so ``_grid_block`` never has to
+    shrink the block to divide an awkward group count.  Interpret mode
+    (CPU backend) pays per grid STEP — each step re-slices the full
+    operands — so there the whole buffer becomes ONE block (no VMEM bound
+    applies off-accelerator); compiled mode keeps ``block_groups`` (64
+    groups x 4 f32 planes = 1 MiB of VMEM).  Pad groups diff zero-vs-zero
+    (changed == rnnz == 0) and scatter onto leaf 0, adding nothing;
+    callers slice payloads back to ``n``."""
+    n = new_flat.shape[0]
+    if interpret:
+        block_groups = max(1, n // GROUP)
+    pad_g = (-(n // GROUP)) % block_groups
+    if pad_g:
+        z = jnp.zeros((pad_g * GROUP,), jnp.float32)
+        new_flat = jnp.concatenate([new_flat, z])
+        base_flat = jnp.concatenate([base_flat, z])
+        group_leaf = jnp.concatenate(
+            [group_leaf, jnp.zeros((pad_g,), group_leaf.dtype)])
+    return new_flat, base_flat, group_leaf, n, block_groups
+
+
+@partial(jax.jit, static_argnames=("num_leaves", "block_groups", "interpret"))
+def flat_lossless_encode(new_flat, base_flat, group_leaf, *, num_leaves: int,
+                         block_groups: int = 64, interpret: bool = False):
+    """Fused lossless encode of the packed mega-buffer: ONE pallas_call
+    emits (delta f32, resid u32) plus per-group change stats, and a
+    scatter-add over ``group_leaf`` (the layout's group->leaf index map)
+    reduces them to per-LEAF counts — returns (delta, resid,
+    leaf_changed i32[num_leaves], leaf_rnnz i32[num_leaves]).  A leaf
+    with ``leaf_changed == 0`` is bit-identical to the base (the skip-zero
+    manifest marker); ``leaf_rnnz.sum() == 0`` means the residual plane is
+    all-zero and its D2H can be skipped entirely."""
+    new_flat, base_flat, group_leaf, n, block_groups = _flat_blocks(
+        new_flat, base_flat, group_leaf, block_groups, interpret)
+    d, r, gc, gz = flat_lossless_encode_fwd(new_flat, base_flat,
+                                            block_groups=block_groups,
+                                            interpret=interpret)
+    leaf_changed = jnp.zeros((num_leaves,), jnp.int32).at[group_leaf].add(gc)
+    leaf_rnnz = jnp.zeros((num_leaves,), jnp.int32).at[group_leaf].add(gz)
+    return d[:n], r[:n], leaf_changed, leaf_rnnz
+
+
+@partial(jax.jit, static_argnames=("num_leaves", "block_groups", "interpret"))
+def flat_int8_encode(new_flat, base_flat, group_leaf, *, num_leaves: int,
+                     block_groups: int = 64, interpret: bool = False):
+    """Fused int8 encode of the packed mega-buffer: ONE pallas_call emits
+    (q int8, per-1024-group f32 scales) plus per-group change counts,
+    reduced to per-leaf via scatter-add — returns (q, scales,
+    leaf_changed i32[num_leaves]).  Group alignment keeps every scale
+    group within a single leaf, so the payload matches the per-leaf
+    encoder's bit for bit."""
+    new_flat, base_flat, group_leaf, n, block_groups = _flat_blocks(
+        new_flat, base_flat, group_leaf, block_groups, interpret)
+    q, s, gc = flat_delta_encode_fwd(new_flat, base_flat,
+                                     block_groups=block_groups,
+                                     interpret=interpret)
+    leaf_changed = jnp.zeros((num_leaves,), jnp.int32).at[group_leaf].add(gc)
+    return q[:n], s[:n // GROUP], leaf_changed

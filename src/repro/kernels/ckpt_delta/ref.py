@@ -52,3 +52,56 @@ def lossless_decode_ref(base: np.ndarray, delta: np.ndarray,
     bits = pred.view(np.uint32) ^ np.ascontiguousarray(
         resid, np.uint32).reshape(-1)
     return bits.view(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Flat (mega-buffer) oracles: pack + encode with per-leaf change stats,
+# mirroring kernels.ckpt_delta.ops.pack_flat / flat_*_encode
+# ---------------------------------------------------------------------------
+
+def pack_flat_ref(leaves) -> np.ndarray:
+    """Host twin of ``ops.pack_flat``: concatenate f32 leaves, each
+    zero-padded to a whole number of GROUPs (GROUP-aligned offsets)."""
+    parts = []
+    for leaf in leaves:
+        v = np.ascontiguousarray(leaf, np.float32).reshape(-1)
+        pad = (-v.size) % GROUP
+        if pad:
+            v = np.concatenate([v, np.zeros(pad, np.float32)])
+        parts.append(v)
+    return np.concatenate(parts) if parts else np.zeros(0, np.float32)
+
+
+def _leaf_reduce(per_group: np.ndarray, group_leaf: np.ndarray,
+                 num_leaves: int) -> np.ndarray:
+    out = np.zeros(num_leaves, np.int64)
+    np.add.at(out, np.asarray(group_leaf, np.int64), per_group)
+    return out
+
+
+def flat_lossless_encode_ref(new_flat: np.ndarray, base_flat: np.ndarray,
+                             group_leaf: np.ndarray, num_leaves: int):
+    """Oracle of ``ops.flat_lossless_encode``: (delta f32, resid u32,
+    leaf_changed, leaf_rnnz) over the packed GROUP-aligned buffer."""
+    new = np.ascontiguousarray(new_flat, np.float32).reshape(-1)
+    base = np.ascontiguousarray(base_flat, np.float32).reshape(-1)
+    assert new.size % GROUP == 0, new.size
+    delta, resid = lossless_encode_ref(new, base)
+    changed = (new.view(np.uint32) != base.view(np.uint32))
+    gc = changed.reshape(-1, GROUP).sum(axis=1)
+    gz = (resid.reshape(-1, GROUP) != 0).sum(axis=1)
+    return (delta, resid, _leaf_reduce(gc, group_leaf, num_leaves),
+            _leaf_reduce(gz, group_leaf, num_leaves))
+
+
+def flat_int8_encode_ref(new_flat: np.ndarray, base_flat: np.ndarray,
+                         group_leaf: np.ndarray, num_leaves: int):
+    """Oracle of ``ops.flat_int8_encode``: (q int8, per-group f32 scales,
+    leaf_changed) over the packed GROUP-aligned buffer."""
+    new = np.ascontiguousarray(new_flat, np.float32).reshape(-1)
+    base = np.ascontiguousarray(base_flat, np.float32).reshape(-1)
+    assert new.size % GROUP == 0, new.size
+    q, scales = encode_ref(new - base)
+    changed = (new.view(np.uint32) != base.view(np.uint32))
+    gc = changed.reshape(-1, GROUP).sum(axis=1)
+    return q, scales, _leaf_reduce(gc, group_leaf, num_leaves)

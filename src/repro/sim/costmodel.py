@@ -40,12 +40,20 @@ CALIBRATION_KEYS = ("schema", "state_bytes", "full_write_s", "restore_s",
                     "delta_encode_s_per_byte")
 
 #: accepted artifact schemas; "bench_ckpt/2" adds the ``device`` section
-#: (per-codec on-device encode measurements).  /1 artifacts stay loadable:
-#: the device fields then keep their modeled defaults
-CALIBRATION_SCHEMAS = ("bench_ckpt/1", "bench_ckpt/2")
+#: (per-codec on-device encode measurements); "bench_ckpt/3" re-measures it
+#: for the FLAT fused encode and adds ``pack_s`` (the per-trigger pack
+#: dispatch) and ``per_leaf_encode_s`` (the pre-flat per-leaf dispatch
+#: baseline the CI gate regresses against).  Older artifacts stay loadable:
+#: /1 keeps the device fields at their modeled defaults, /2 keeps pack_s
+#: at 0 (the per-leaf path had no pack step)
+CALIBRATION_SCHEMAS = ("bench_ckpt/1", "bench_ckpt/2", "bench_ckpt/3")
 
 #: per-codec keys of each ``device`` entry in a bench_ckpt/2 artifact
 DEVICE_CALIBRATION_KEYS = ("bytes_on_link", "link_fraction", "encode_s")
+
+#: additional per-codec keys a bench_ckpt/3 ``device`` entry must carry
+DEVICE_CALIBRATION_KEYS_V3 = DEVICE_CALIBRATION_KEYS + (
+    "pack_s", "per_leaf_encode_s")
 
 
 def levels_due(plan: CheckpointPlan, trigger_index: int
@@ -93,6 +101,12 @@ class SimCostModel:
     device_link_fraction_int8: float = 0.26 # int8 payload / state bytes
     device_encode_s: float = 0.0            # per-trigger device encode (lossless)
     device_encode_s_int8: float = 0.0       # per-trigger device encode (int8)
+    # the flat path's per-trigger pack dispatch (the new state's f32
+    # subtree -> one mega-buffer) — measured separately from encode_s so
+    # the bench can regress the fused encode against the per-leaf baseline
+    # without the pack term muddying the comparison
+    device_pack_s: float = 0.0              # per-trigger pack (lossless)
+    device_pack_s_int8: float = 0.0         # per-trigger pack (int8)
 
     def __post_init__(self) -> None:
         # the priced restore paths hang off the LEVEL_COVERAGE mapping;
@@ -133,25 +147,32 @@ class SimCostModel:
             "delta_encode_s_per_byte": float(cal["delta_encode_s_per_byte"]),
             "state_bytes": float(cal["state_bytes"]),
         }
-        if cal["schema"] == "bench_ckpt/2":
+        if cal["schema"] in ("bench_ckpt/2", "bench_ckpt/3"):
             dev = cal.get("device")
             if not isinstance(dev, dict):
-                raise ValueError("bench_ckpt/2 artifact missing the "
+                raise ValueError(f"{cal['schema']} artifact missing the "
                                  "'device' measurement section")
+            required = (DEVICE_CALIBRATION_KEYS_V3
+                        if cal["schema"] == "bench_ckpt/3"
+                        else DEVICE_CALIBRATION_KEYS)
             for codec in ("lossless", "int8"):
                 entry = dev.get(codec)
-                bad = [k for k in DEVICE_CALIBRATION_KEYS
+                bad = [k for k in required
                        if not isinstance((entry or {}).get(k), (int, float))]
                 if entry is None or bad:
                     raise ValueError(
                         f"device section entry {codec!r} missing or "
-                        f"non-numeric keys {bad or DEVICE_CALIBRATION_KEYS}")
+                        f"non-numeric keys {bad or list(required)}")
             kw["device_link_fraction"] = float(dev["lossless"]["link_fraction"])
             kw["device_link_fraction_int8"] = float(dev["int8"]["link_fraction"])
             kw["device_encode_s"] = float(dev["lossless"]["encode_s"])
             kw["device_encode_s_int8"] = float(dev["int8"]["encode_s"])
+            if cal["schema"] == "bench_ckpt/3":
+                kw["device_pack_s"] = float(dev["lossless"]["pack_s"])
+                kw["device_pack_s_int8"] = float(dev["int8"]["pack_s"])
         # bench_ckpt/1: device fields keep their modeled defaults (the
-        # versioned fallback — old artifacts stay loadable)
+        # versioned fallback — old artifacts stay loadable); bench_ckpt/2:
+        # pack_s stays 0 (the per-leaf path packed nothing)
         known = {f.name for f in fields(cls)}
         unknown = set(overrides) - known
         if unknown:
@@ -183,8 +204,8 @@ class SimCostModel:
         compresses) — priced so ``optimize_plan`` stops recommending delta
         plans whose encode exceeds the write win.  A device-encoded delta
         (``plan.encode_placement == "device"``) replaces that term with the
-        measured per-trigger on-device encode+payload-transfer seconds —
-        the placement dimension the optimizer searches over."""
+        measured per-trigger pack + fused on-device encode+payload-transfer
+        seconds — the placement dimension the optimizer searches over."""
         d = self.ckpt_duration_s * {"memory": self.memory_write_factor,
                                     "local": 1.0,
                                     "remote": self.remote_write_factor}[level]
@@ -192,8 +213,9 @@ class SimCostModel:
             d *= (self.delta_int8_fraction if encoding == "int8"
                   else self.delta_fraction)
             if placement == "device":
-                d += (self.device_encode_s_int8 if encoding == "int8"
-                      else self.device_encode_s)
+                d += (self.device_pack_s_int8 + self.device_encode_s_int8
+                      if encoding == "int8"
+                      else self.device_pack_s + self.device_encode_s)
             else:
                 d += self.delta_encode_s_per_byte * self.state_bytes
         return d

@@ -1,6 +1,7 @@
-"""Device-resident delta plane: on-device encode in front of D2H
+"""Device-resident delta plane: the f32 subtree packed into ONE
+GROUP-aligned mega-buffer, ONE fused encode kernel in front of D2H
 (``pipeline.DeltaLeafSource``), placement/codec as plan dimensions, and
-the batched controller evaluation that rides along in this PR.
+the batched controller evaluation that rides along.
 
 All kernel work runs in Pallas interpret mode on the CPU backend
 (``ckpt_delta.ops.default_interpret``), so every test here is tier-1.
@@ -13,10 +14,14 @@ import numpy as np
 import pytest
 
 from repro.checkpoint import (CheckpointManager, CheckpointPlan,
-                              DeltaLeafSource, DeviceDeltaBase)
+                              DeltaLeafSource, DeviceDeltaBase, FlatLayout)
 from repro.checkpoint.incremental import (apply_delta, read_delta_manifest,
                                           write_delta)
-from repro.kernels.ckpt_delta.ref import encode_ref, lossless_encode_ref
+from repro.kernels.ckpt_delta.ref import (GROUP, decode_ref,
+                                          flat_int8_encode_ref,
+                                          flat_lossless_encode_ref,
+                                          lossless_encode_ref, pack_flat_ref)
+from repro.utils.trees import tree_flatten_with_names
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -48,8 +53,14 @@ def _bit_exact(a, b) -> bool:
     return all(np.array_equal(x, y) for x, y in zip(la, lb))
 
 
+def _flat_ref(layout: FlatLayout, state) -> np.ndarray:
+    """Host-oracle packed mega-buffer of ``state`` in layout order."""
+    leaves = {n: np.asarray(l) for n, l in tree_flatten_with_names(state)}
+    return pack_flat_ref([leaves[n] for n in layout.names])
+
+
 # ---------------------------------------------------------------------------
-# DeltaLeafSource output == ref.py host oracle (kernel parity, tier-1)
+# DeltaLeafSource flat payload == ref.py host oracle (kernel parity, tier-1)
 # ---------------------------------------------------------------------------
 
 def test_delta_leaf_source_matches_host_oracle_lossless():
@@ -57,22 +68,30 @@ def test_delta_leaf_source_matches_host_oracle_lossless():
     s1 = _bump(s0)
     src = DeltaLeafSource(s1, DeviceDeltaBase(s0), codec="lossless")
     src.wait()
-    d_ref, r_ref = lossless_encode_ref(np.asarray(s1["params"]["w"]),
-                                       np.asarray(s0["params"]["w"]))
-    enc = src.encoded("params/w")
-    assert np.array_equal(enc[""], d_ref)
-    assert enc[""].dtype == np.float32 and enc["::r"].dtype == np.uint32
-    assert np.array_equal(enc["::r"], r_ref)
-    # unchanged device leaf -> device-side zero marker
-    assert src.encoded("params/frozen") == "zero"
-    # host and non-f32 leaves fall back (None) and stay raw-readable
-    assert src.encoded("host") is None
-    assert src.encoded("ids") is None
+    layout = src.layout
+    # only the f32 jax leaves pack into the mega-buffer; host and non-f32
+    # leaves stay outside the layout and remain raw-readable
+    assert sorted(layout.names) == ["params/frozen", "params/w"]
+    for name in ("host", "ids", "step"):
+        assert name not in layout.by_name
+    d_ref, r_ref, changed_ref, _ = flat_lossless_encode_ref(
+        _flat_ref(layout, s1), _flat_ref(layout, s0),
+        layout.group_leaf, len(layout.names))
+    payload = src.flat_payload()
+    assert payload["d"].dtype == np.float32
+    assert np.array_equal(payload["d"], d_ref)
+    # the tiny bump keeps every element within 2x of its base, so the
+    # residual plane is all-zero: its D2H is skipped, marker recorded
+    assert not r_ref.any() and payload["r"] == "zero"
+    # unchanged packed leaf -> fused change count 0 -> skip-zero marker
+    assert src.zero_names == tuple(
+        e.name for e, c in zip(layout.entries, changed_ref) if not c) \
+        == ("params/frozen",)
     assert np.array_equal(src.get("host"), s1["host"])
-    # encoded link accounting: w delta (resid all-zero => skipped) +
-    # raw fallbacks; strictly under the raw state bytes
-    raw = sum(np.asarray(l).nbytes for l in jax.tree_util.tree_leaves(s1))
-    assert 0 < src.bytes_on_link() < raw
+    # link accounting, exactly: the d plane (residual skipped) + the
+    # eager host-leaf copies; the lazy jax scalar "step" is not pulled
+    assert src.bytes_on_link() == 4 * layout.total \
+        + s1["host"].nbytes + s1["ids"].nbytes
 
 
 def test_delta_leaf_source_matches_host_oracle_int8():
@@ -80,14 +99,15 @@ def test_delta_leaf_source_matches_host_oracle_int8():
     s1 = _bump(s0, eps=np.float32(3e-3))
     src = DeltaLeafSource(s1, DeviceDeltaBase(s0), codec="int8")
     src.wait()
-    delta = np.asarray(s1["params"]["w"]) - np.asarray(s0["params"]["w"])
-    q_ref, s_ref = encode_ref(delta.reshape(-1))
-    enc = src.encoded("params/w")
-    assert np.array_equal(enc["::q"], q_ref)
-    assert np.array_equal(enc["::s"], s_ref)
-    # int8 payload is ~1.25 B/elem vs 4 B/elem raw for the encoded leaves
-    w_bytes = np.asarray(s1["params"]["w"]).nbytes
-    assert enc["::q"].nbytes + enc["::s"].nbytes < 0.5 * w_bytes
+    layout = src.layout
+    q_ref, s_ref, _ = flat_int8_encode_ref(
+        _flat_ref(layout, s1), _flat_ref(layout, s0),
+        layout.group_leaf, len(layout.names))
+    payload = src.flat_payload()
+    assert np.array_equal(payload["q"], q_ref)
+    assert np.array_equal(payload["s"], s_ref)
+    # int8 payload is ~1.004 B/elem vs 4 B/elem f32 for the packed subtree
+    assert payload["q"].nbytes + payload["s"].nbytes < 0.5 * 4 * layout.total
 
 
 def test_delta_leaf_source_residual_transferred_when_nonzero():
@@ -102,20 +122,80 @@ def test_delta_leaf_source_residual_transferred_when_nonzero():
     src.wait()
     d_ref, r_ref = lossless_encode_ref(new_w, base_w)
     assert r_ref.any(), "fixture must produce a nonzero residual"
-    enc = src.encoded("w")
-    assert np.array_equal(enc["::r"], r_ref)
-    assert np.array_equal(enc[""], d_ref)
+    payload = src.flat_payload()
+    assert np.array_equal(payload["r"], r_ref)
+    assert np.array_equal(payload["d"], d_ref)
+
+
+# ---------------------------------------------------------------------------
+# fused flat kernels == host oracles on an awkward layout (tier-1)
+# ---------------------------------------------------------------------------
+
+def test_flat_ops_match_ref_on_awkward_leaf_sizes():
+    """Parity of the fused pallas ops (interpret mode) with the numpy
+    oracles on a layout mixing odd, tiny and exactly-one-group leaves —
+    padded extents, the group->leaf scatter-add and the per-leaf change
+    stats included."""
+    from repro.kernels.ckpt_delta.ops import (flat_int8_encode,
+                                              flat_lossless_encode,
+                                              pack_flat)
+
+    rng = np.random.default_rng(7)
+    sizes = [3000, 256, 1, 5000, GROUP]
+    base = [rng.standard_normal((s,)).astype(np.float32) for s in sizes]
+    new = [b + rng.uniform(-1e-2, 1e-2, b.shape).astype(np.float32)
+           for b in base]
+    new[1] = base[1].copy()                      # one unchanged leaf
+    layout = FlatLayout([(f"l{i}", (s,)) for i, s in enumerate(sizes)])
+    nl = len(sizes)
+    nf = pack_flat([jnp.asarray(x) for x in new])
+    bf = pack_flat([jnp.asarray(x) for x in base])
+    assert np.array_equal(np.asarray(nf), pack_flat_ref(new))
+    gl = layout.group_leaf_device()
+    d, r, lc, lz = flat_lossless_encode(nf, bf, gl, num_leaves=nl,
+                                        interpret=True)
+    d_ref, r_ref, lc_ref, lz_ref = flat_lossless_encode_ref(
+        pack_flat_ref(new), pack_flat_ref(base), layout.group_leaf, nl)
+    assert np.array_equal(np.asarray(d), d_ref)
+    assert np.array_equal(np.asarray(r), r_ref)
+    assert np.array_equal(np.asarray(lc), lc_ref)
+    assert np.array_equal(np.asarray(lz), lz_ref)
+    assert int(lc_ref[1]) == 0 and lc_ref[[0, 2, 3, 4]].all()
+    q, s, lc2 = flat_int8_encode(nf, bf, gl, num_leaves=nl, interpret=True)
+    q_ref, s_ref, _ = flat_int8_encode_ref(
+        pack_flat_ref(new), pack_flat_ref(base), layout.group_leaf, nl)
+    assert np.array_equal(np.asarray(q), q_ref)
+    assert np.array_equal(np.asarray(s), s_ref)
+    assert np.array_equal(np.asarray(lc2), lc_ref)
+
+
+def test_flat_blocks_pads_to_block_multiple():
+    """Compiled-mode block padding: an 11-group buffer at block_groups=4
+    pads to 12 groups of zero-vs-zero diff scattered onto leaf 0 (adding
+    nothing); interpret mode collapses to ONE whole-buffer block,
+    unpadded — the per-grid-step cost structure documented on
+    ``_flat_blocks``."""
+    from repro.kernels.ckpt_delta.ops import _flat_blocks
+
+    n = 11 * GROUP
+    nf = jnp.ones((n,), jnp.float32)
+    bf = jnp.zeros((n,), jnp.float32)
+    gl = jnp.asarray(np.arange(11, dtype=np.int32) // 3)
+    nf2, bf2, gl2, n2, bg = _flat_blocks(nf, bf, gl, 4, interpret=False)
+    assert (n2, bg) == (n, 4) and nf2.shape[0] == 12 * GROUP
+    assert not np.asarray(nf2[n:]).any() and not np.asarray(bf2[n:]).any()
+    assert int(gl2[-1]) == 0
+    nf3, _, gl3, n3, bg3 = _flat_blocks(nf, bf, gl, 4, interpret=True)
+    assert (n3, bg3) == (n, 11) and nf3.shape[0] == n and gl3.shape[0] == 11
 
 
 # ---------------------------------------------------------------------------
 # int8 round trip obeys the documented group-quantization bound
 # ---------------------------------------------------------------------------
 
-def test_int8_roundtrip_error_within_group_bound(tmp_path):
+def test_int8_roundtrip_error_within_group_bound():
     """|err| <= max|delta_group| / 254 per element (scale = amax/127,
-    round-to-nearest) — the bound documented on ``int8_encode_leaf``."""
-    from repro.kernels.ckpt_delta.ref import GROUP, decode_ref
-
+    round-to-nearest) — the bound documented on the int8 encode ops."""
     rng = np.random.default_rng(5)
     base = rng.standard_normal((4 * GROUP,)).astype(np.float32)
     new = (base + rng.uniform(-0.01, 0.01, base.shape)
@@ -123,14 +203,118 @@ def test_int8_roundtrip_error_within_group_bound(tmp_path):
     src = DeltaLeafSource({"w": jnp.asarray(new)},
                           DeviceDeltaBase({"w": jnp.asarray(base)}),
                           codec="int8")
-    src.wait()
-    enc = src.encoded("w")
-    got = decode_ref(enc["::q"], enc["::s"])[:new.size]
+    payload = src.flat_payload()
+    got = decode_ref(payload["q"], payload["s"])[:new.size]
     delta = new - base
     amax = np.abs(delta.reshape(-1, GROUP)).max(axis=1)
     bound = np.repeat(np.maximum(amax, 1e-12) / 254.0, GROUP)
     err = np.abs(got - delta)
     assert (err <= bound + 1e-9).all(), float((err - bound).max())
+
+
+# ---------------------------------------------------------------------------
+# skip paths: all-zero residual, fully-unchanged state
+# ---------------------------------------------------------------------------
+
+def test_all_zero_residual_skips_transfer_and_roundtrips(tmp_path):
+    """When the fused per-leaf residual counts sum to zero the residual
+    plane never crosses the link — the manifest carries a ``"zero"``
+    marker, no ``flat@r.bin`` exists, the decoder reconstructs zeros, and
+    restore is bit-exact."""
+    rng = np.random.default_rng(11)
+    base_w = rng.standard_normal((8 * GROUP,)).astype(np.float32)
+    s0 = {"w": jnp.asarray(base_w), "t": np.arange(4, dtype=np.int64)}
+    s1 = {"w": jnp.asarray(base_w + np.float32(1e-4)),
+          "t": np.arange(4, dtype=np.int64)}
+    src = DeltaLeafSource(s1, DeviceDeltaBase(s0), codec="lossless")
+    payload = src.flat_payload()
+    assert payload["r"] == "zero"
+    # link = the d plane + the eager host-leaf copy; NO residual bytes
+    assert src.bytes_on_link() == 8 * GROUP * 4 + s1["t"].nbytes
+    base_np = jax.tree_util.tree_map(np.asarray, s0)
+    d = str(tmp_path)
+    write_delta(d, 1, src, base_np, 0, 1.0, mode="lossless", codec="zlib")
+    meta = read_delta_manifest(d, 1)
+    assert meta["flat"]["arrays"]["r"] == "zero"
+    assert not os.path.exists(os.path.join(d, "delta_0000000001",
+                                           "flat@r.bin"))
+    got = apply_delta(d, 1, base_np, placement="device")
+    assert _bit_exact(got, s1)
+
+
+def test_all_unchanged_state_moves_no_payload(tmp_path):
+    """Every packed leaf unchanged: no payload arrays cross the link at
+    all, every packed leaf gets a skip-zero marker, and the delta still
+    applies (to the base itself)."""
+    s0 = _state(2)
+    src = DeltaLeafSource(s0, DeviceDeltaBase(s0), codec="int8")
+    assert src.flat_payload() == {}
+    assert src.zero_names == tuple(src.layout.names)
+    # only the eager host-leaf copies count as link traffic
+    assert src.bytes_on_link() == s0["host"].nbytes + s0["ids"].nbytes
+    base_np = jax.tree_util.tree_map(np.asarray, s0)
+    write_delta(str(tmp_path), 1, src, base_np, 0, 1.0, mode="int8",
+                codec="zlib")
+    meta = read_delta_manifest(str(tmp_path), 1)
+    assert meta["flat"]["arrays"] == {}
+    got = apply_delta(str(tmp_path), 1, base_np)
+    assert _bit_exact(got, s0)
+
+
+# ---------------------------------------------------------------------------
+# cross-version and mixed-dtype restores
+# ---------------------------------------------------------------------------
+
+def test_v2_per_leaf_manifest_restores_through_current_reader(tmp_path):
+    """Cross-version: a per-leaf (pre-flat) delta manifest — no ``flat``
+    section, the layout PR-5 wrote — still restores bit-exactly through
+    the current reader under both decode placements."""
+    s0 = _state(6)
+    s1 = _bump(_state(6))
+    base_np = jax.tree_util.tree_map(np.asarray, s0)
+    new_np = jax.tree_util.tree_map(np.asarray, s1)
+    d = str(tmp_path)
+    write_delta(d, 1, new_np, base_np, 0, 1.0, mode="lossless",
+                codec="zlib")
+    meta = read_delta_manifest(d, 1)
+    assert "flat" not in meta        # host pytree source: per-leaf blobs
+    for placement in ("host", "device"):
+        got = apply_delta(d, 1, base_np, placement=placement)
+        assert _bit_exact(got, s1)
+
+
+def test_mixed_dtype_state_roundtrips_bit_exact_under_device_plan(tmp_path):
+    """Non-f32, odd-sized, zero-size and host-resident leaves fall back
+    to the per-leaf host path while the f32 subtree rides the flat
+    payload — one device-placement delta must restore the whole mixed
+    state bit-exactly."""
+    rng = np.random.default_rng(9)
+    state = {
+        "w": jnp.asarray(rng.standard_normal((3001,)).astype(np.float32)),
+        "half": jnp.asarray(rng.standard_normal((513,))
+                            .astype(np.float16)),
+        "empty": jnp.zeros((0,), jnp.float32),
+        "host": rng.standard_normal((65,)).astype(np.float32),
+        "ids": np.arange(7, dtype=np.int64),
+        "step": jnp.asarray(np.int32(0)),
+    }
+    bumped = dict(state)
+    bumped["w"] = state["w"] + np.float32(1e-3)
+    bumped["half"] = (state["half"].astype(jnp.float32)
+                      + 0.25).astype(jnp.float16)
+    bumped["host"] = state["host"] + np.float32(0.5)
+    bumped["step"] = jnp.asarray(np.int32(1))
+    plan = CheckpointPlan(mode="incremental", full_every=4,
+                          encode_placement="device")
+    mgr = CheckpointManager(str(tmp_path), plan)
+    mgr.save(0, state, 0.0)
+    rep = mgr.save(1, bumped, 1.0)
+    assert rep.kind == "delta"
+    meta = read_delta_manifest(str(tmp_path / "local"), 1)
+    # only the non-empty f32 device leaf packs into the flat section
+    assert [row[0] for row in meta["flat"]["layout"]] == ["w"]
+    got = mgr.restore(state, "node")
+    assert got.step == 1 and _bit_exact(got.state, bumped)
 
 
 # ---------------------------------------------------------------------------
@@ -161,12 +345,16 @@ def test_cross_placement_restore_bit_exact(tmp_path, save_placement,
 
 
 @pytest.mark.parametrize("codec", ["lossless", "int8"])
-def test_device_delta_blobs_byte_identical_to_host(tmp_path, codec):
-    """Acceptance: a fixed-seed device-encoded delta produces the same
-    blobs (and the same manifest, modulo the placement field) as the host
-    encoder, and both restore identically."""
+def test_device_and_host_deltas_restore_identically(tmp_path, codec):
+    """Acceptance: a fixed-seed device-encoded delta (flat mega-buffer
+    blobs) and the host-encoded per-leaf delta of the same transition
+    decode to the SAME state.  The blob layouts differ — ``flat@*.bin``
+    planes under a ``flat`` manifest section subsume the packed leaves'
+    per-leaf blobs — but GROUP alignment keeps every flat extent's
+    payload bit-identical to the per-leaf encoder's, so the decoded
+    states agree to the bit."""
     s0, s1 = _state(3), _bump(_state(3), eps=np.float32(2e-3))
-    dirs = {}
+    base = jax.tree_util.tree_map(np.asarray, s0)
     for placement in ("host", "device"):
         d = str(tmp_path / placement)
         os.makedirs(d)
@@ -174,28 +362,21 @@ def test_device_delta_blobs_byte_identical_to_host(tmp_path, codec):
             src = DeltaLeafSource(s1, DeviceDeltaBase(s0), codec=codec)
         else:
             src = jax.tree_util.tree_map(np.asarray, s1)
-        base = jax.tree_util.tree_map(np.asarray, s0)
         write_delta(d, 1, src, base, 0, 1.0, mode=codec, codec="zlib")
-        dirs[placement] = os.path.join(d, "delta_0000000001")
-    host_files = sorted(os.listdir(dirs["host"]))
-    assert sorted(os.listdir(dirs["device"])) == host_files
-    for fname in host_files:
-        with open(os.path.join(dirs["host"], fname), "rb") as f:
-            h = f.read()
-        with open(os.path.join(dirs["device"], fname), "rb") as f:
-            dev = f.read()
-        if fname == "delta_manifest.json":
-            import json
-            mh, md = json.loads(h), json.loads(dev)
-            assert mh.pop("placement") == "host"
-            assert md.pop("placement") == "device"
-            assert mh == md
-        else:
-            assert h == dev, f"blob {fname} differs across placements"
-    base_np = jax.tree_util.tree_map(np.asarray, s0)
-    a = apply_delta(str(tmp_path / "host"), 1, base_np)
-    b = apply_delta(str(tmp_path / "device"), 1, base_np,
-                    placement="device")
+    mh = read_delta_manifest(str(tmp_path / "host"), 1)
+    md = read_delta_manifest(str(tmp_path / "device"), 1)
+    assert "flat" not in mh and md["flat"]
+    # the packed subtree writes NO per-leaf blobs on the device path —
+    # the flat planes replace them; fallback leaves still get their own
+    dev_files = sorted(os.listdir(os.path.join(str(tmp_path / "device"),
+                                               "delta_0000000001")))
+    assert not any(f.startswith("params@") for f in dev_files)
+    assert any(f.startswith("flat@") for f in dev_files)
+    # skip-zero markers agree across placements (fused per-leaf change
+    # counts == host byte-equality checks)
+    assert set(mh["zero"]) == set(md["zero"])
+    a = apply_delta(str(tmp_path / "host"), 1, base)
+    b = apply_delta(str(tmp_path / "device"), 1, base, placement="device")
     assert _bit_exact(a, b)
     if codec == "lossless":
         assert _bit_exact(a, s1)
@@ -333,6 +514,35 @@ def test_from_calibration_v2_prices_device_placement():
                       1.25 * cost.state_bytes)
 
 
+def _v3_calibration():
+    cal = _v2_calibration()
+    cal["schema"] = "bench_ckpt/3"
+    for codec in ("lossless", "int8"):
+        cal["device"][codec].update(pack_s=0.004, per_leaf_encode_s=0.5)
+    return cal
+
+
+def test_from_calibration_v3_prices_pack_and_rejects_missing_keys():
+    from repro.sim import SimCostModel
+
+    cost = SimCostModel.from_calibration(_v3_calibration())
+    assert cost.device_pack_s == 0.004 == cost.device_pack_s_int8
+    # the device delta price is pack + fused encode, replacing the host
+    # per-byte encode term — exactly that swap, nothing double-charged
+    host_d = cost.write_duration("delta", encoding="int8")
+    dev_d = cost.write_duration("delta", encoding="int8",
+                                placement="device")
+    assert np.isclose(host_d - dev_d, 3.0 - (0.004 + 0.01))
+    # a v2 artifact keeps pack_s at 0 (the per-leaf path packed nothing)
+    assert SimCostModel.from_calibration(_v2_calibration()).device_pack_s \
+        == 0.0
+    # a v3 artifact missing the new per-codec keys is rejected
+    bad = _v3_calibration()
+    del bad["device"]["lossless"]["per_leaf_encode_s"]
+    with pytest.raises(ValueError, match="device"):
+        SimCostModel.from_calibration(bad)
+
+
 def test_from_calibration_v1_fallback_and_v2_rejects_bad_device():
     from repro.sim import SimCostModel
 
@@ -369,9 +579,11 @@ def test_surviving_levels_rejects_unknown_failure_kind():
 # ---------------------------------------------------------------------------
 
 def test_optimize_plan_surfaces_campaign_verified_device_int8():
-    """Acceptance: with a calibrated cost model, the default variant grid
-    contains (placement=device, codec=int8) candidates and the campaign
-    verifier scores at least one of them end-to-end."""
+    """Acceptance: with a bench_ckpt/3-calibrated cost model (the device
+    delta priced as pack + fused flat encode), the default variant grid
+    contains (placement=device, codec=int8) candidates — single- and
+    multi-level — and the campaign verifier scores at least one of them
+    end-to-end."""
     from repro.core import QoSModel, optimize_plan
     from repro.core.ci_optimizer import default_plan_variants
     from repro.data.stream import constant_rate
@@ -379,11 +591,21 @@ def test_optimize_plan_surfaces_campaign_verified_device_int8():
     from repro.sim.batched import make_plan_verifier
 
     cost = SimCostModel.from_calibration(
-        _v2_calibration(), capacity_eps=4600.0, ckpt_sync_penalty=0.6)
+        _v3_calibration(), capacity_eps=4600.0, ckpt_sync_penalty=0.6)
     variants = default_plan_variants(cost, ci_ref=60.0)
     dev_int8 = [p for p in variants if p.encode_placement == "device"
                 and p.delta_codec == "int8"]
     assert dev_int8, "variant grid lost the device-int8 dimension"
+    assert any(tuple(p.levels) != ("local",) for p in dev_int8), \
+        "variant grid lost the multi-level device-int8 plan"
+    # each scored device candidate's modeled write price reflects the
+    # fused cost: pack + one fused encode per delta trigger
+    for p in dev_int8:
+        assert np.isclose(
+            cost.write_duration("delta", encoding="int8",
+                                placement="device"),
+            cost.ckpt_duration_s * cost.delta_int8_fraction
+            + cost.device_pack_s_int8 + cost.device_encode_s_int8)
     rng = np.random.default_rng(0)
     ci = rng.uniform(10, 120, 200)
     tr = rng.uniform(1000, 4000, 200)

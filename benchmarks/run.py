@@ -16,9 +16,14 @@ Usage: PYTHONPATH=src python -m benchmarks.run [--quick | --smoke]
 ``--smoke`` is the tier-1-adjacent CI check: it runs the E5 checkpoint
 bench on a tiny state (device-placement delta encodes included, plus a
 micro trainer on an ``encode_placement="device"`` plan in interpret
-mode), a tiny 4-lane E4 campaign, and a tiny end-to-end ``KhaosRuntime``
+mode), a tiny 4-lane E4 campaign, a tiny end-to-end ``KhaosRuntime``
 (all three phases on a 4-lane controller-in-the-loop campaign + a micro
-live trainer with a mid-run plan switch), validating that the emitted
+live trainer with a mid-run plan switch), and the replication RECOVERY
+DRILL (save under k=1 ring replication, kill one host, assert the
+degraded partial restore is bit-exact and pulls only the failed host's
+shard bytes — ``restored_bytes < full_state_bytes`` — plus the peer-loss
+worst case through the per-shard remote fallback and the optimizer's
+``replication_factor`` dimension), validating that the emitted
 BENCH_ckpt.json / BENCH_sim.json artifacts match their schemas
 ("bench_ckpt/3" via ``SimCostModel.from_calibration`` — placement/codec
 fields, int8 link fraction <= 0.26, the fused flat device encode under
@@ -47,10 +52,12 @@ def main() -> None:
 
     t0 = time.monotonic()
     if args.smoke:
-        from benchmarks import bench_ckpt, bench_recovery, bench_runtime
+        from benchmarks import (bench_ckpt, bench_recovery, bench_replication,
+                                bench_runtime)
         try:
             bench_ckpt.smoke()
             bench_recovery.smoke()
+            bench_replication.smoke()
             bench_runtime.smoke()
         except (ValueError, AssertionError) as e:
             print(f"SMOKE FAILED: {e}", file=sys.stderr)
@@ -59,12 +66,13 @@ def main() -> None:
         return
     from benchmarks import (bench_ckpt, bench_dryrun, bench_kernels,
                             bench_khaos_training, bench_recovery,
-                            bench_tables)
+                            bench_replication, bench_tables)
 
     repeats = 1 if args.quick else 3
     bench_tables.bench_iot_vehicles(repeats=repeats)
     bench_tables.bench_ysb(repeats=repeats)
     bench_recovery.main()
+    bench_replication.main()
     bench_khaos_training.main()
     bench_ckpt.main()
     bench_kernels.main()

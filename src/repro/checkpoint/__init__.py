@@ -9,6 +9,9 @@ from repro.checkpoint.pipeline import (ChunkedHostSnapshot, DeltaLeafSource,
 from repro.checkpoint.policy import CheckpointPolicy
 from repro.checkpoint.manager import (CheckpointManager, Checkpointer,
                                       RestoreReport, SaveReport)
+from repro.checkpoint.replication import (PeerReplicatedStore, ReplicaStats,
+                                          ReplicationError, retry_with_backoff,
+                                          ring_peers)
 from repro.config import CheckpointPlan
 
 __all__ = [
@@ -18,4 +21,6 @@ __all__ = [
     "Checkpointer", "CheckpointPlan", "SaveReport", "RestoreReport",
     "HAVE_ZSTD", "ChunkedHostSnapshot", "DeltaLeafSource", "DeviceDeltaBase",
     "FlatLayout", "LeafSource", "PlainLeafSource", "as_leaf_source",
+    "PeerReplicatedStore", "ReplicaStats", "ReplicationError",
+    "retry_with_backoff", "ring_peers",
 ]

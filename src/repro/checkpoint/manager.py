@@ -70,6 +70,7 @@ from repro.checkpoint.multilevel import allowed_levels
 from repro.checkpoint.pipeline import (ChunkedHostSnapshot, DeltaLeafSource,
                                        DeviceDeltaBase, PlainLeafSource)
 from repro.checkpoint.policy import CheckpointPolicy
+from repro.checkpoint.replication import PeerReplicatedStore
 from repro.checkpoint.store import CheckpointStore
 from repro.config import CheckpointPlan
 
@@ -106,6 +107,12 @@ class RestoreReport:
     kind: str                       # memory | full | full+delta
     duration_s: float
     extra: dict = field(default_factory=dict)
+    degraded: bool = False          # a degraded partial restore: some shard
+                                    # was rebuilt from peer replicas (or the
+                                    # per-shard remote fallback)
+    restored_bytes: int = 0         # bytes PULLED to rebuild dead shards —
+                                    # the recovery-drill gate compares this
+                                    # against the full checkpoint size
 
 
 @runtime_checkable
@@ -133,9 +140,18 @@ class CheckpointManager:
         os.makedirs(directory, exist_ok=True)
         self.stores: dict[str, CheckpointStore] = {}
         for level in plan.disk_levels:
-            self.stores[level] = CheckpointStore(
-                os.path.join(directory, level),
-                num_shards=plan.num_shards, keep=plan.keep)
+            if level == "local" and plan.effective_replication >= 1:
+                # the replicated level-2 store: each host pushes its shard
+                # to k ring peers, so a node loss is survivable HERE — the
+                # survival rule the cost model derives from the same k
+                self.stores[level] = PeerReplicatedStore(
+                    os.path.join(directory, level),
+                    num_shards=plan.num_shards, keep=plan.keep,
+                    replication_factor=plan.effective_replication)
+            else:
+                self.stores[level] = CheckpointStore(
+                    os.path.join(directory, level),
+                    num_shards=plan.num_shards, keep=plan.keep)
         # first disk level is the primary: it anchors the delta chain
         self.primary_level: Optional[str] = (plan.disk_levels[0]
                                              if plan.disk_levels else None)
@@ -244,6 +260,12 @@ class CheckpointManager:
                     nbytes += n
                     encode_s += enc
                     self.bytes_by_kind["delta"] += n
+                    if isinstance(store, PeerReplicatedStore):
+                        # deltas aren't physically replicated (the post-
+                        # failure chain restarts from a full) but their
+                        # mirror traffic is priced — keep the measured
+                        # replica_bytes twin honest
+                        store.account_delta_mirror(n)
                 self.saves_by_level[level] += 1
             report.bytes_written = nbytes
             report.bytes_on_link = snap.bytes_on_link()
@@ -306,12 +328,21 @@ class CheckpointManager:
                           paths=tuple(paths), synchronous=True)
 
     # -- restore ------------------------------------------------------------
+    def _remote_steps(self) -> tuple[int, ...]:
+        remote = self.stores.get("remote")
+        return tuple(remote.list_steps()) if remote is not None else ()
+
     def _disk_candidate(self, level: str) -> Optional[tuple[int, int]]:
         """(restore_step, base_full_step) for a disk level, or None."""
         store = self.stores.get(level)
         if store is None:
             return None
-        full = store.newest()
+        if isinstance(store, PeerReplicatedStore):
+            # a degraded step (some shards only on replicas, or coverable
+            # per-shard by the remote store AT THE SAME STEP) still counts
+            full = store.newest_restorable(self._remote_steps())
+        else:
+            full = store.newest()
         if full is None:
             return None
         dstep = newest_delta_step(store.directory)
@@ -325,7 +356,8 @@ class CheckpointManager:
                 failure_kind: str = "task") -> RestoreReport:
         self.wait()
         t0 = time.monotonic()
-        allowed = allowed_levels(failure_kind)
+        allowed = allowed_levels(failure_kind,
+                                 self.plan.effective_replication)
         candidates: list[tuple[int, int, str]] = []   # (step, speed, level)
         speed = {"memory": 2, "local": 1, "remote": 0}
         if "memory" in allowed and self._memory is not None:
@@ -349,7 +381,19 @@ class CheckpointManager:
         else:
             store = self.stores[level]
             restore_step, full_step = self._disk_candidate(level)
-            state, extra = store.restore(treedef_like, full_step)
+            degraded, restored_bytes = False, 0
+            if isinstance(store, PeerReplicatedStore):
+                # degraded partial restore: dead shards come from peer
+                # replicas, and a shard with NO local copy falls back
+                # per-shard to the remote store at the same step
+                remote = self.stores.get("remote")
+                fallback = remote.read_leaves if remote is not None else None
+                state, extra = store.restore(treedef_like, full_step,
+                                             shard_fallback=fallback)
+                degraded = store.last_restore.get("degraded", False)
+                restored_bytes = store.last_restore.get("restored_bytes", 0)
+            else:
+                state, extra = store.restore(treedef_like, full_step)
             kind = "full"
             if restore_step > full_step:
                 meta = read_delta_manifest(store.directory, restore_step)
@@ -361,7 +405,9 @@ class CheckpointManager:
                 extra = meta.get("extra", extra)
                 kind = "full+delta"
             report = RestoreReport(state, restore_step, level, kind,
-                                   time.monotonic() - t0, extra)
+                                   time.monotonic() - t0, extra,
+                                   degraded=degraded,
+                                   restored_bytes=restored_bytes)
         self.restores.append((report.step, report.level, report.kind))
         return report
 
@@ -384,13 +430,23 @@ class CheckpointManager:
         if self._committer is not None:
             self._committer.wait()
 
-    def on_failure(self, failure_kind: str) -> None:
-        """Apply a failure's destruction to the levels it wipes out."""
+    def on_failure(self, failure_kind: str,
+                   host: Optional[int] = None) -> None:
+        """Apply a failure's destruction to the levels it wipes out.
+        A host-targeted node failure (``host`` given) additionally kills
+        that host's node-local disk — its primary shards and the replicas
+        it held for peers — which is what makes the subsequent restore a
+        DEGRADED partial restore instead of a free local read.  With no
+        ``host`` the node failure models a process loss whose disk
+        survives (the pre-replication semantics, kept for back-compat)."""
         if failure_kind in ("node", "cluster"):
             self._memory = None
             self._base = None     # host RAM gone: next save must be a full
             self._base_step = None
             self._device_base = None   # the device died with the job too
+        if failure_kind == "node" and host is not None \
+                and "local" in self.stores:
+            self.stores["local"].kill_host(host)
         if failure_kind == "cluster" and "local" in self.stores:
             # the sim's cluster failure loses node-local disks too; real
             # deployments re-point the store at an empty scratch dir

@@ -21,19 +21,63 @@ import numpy as np
 
 from repro.checkpoint.store import CheckpointStore
 
-#: failure kind -> minimum level that survives it.  NOTE the deliberate
-#: modeling assumption ``"node" -> "local"``: node-local checkpoints are
-#: treated as surviving a node loss, i.e. the level-2 store behaves as if
-#: peers replicate it (paper-cited SCR/multi-level schemes).  Plain
-#: un-replicated node-local disk would degrade node failures to "remote".
-#: ``sim.costmodel.SimCostModel`` asserts this exact mapping at
-#: construction so a silent edit here cannot skew priced recoveries.
+#: failure kind -> minimum level that survives it, at the DEFAULT
+#: replication factor k=1.  Since PR 7 this is no longer an assumption:
+#: level-2 survival of a node loss is earned by
+#: ``checkpoint.replication.PeerReplicatedStore`` — each host pushes its
+#: shard to k ring-neighbor peers, a save commits only once every shard
+#: holds >= k replica acks, and restore after ``kill_host`` rebuilds the
+#: failed host's shards from the surviving peer copies.  The general rule
+#: is ``level_survives``/``derived_coverage`` below: with k=0 (replication
+#: disabled) plain un-replicated node-local disk degrades node failures to
+#: "remote".  ``sim.costmodel.SimCostModel`` asserts this table equals the
+#: k=1 derivation at construction so the mechanism and the priced model
+#: cannot silently diverge.
 LEVEL_COVERAGE = {
     "task": "memory",
     "node": "local",
     "cluster": "remote",
 }
 _LEVELS = ("memory", "local", "remote")
+_KINDS = ("task", "node", "cluster")
+
+
+def level_survives(level: str, failure_kind: str,
+                   replication_factor: int = 1) -> bool:
+    """Whether one storage level survives one failure kind — the single
+    derivation both the store substrate and the cost model price from.
+
+    * ``memory`` lives in the process: only task restarts keep it.
+    * ``local`` always survives a task restart; it survives a NODE loss
+      iff k >= 1 peers hold replicas of the dead host's shards (the
+      mechanism ``PeerReplicatedStore`` implements); a cluster failure
+      takes every node's disk with it regardless of k.
+    * ``remote`` is durable against everything modeled.
+    """
+    if level not in _LEVELS:
+        raise ValueError(f"unknown level {level!r}; levels are {_LEVELS}")
+    if failure_kind not in _KINDS:
+        raise ValueError(
+            f"unknown failure kind {failure_kind!r}; known kinds are "
+            f"{sorted(_KINDS)} (see LEVEL_COVERAGE)")
+    if level == "remote":
+        return True
+    if level == "memory":
+        return failure_kind == "task"
+    # local
+    if failure_kind == "task":
+        return True
+    return failure_kind == "node" and replication_factor >= 1
+
+
+def derived_coverage(replication_factor: int = 1) -> dict[str, str]:
+    """failure kind -> minimum surviving level, derived from
+    ``level_survives`` at the given replication factor.
+    ``derived_coverage(1) == LEVEL_COVERAGE`` (asserted by SimCostModel);
+    ``derived_coverage(0)["node"] == "remote"``."""
+    return {kind: next(l for l in _LEVELS
+                       if level_survives(l, kind, replication_factor))
+            for kind in _KINDS}
 
 
 @dataclass
@@ -103,13 +147,16 @@ class MultiLevelCheckpointer:
                 "saves_by_level": dict(self.saves_by_level)}
 
 
-def allowed_levels(failure_kind: str) -> tuple[str, ...]:
-    """Levels that survive ``failure_kind``, fastest-to-restore first.
-    Unknown kinds are an error, not a silent worst-case default — a typo'd
-    kind would otherwise quietly restore from the wrong level."""
-    if failure_kind not in LEVEL_COVERAGE:
+def allowed_levels(failure_kind: str, replication_factor: int = 1
+                   ) -> tuple[str, ...]:
+    """Levels that survive ``failure_kind``, fastest-to-restore first,
+    derived from ``level_survives`` at ``replication_factor`` (default 1 =
+    the LEVEL_COVERAGE table).  Unknown kinds are an error, not a silent
+    worst-case default — a typo'd kind would otherwise quietly restore
+    from the wrong level."""
+    if failure_kind not in _KINDS:
         raise ValueError(
             f"unknown failure kind {failure_kind!r}; known kinds are "
-            f"{sorted(LEVEL_COVERAGE)} (see LEVEL_COVERAGE)")
-    min_level = LEVEL_COVERAGE[failure_kind]
-    return _LEVELS[_LEVELS.index(min_level):]
+            f"{sorted(_KINDS)} (see LEVEL_COVERAGE)")
+    return tuple(l for l in _LEVELS
+                 if level_survives(l, failure_kind, replication_factor))

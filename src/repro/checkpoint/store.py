@@ -186,12 +186,26 @@ def _assign_shards(sizes_by_name: list[tuple[str, int]], num_shards: int):
 
 
 class CheckpointStore:
-    def __init__(self, directory: str, num_shards: int = 4, keep: int = 3):
+    def __init__(self, directory: str, num_shards: int = 4, keep: int = 3,
+                 num_hosts: Optional[int] = None,
+                 fault_hook: Optional[Callable[[str], None]] = None,
+                 write_attempts: int = 4, write_backoff_s: float = 0.01):
         self.directory = directory
         self.num_shards = num_shards
+        # shard j lives on simulated host ``j % num_hosts`` — the manifest
+        # records this placement so failure injection can kill exactly one
+        # host's files (on this substrate hosts == shards by default)
+        self.num_hosts = num_hosts if num_hosts is not None else num_shards
         self.keep = keep
+        # transient-IO injection point for tests: called with the target
+        # path before every file write attempt; raising OSError from it
+        # exercises the bounded-retry path below
+        self.fault_hook = fault_hook
+        self.write_attempts = write_attempts
+        self.write_backoff_s = write_backoff_s
         self.saves = 0
         self.bytes_written = 0
+        self.write_retries = 0
         os.makedirs(directory, exist_ok=True)
 
     # -- save ---------------------------------------------------------------
@@ -214,16 +228,38 @@ class CheckpointStore:
         tmp = fresh_tmp_dir(path)
 
         def write_shard(j: int) -> tuple[str, int]:
+            from repro.checkpoint.replication import retry_with_backoff
+
             shard = {n.replace("/", "::"): np.asarray(src.get(n))
                      for n in src.names if assign[n] == j}
             fpath = os.path.join(tmp, f"shard_{j:05d}.npz")
-            np.savez(fpath, **shard)
-            with open(fpath, "rb") as f:
-                return f"shard_{j:05d}.npz", zlib.crc32(f.read())
+
+            # transient IO errors (flaky disk / NFS hiccup on the remote
+            # level) get bounded retries with jittered backoff instead of
+            # failing the whole save; a persistent error still propagates
+            # and the un-manifested .tmp dir stays invisible to restore
+            def attempt() -> int:
+                if self.fault_hook is not None:
+                    self.fault_hook(fpath)
+                np.savez(fpath, **shard)
+                with open(fpath, "rb") as f:
+                    return zlib.crc32(f.read())
+
+            def note_retry(i: int, e: BaseException) -> None:
+                self.write_retries += 1
+
+            crc = retry_with_backoff(attempt, attempts=self.write_attempts,
+                                     base_s=self.write_backoff_s,
+                                     on_retry=note_retry)
+            return f"shard_{j:05d}.npz", crc
 
         futures = [io_pool().submit(write_shard, j)
                    for j in range(self.num_shards)]
         checksums = dict(f.result() for f in futures)
+        # the replica-push phase (PeerReplicatedStore) runs BETWEEN the
+        # primary shard writes and the manifest commit: a failed quorum
+        # raises before anything becomes visible
+        replicas = self._push_replicas(tmp, checksums)
 
         specs = {n: src.spec(n) for n in src.names}
         manifest = {
@@ -232,10 +268,16 @@ class CheckpointStore:
             "num_shards": self.num_shards,
             "assign": assign,
             "checksums": checksums,
+            "placement": {
+                "num_hosts": self.num_hosts,
+                "owners": {f: self._file_host(f) for f in checksums},
+            },
             "dtypes": {n: str(dt) for n, (_, dt) in specs.items()},
             "shapes": {n: list(shape) for n, (shape, _) in specs.items()},
             "extra": extra or {},
         }
+        if replicas:
+            manifest["replicas"] = replicas
         write_json_atomic(os.path.join(tmp, "manifest.json"), manifest)
         publish_dir_atomic(tmp, path)
         self.saves += 1
@@ -243,26 +285,68 @@ class CheckpointStore:
         self._gc()
         return path
 
+    def _push_replicas(self, tmp: str, checksums: dict) -> Optional[dict]:
+        """Replication hook between shard writes and the manifest commit.
+        The plain store replicates nothing (level-3 durability comes from
+        the remote medium itself); ``replication.PeerReplicatedStore``
+        overrides this with the ring push + quorum rule."""
+        return None
+
     def stats(self) -> dict:
-        return {"saves": self.saves, "bytes_written": self.bytes_written}
+        return {"saves": self.saves, "bytes_written": self.bytes_written,
+                "write_retries": self.write_retries}
+
+    # -- host placement -------------------------------------------------------
+    def _file_host(self, fname: str) -> Optional[int]:
+        """Which simulated host's disk a checkpoint file lives on (None
+        for files not owned by any single host, e.g. the manifest)."""
+        if fname.startswith("shard_") and fname.endswith(".npz"):
+            return int(fname[6:11]) % self.num_hosts
+        return None
+
+    def kill_host(self, host: int) -> list[str]:
+        """Failure injection: host ``host``'s node-local disk dies, taking
+        every checkpoint file placed on it (across all steps) with it.
+        On the un-replicated store this leaves affected steps without a
+        valid copy of the dead host's shards — exactly the degradation
+        the replicated subclass exists to survive."""
+        removed = []
+        for name in sorted(os.listdir(self.directory)):
+            d = os.path.join(self.directory, name)
+            if not name.startswith("step_") or not os.path.isdir(d):
+                continue
+            for fname in sorted(os.listdir(d)):
+                if self._file_host(fname) == host:
+                    os.remove(os.path.join(d, fname))
+                    removed.append(os.path.join(name, fname))
+        return removed
 
     # -- introspection --------------------------------------------------------
-    def _valid(self, name: str) -> Optional[dict]:
+    def _manifest(self, name: str) -> Optional[dict]:
+        """Load a step's manifest without checksum validation."""
         mpath = os.path.join(self.directory, name, "manifest.json")
         if not os.path.exists(mpath):
             return None
         try:
             with open(mpath) as f:
-                manifest = json.load(f)
+                return json.load(f)
         except (json.JSONDecodeError, OSError):
             return None
+
+    def _file_ok(self, name: str, fname: str, crc: int) -> bool:
+        fpath = os.path.join(self.directory, name, fname)
+        if not os.path.exists(fpath):
+            return False
+        with open(fpath, "rb") as f:
+            return zlib.crc32(f.read()) == crc
+
+    def _valid(self, name: str) -> Optional[dict]:
+        manifest = self._manifest(name)
+        if manifest is None:
+            return None
         for fname, crc in manifest["checksums"].items():
-            fpath = os.path.join(self.directory, name, fname)
-            if not os.path.exists(fpath):
+            if not self._file_ok(name, fname, crc):
                 return None
-            with open(fpath, "rb") as f:
-                if zlib.crc32(f.read()) != crc:
-                    return None
         return manifest
 
     def list_steps(self) -> list[int]:
@@ -309,6 +393,35 @@ class CheckpointStore:
         restored = [np.asarray(v, dtype=s.dtype) if hasattr(s, "dtype") else v
                     for v, s in zip(restored, leaves_struct)]
         return jax.tree_util.tree_unflatten(treedef, restored), manifest["extra"]
+
+    def read_leaves(self, step: int, names: list) -> dict[str, np.ndarray]:
+        """Load only the shards holding ``names`` — the per-shard remote
+        fallback of a degraded partial restore reads exactly the failed
+        host's leaves, never the whole checkpoint.  Leaf names are
+        layout-independent, so a remote store with a different shard
+        assignment serves a local store's missing shard correctly."""
+        name = f"step_{step:010d}"
+        manifest = self._valid(name)
+        if manifest is None:
+            raise FileNotFoundError(f"checkpoint {name} is corrupt or missing")
+        assign = manifest["assign"]
+        missing = [n for n in names if n not in assign]
+        if missing:
+            raise KeyError(f"checkpoint missing leaves: {missing[:5]}...")
+        wanted = set(names)
+        from repro.checkpoint.pipeline import io_pool
+
+        def load_shard(j: int) -> dict[str, np.ndarray]:
+            fpath = os.path.join(self.directory, name, f"shard_{j:05d}.npz")
+            with np.load(fpath) as z:
+                return {k.replace("::", "/"): z[k] for k in z.files
+                        if k.replace("::", "/") in wanted}
+
+        data: dict[str, np.ndarray] = {}
+        for fut in [io_pool().submit(load_shard, j)
+                    for j in sorted({assign[n] for n in names})]:
+            data.update(fut.result())
+        return data
 
     def total_bytes(self, step: int) -> int:
         name = f"step_{step:010d}"

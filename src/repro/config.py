@@ -300,6 +300,13 @@ class CheckpointPlan:
     busy_policy: str = "skip"         # async: skip | block when a write is in flight
     num_shards: int = 4
     keep: int = 3
+    replication_factor: int = 1       # k ring-neighbor peers each host pushes
+                                      # its level-2 shard replicas to.  k>=1
+                                      # makes node-local checkpoints survive a
+                                      # single node loss (the level-2 survival
+                                      # rule is DERIVED from this, not
+                                      # assumed); k=0 opts out — a node
+                                      # failure then degrades to remote
     chunk_bytes: int = 4 << 20        # D2H transfer granularity of the pipelined
                                       # snapshot (first chunk = the blocking sync)
     eager_snapshot: bool = False      # materialize EVERY device leaf before
@@ -329,6 +336,8 @@ class CheckpointPlan:
         assert min(self.full_every, self.local_every, self.remote_every) >= 1, \
             "cadences are every-Nth-trigger counts and must be >= 1"
         assert self.chunk_bytes >= 1, "chunk_bytes must be positive"
+        assert self.replication_factor >= 0, \
+            "replication_factor is a peer count and cannot be negative"
 
     def is_full_trigger(self, trigger_index: int) -> bool:
         return self.mode == "full" or trigger_index % self.full_every == 0
@@ -356,6 +365,13 @@ class CheckpointPlan:
         return tuple(l for l in self.levels if l in ("local", "remote"))
 
     @property
+    def effective_replication(self) -> int:
+        """Replicas each shard actually gets: a ring of H hosts has only
+        H-1 distinct peers, so k is clamped to ``num_shards - 1`` (one
+        shard per simulated host on this substrate)."""
+        return max(0, min(self.replication_factor, self.num_shards - 1))
+
+    @property
     def delta_encoding(self) -> str:
         """Pre-PR-5 alias of ``delta_codec`` (read-only)."""
         return self.delta_codec
@@ -375,6 +391,8 @@ class CheckpointPlan:
                 parts.append("int8")
         if tuple(self.levels) != ("local",):
             parts.append("".join(l[0] for l in self.levels))
+        if self.replication_factor != 1:
+            parts.append(f"rep{self.replication_factor}")
         return "-".join(parts)
 
 

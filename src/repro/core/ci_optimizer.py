@@ -120,7 +120,13 @@ def default_plan_variants(cost, ci_ref: float,
     link — the dimension a Decision uses to switch a job onto an
     int8-delta plan when the QoS objective favors it; the multi-level
     device variant routes those fused deltas through the memory/local/
-    remote cadence as well."""
+    remote cadence as well.  ``replication_factor`` is a searched
+    dimension too: the rep0 variant drops peer replication (node
+    failures degrade to the remote level — no replica traffic, slower
+    node recovery, so it leans on a denser remote cadence), the rep2
+    variant pays double replica traffic to tolerate two simultaneous
+    host losses — the optimizer genuinely trades replication traffic
+    against recovery time."""
     def yd_every(level: str) -> int:
         w = young_daly_interval(cost.write_duration("full", level), mtbf_s)
         return int(np.clip(round(w / max(ci_ref, 1e-9)), 2, 32))
@@ -145,6 +151,16 @@ def default_plan_variants(cost, ci_ref: float,
         CheckpointPlan(mode="incremental", full_every=8, levels=ml_levels,
                        local_every=1, remote_every=yd_every("remote"),
                        encode_placement="device", delta_codec="int8"),
+        # replication dimension: rep0 has no peer replicas, so node
+        # failures fall through to remote — it compensates with a denser
+        # remote cadence; rep2 survives a simultaneous two-host loss at
+        # double the replica traffic
+        CheckpointPlan(levels=ml_levels, replication_factor=0,
+                       local_every=max(1, yd_every("local") // 2),
+                       remote_every=max(2, yd_every("remote") // 2)),
+        CheckpointPlan(levels=ml_levels, replication_factor=2,
+                       local_every=max(1, yd_every("local") // 2),
+                       remote_every=yd_every("remote")),
     ]
 
 

@@ -1,9 +1,11 @@
 from repro.ft.failures import FailureModel, FailureInjector, InjectedFailure
 from repro.ft.detector import HeartbeatDetector
-from repro.ft.elastic import plan_rescale, RescalePlan
+from repro.ft.elastic import (plan_recovery, plan_rescale, RecoveryPlan,
+                              RescalePlan)
 from repro.ft.straggler import StragglerDetector
 
 __all__ = [
     "FailureModel", "FailureInjector", "InjectedFailure",
-    "HeartbeatDetector", "plan_rescale", "RescalePlan", "StragglerDetector",
+    "HeartbeatDetector", "plan_recovery", "plan_rescale", "RecoveryPlan",
+    "RescalePlan", "StragglerDetector",
 ]

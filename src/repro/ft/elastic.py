@@ -62,3 +62,43 @@ def plan_rescale(mesh: MeshConfig, hosts_alive: int, chips_per_host: int = 4,
         hosts_used=-(-used_chips // chips_per_host),
         standby=hosts_alive - (-(-used_chips // chips_per_host)),
         batch_ok=batch_ok)
+
+
+@dataclass
+class RecoveryPlan:
+    """How a node failure lands: replace the dead hosts from hot standbys
+    (mesh unchanged) when any remain, otherwise rescale DOWN onto the
+    survivors.  ``rescale`` is None on the standby path."""
+    mesh: MeshConfig
+    hosts_lost: int
+    standbys_used: int
+    standbys_left: int
+    rescale: Optional[RescalePlan] = None
+
+    @property
+    def rescaled(self) -> bool:
+        return self.rescale is not None and self.rescale.changed
+
+
+def plan_recovery(mesh: MeshConfig, hosts_lost: int, standbys: int,
+                  chips_per_host: int = 4,
+                  global_batch: Optional[int] = None) -> RecoveryPlan:
+    """Compose failure recovery with elasticity: the degraded partial
+    restore (checkpoint/replication.py) rebuilds the dead hosts' shards,
+    and THIS decides which mesh receives them.  While hot standbys cover
+    the losses the mesh shape is untouched (restore is a same-shape shard
+    rebuild); once standbys are exhausted, recovery lands on the smaller
+    mesh ``plan_rescale`` derives from the true survivor count — the
+    manifest-driven restore reshards onto it for free."""
+    if hosts_lost < 0:
+        raise ValueError(f"hosts_lost must be >= 0, got {hosts_lost}")
+    if hosts_lost <= standbys:
+        return RecoveryPlan(mesh=mesh, hosts_lost=hosts_lost,
+                            standbys_used=hosts_lost,
+                            standbys_left=standbys - hosts_lost)
+    in_mesh = -(-mesh.num_devices // chips_per_host)
+    alive = in_mesh + standbys - hosts_lost
+    rs = plan_rescale(mesh, alive, chips_per_host, global_batch)
+    return RecoveryPlan(mesh=rs.new, hosts_lost=hosts_lost,
+                        standbys_used=standbys, standbys_left=0,
+                        rescale=rs)

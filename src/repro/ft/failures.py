@@ -18,10 +18,15 @@ import numpy as np
 
 
 class InjectedFailure(RuntimeError):
-    """Raised inside the live trainer loop to simulate a host crash."""
+    """Raised inside the live trainer loop to simulate a host crash.
+    ``host=None`` is an untargeted process loss (the node's disk
+    survives); a concrete host number kills that host's node-local
+    checkpoint files with it (placement-aware injection)."""
 
-    def __init__(self, kind: str = "node", host: int = 0, t: float = 0.0):
-        super().__init__(f"injected {kind} failure on host {host} at t={t:.1f}")
+    def __init__(self, kind: str = "node", host: Optional[int] = None,
+                 t: float = 0.0):
+        where = "" if host is None else f" on host {host}"
+        super().__init__(f"injected {kind} failure{where} at t={t:.1f}")
         self.kind = kind
         self.host = host
         self.t = t
@@ -63,7 +68,14 @@ class FailureModel:
 
 @dataclass
 class FailureInjector:
-    """Deterministic injection scheduler for profiling and baselines."""
+    """Deterministic injection scheduler for profiling and baselines.
+
+    Beyond the paper's worst-case *timing* (§III-C), the injector is
+    placement-aware: ``worst_case_failure`` targets a specific HOST (so
+    the checkpoint plane's host->shard placement decides exactly which
+    files die), and ``peer_loss`` composes the worst case for k=1
+    replication — the host AND one of its ring replica peers inside the
+    same window, leaving some shard with no surviving local copy."""
     epsilon_s: float = 1.0
     log: list = field(default_factory=list)
 
@@ -86,3 +98,43 @@ class FailureInjector:
         t = max(requested_t, completion - self.epsilon_s)
         self.log.append({"requested": requested_t, "injected": t})
         return float(t)
+
+    def worst_case_failure(self, requested_t: float, last_ckpt_t: float,
+                           interval_s: float, ckpt_cost_s: float,
+                           kind: str = "node", host: int = 0
+                           ) -> InjectedFailure:
+        """Host-targeted worst-case injection: the §III-C timing plus a
+        placement — ``host``'s node-local files (its primary shards and
+        the replicas it held) die with it, so the restore that follows
+        exercises the degraded-partial path, not a free local read."""
+        t = self.worst_case_time(requested_t, last_ckpt_t, interval_s,
+                                 ckpt_cost_s)
+        self.log[-1].update({"kind": kind, "host": host})
+        return InjectedFailure(kind=kind, host=host, t=t)
+
+    def peer_loss(self, requested_t: float, last_ckpt_t: float,
+                  interval_s: float, ckpt_cost_s: float, host: int,
+                  num_hosts: int, replication_factor: int = 1,
+                  window_s: float = 5.0) -> list[InjectedFailure]:
+        """The k=1 worst case: kill ``host`` at the worst-case time AND
+        its first ring replica peer (the host holding ``host``'s shard
+        copies) ``window_s`` later — inside the window no new checkpoint
+        can complete, so the dead host's shards lose every local copy
+        and recovery must fall back per-shard to the remote level.
+        Returns the two failures in injection order."""
+        from repro.checkpoint.replication import ring_peers
+
+        first = self.worst_case_failure(requested_t, last_ckpt_t,
+                                        interval_s, ckpt_cost_s,
+                                        kind="node", host=host)
+        peers = ring_peers(host, num_hosts, max(1, replication_factor))
+        if not peers:
+            return [first]
+        window_s = min(window_s, max(interval_s - 2 * self.epsilon_s,
+                                     self.epsilon_s))
+        second = InjectedFailure(kind="node", host=peers[0],
+                                 t=first.t + window_s)
+        self.log.append({"requested": first.t, "injected": second.t,
+                         "kind": "node", "host": peers[0],
+                         "scenario": "peer_loss"})
+        return [first, second]

@@ -101,9 +101,15 @@ class ResilientTrainer:
         self._unhealthy_until = -1.0       # post-restore observation grace
 
     # ------------------------------------------------------------------
-    def inject_failure_at(self, t: float, kind: str = "node") -> None:
-        self.failure_schedule.append((t, kind))
-        self.failure_schedule.sort()
+    def inject_failure_at(self, t: float, kind: str = "node",
+                          host: Optional[int] = None) -> None:
+        """Schedule a failure.  ``host`` targets a specific simulated
+        host: its node-local checkpoint files (primary shards + held
+        replicas) die with it, so the restore that follows is the
+        degraded-partial path; host=None keeps the legacy process-loss
+        semantics (the node's disk survives)."""
+        self.failure_schedule.append((t, kind, host))
+        self.failure_schedule.sort(key=lambda f: f[0])
 
     def healthy(self) -> bool:
         """False during the post-failure grace window, while latency/lag
@@ -173,8 +179,9 @@ class ResilientTrainer:
                             "levels": list(report.levels)})
         return report.blocking_s
 
-    def _restore(self, failure_kind: str = "node") -> None:
-        self.ckpt.on_failure(failure_kind)
+    def _restore(self, failure_kind: str = "node",
+                 host: Optional[int] = None) -> None:
+        self.ckpt.on_failure(failure_kind, host=host)
         # samples taken while catching up after the rollback reflect the
         # failure, not steady state — hold healthy() low for a grace window
         self._unhealthy_until = self.t + self.tcfg.detect_s + self.tcfg.restart_s
@@ -187,7 +194,9 @@ class ResilientTrainer:
         self.batcher.restore(report.extra["pipeline"])
         self.events.append({"t": self.t, "event": "restore",
                             "step": report.step, "level": report.level,
-                            "kind": report.kind})
+                            "kind": report.kind,
+                            "degraded": report.degraded,
+                            "restored_bytes": report.restored_bytes})
 
     # ------------------------------------------------------------------
     def run(self, duration_s: float,
@@ -201,18 +210,19 @@ class ResilientTrainer:
                 break
             except InjectedFailure as failure:
                 self.events.append({"t": self.t, "event": "failure",
-                                    "kind": failure.kind})
+                                    "kind": failure.kind,
+                                    "host": failure.host})
                 # downtime: detection + restart; lag accrues on the stream
                 self.t += self.tcfg.detect_s + self.tcfg.restart_s
                 self.stream.produce_until(self.t)
-                self._restore(failure.kind)
+                self._restore(failure.kind, failure.host)
         return self.summary()
 
     def _run_until_failure(self, t_end: float, on_second) -> None:
         while self.t < t_end:
             if self.failure_schedule and self.t >= self.failure_schedule[0][0]:
-                _, kind = self.failure_schedule.pop(0)
-                raise InjectedFailure(kind=kind, t=self.t)
+                _, kind, host = self.failure_schedule.pop(0)
+                raise InjectedFailure(kind=kind, host=host, t=self.t)
             self.stream.produce_until(self.t)
             if self.policy.due(self.t):
                 # only the blocking part (sync write, or async snapshot)

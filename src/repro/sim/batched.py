@@ -62,8 +62,11 @@ from repro.sim.costmodel import SimCostModel
 LEVELS = ("memory", "local", "remote")
 KINDS = ("task", "node", "cluster")
 _KIND_ID = {k: i for i, k in enumerate(KINDS)}
-#: levels a failure kind destroys (simulator._begin_failure's wipe rule)
-_WIPES = {"task": (), "node": ("memory",), "cluster": ("memory", "local")}
+# NOTE: the per-kind wipe/survival/restore tables are PER PLAN now — the
+# replication factor decides whether a node failure takes the local level
+# with it — so they live in ``_PlanTable`` (built from the same
+# ``cost.wiped_levels``/``restore_duration_for`` the scalar oracle calls)
+# instead of module-level constants.
 
 
 @dataclass
@@ -111,9 +114,14 @@ class _PlanTable:
         self.trig_lvls = np.zeros((P, maxp, 3), dtype=bool)
         self.sync = np.array([p.sync for p in plans], dtype=bool)
         self.level_mask = np.zeros((P, 3), dtype=bool)   # plan.levels, by column
-        self.restore_dur = np.zeros((P, 3))
+        # restore duration is (plan, KIND, level): a node failure restoring
+        # from replicated level-2 is a degraded partial restore with its
+        # own price (cost.restore_duration_for)
+        self.restore_dur = np.zeros((P, len(KINDS), 3))
         self.cold_restore = np.zeros(P)
         self.surviving = np.zeros((P, len(KINDS), 3), dtype=bool)
+        # levels each kind destroys under this plan (replication-derived)
+        self.wipes = np.zeros((P, len(KINDS), 3), dtype=bool)
         for pi, plan in enumerate(plans):
             for level in plan.levels:
                 self.level_mask[pi, LEVELS.index(level)] = True
@@ -122,14 +130,15 @@ class _PlanTable:
                     cost.trigger_write_duration(plan, i), 1e-3)
                 for level, _kind in plan.levels_due(i):
                     self.trig_lvls[pi, i, LEVELS.index(level)] = True
-            for li, level in enumerate(LEVELS):
-                with_delta = plan.mode == "incremental" and level != "memory"
-                self.restore_dur[pi, li] = cost.restore_duration(level,
-                                                                 with_delta)
-            self.cold_restore[pi] = cost.restore_duration("remote")
             for ki, kind in enumerate(KINDS):
+                for li, level in enumerate(LEVELS):
+                    self.restore_dur[pi, ki, li] = \
+                        cost.restore_duration_for(plan, kind, level)
                 for level in cost.surviving_levels(plan, kind):
                     self.surviving[pi, ki, LEVELS.index(level)] = True
+                for level in cost.wiped_levels(plan, kind):
+                    self.wipes[pi, ki, LEVELS.index(level)] = True
+            self.cold_restore[pi] = cost.restore_duration("remote")
 
 
 class BatchedCampaign:
@@ -361,11 +370,12 @@ class BatchedCampaign:
         # columns are ordered fastest-first, so first argmax == the scalar's
         # max((offset, speed, level)) tie-break toward the fastest level
         lvl = np.argmax(offs == best[:, None], axis=1)
-        restore = np.where(has, tbl.restore_dur[self.plan_id, lvl],
+        restore = np.where(has, tbl.restore_dur[self.plan_id, kind, lvl],
                            tbl.cold_restore[self.plan_id])
         offset = np.where(has, best, 0.0)
-        # the failure destroys the levels it covers
-        wipe = _WIPE_MASK[kind]                           # (N, 3)
+        # the failure destroys the levels it doesn't survive at (per-plan:
+        # replication decides whether node loss takes local disk)
+        wipe = tbl.wipes[self.plan_id, kind]              # (N, 3)
         self.off_lvl = np.where(act[:, None] & wipe, 0.0, self.off_lvl)
         self.down_until = np.where(
             act, ev_t + cost.detect_s + cost.restart_s + restore,
@@ -728,13 +738,6 @@ class BatchedLaneHandle:
         self.reconfigurations.append((self.now(), plan.interval_s))
         self.plan_changes.append((self.now(), plan.name))
         self.camp.lane_set_plan(self.lane, plan)
-
-
-# boolean wipe masks indexed by kind id, built once at import
-_WIPE_MASK = np.zeros((len(KINDS), 3), dtype=bool)
-for _k, _levels in _WIPES.items():
-    for _l in _levels:
-        _WIPE_MASK[_KIND_ID[_k], LEVELS.index(_l)] = True
 
 
 # ---------------------------------------------------------------------------

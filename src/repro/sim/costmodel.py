@@ -107,18 +107,38 @@ class SimCostModel:
     # without the pack term muddying the comparison
     device_pack_s: float = 0.0              # per-trigger pack (lossless)
     device_pack_s_int8: float = 0.0         # per-trigger pack (int8)
+    # -- peer-replication plane (checkpoint/replication.py) ------------------
+    #    level-2 survival of a node loss is DERIVED from the plan's
+    #    replication factor (k ring-peer replicas per shard), and its price
+    #    has two sides: each level-2 write additionally pushes k copies of
+    #    its payload over the node interconnect (replica_push_factor x the
+    #    local write duration per copy — 0 models the push as fully
+    #    overlapped with the primary write, the transfer-pool behavior
+    #    measured on this substrate), and a node-failure restore at the
+    #    local level is a DEGRADED PARTIAL restore (only the dead host's
+    #    shards pulled from peers) scaled by replica_restore_factor
+    #    (1.0 = neutral: same duration as a healthy local restore)
+    replica_push_factor: float = 0.0
+    replica_restore_factor: float = 1.0
 
     def __post_init__(self) -> None:
-        # the priced restore paths hang off the LEVEL_COVERAGE mapping;
-        # assert the documented assumption (node failures survive at the
-        # peer-replicated node-local level) so a drive-by edit of the
-        # coverage table cannot silently skew every recovery estimate
-        from repro.checkpoint.multilevel import LEVEL_COVERAGE
-        expected = {"task": "memory", "node": "local", "cluster": "remote"}
-        assert LEVEL_COVERAGE == expected, (
-            f"LEVEL_COVERAGE changed to {LEVEL_COVERAGE!r}; SimCostModel "
-            f"prices restores under {expected!r} (node -> local assumes "
-            "peer-replicated level-2) — recalibrate before relaxing this")
+        # the priced restore paths hang off the survival derivation in
+        # checkpoint.multilevel; assert the mechanism-backed rule (k>=1
+        # ring replicas -> node failures survive at level-2, k=0 -> they
+        # degrade to remote) still matches the documented LEVEL_COVERAGE
+        # table so the store substrate and the priced model cannot
+        # silently diverge
+        from repro.checkpoint.multilevel import (LEVEL_COVERAGE,
+                                                 derived_coverage)
+        assert derived_coverage(1) == LEVEL_COVERAGE == \
+            {"task": "memory", "node": "local", "cluster": "remote"}, (
+            f"survival derivation drifted: derived_coverage(1)="
+            f"{derived_coverage(1)!r} vs LEVEL_COVERAGE={LEVEL_COVERAGE!r} "
+            "— the replicated-store mechanism and this cost model price "
+            "the same rule; recalibrate before relaxing it")
+        assert derived_coverage(0)["node"] == "remote", (
+            "with replication disabled a node failure must degrade to the "
+            f"remote level, got {derived_coverage(0)!r}")
 
     # -- calibration ---------------------------------------------------------
     @classmethod
@@ -197,7 +217,7 @@ class SimCostModel:
     # -- per-kind / per-level pricing ---------------------------------------
     def write_duration(self, kind: str = "full", level: str = "local",
                        encoding: str = "lossless",
-                       placement: str = "host") -> float:
+                       placement: str = "host", replicas: int = 0) -> float:
         """Seconds one write of ``kind`` takes at ``level``.  A host-encoded
         delta write additionally pays the host encode+compress CPU (which
         reads the whole state regardless of how small the delta
@@ -205,13 +225,19 @@ class SimCostModel:
         plans whose encode exceeds the write win.  A device-encoded delta
         (``plan.encode_placement == "device"``) replaces that term with the
         measured per-trigger pack + fused on-device encode+payload-transfer
-        seconds — the placement dimension the optimizer searches over."""
+        seconds — the placement dimension the optimizer searches over.
+        ``replicas`` peers each receiving a copy of a LOCAL write's payload
+        add ``replica_push_factor`` x the payload-move duration per copy
+        (0.0 models pushes fully overlapped with the primary write)."""
         d = self.ckpt_duration_s * {"memory": self.memory_write_factor,
                                     "local": 1.0,
                                     "remote": self.remote_write_factor}[level]
         if kind == "delta":
             d *= (self.delta_int8_fraction if encoding == "int8"
                   else self.delta_fraction)
+        if level == "local" and replicas > 0:
+            d += d * replicas * self.replica_push_factor
+        if kind == "delta":
             if placement == "device":
                 d += (self.device_pack_s_int8 + self.device_encode_s_int8
                       if encoding == "int8"
@@ -221,20 +247,49 @@ class SimCostModel:
         return d
 
     def restore_duration(self, level: str = "local",
-                         with_delta: bool = False) -> float:
+                         with_delta: bool = False,
+                         degraded: bool = False) -> float:
+        """``degraded=True`` prices the replicated store's partial restore
+        (surviving shards read locally, only the dead host's shards pulled
+        from peer replicas) — the level term scales by
+        ``replica_restore_factor``; 1.0 keeps it at the healthy price."""
         d = self.restore_s * {"memory": self.memory_restore_factor,
                               "local": 1.0,
                               "remote": self.remote_restore_factor}[level]
+        if degraded:
+            d *= self.replica_restore_factor
         if with_delta:
             d += self.restore_s * self.delta_apply_factor
         return d
+
+    def restore_duration_for(self, plan: CheckpointPlan, failure_kind: str,
+                             level: str) -> float:
+        """The restore price of recovering ``plan`` from ``level`` after
+        ``failure_kind`` — folds in the delta-apply term (incremental
+        plans) and the degraded-partial path (a node failure restoring
+        from replicated level-2 pulls only the dead host's shards)."""
+        with_delta = plan.mode == "incremental" and level != "memory"
+        degraded = (failure_kind == "node" and level == "local"
+                    and plan.effective_replication >= 1)
+        return self.restore_duration(level, with_delta, degraded=degraded)
+
+    def wiped_levels(self, plan: CheckpointPlan,
+                     failure_kind: str) -> tuple[str, ...]:
+        """Levels ``failure_kind`` destroys under this plan — derived from
+        the same ``level_survives`` rule the store substrate implements
+        (node loss wipes local disk only when no peer holds replicas)."""
+        from repro.checkpoint.multilevel import _LEVELS, level_survives
+        return tuple(l for l in _LEVELS
+                     if not level_survives(l, failure_kind,
+                                           plan.effective_replication))
 
     # -- plan pricing --------------------------------------------------------
     def trigger_write_duration(self, plan: CheckpointPlan,
                                trigger_index: int) -> float:
         """Total write seconds for trigger number ``trigger_index``."""
         return sum(self.write_duration(kind, level, plan.delta_codec,
-                                       plan.encode_placement)
+                                       plan.encode_placement,
+                                       replicas=plan.effective_replication)
                    for level, kind in levels_due(plan, trigger_index))
 
     def avg_write_duration(self, plan: CheckpointPlan) -> float:
@@ -281,6 +336,35 @@ class SimCostModel:
         return sum(self.trigger_link_bytes(plan, i)
                    for i in range(period)) / period
 
+    # -- replica-traffic accounting (bytes over the node interconnect) -------
+    def trigger_replica_bytes(self, plan: CheckpointPlan,
+                              trigger_index: int) -> float:
+        """Replica bytes trigger ``trigger_index`` pushes over the peer
+        interconnect: k copies of each level-2 payload (full state, or the
+        delta fraction for delta triggers) — the modeled twin of the
+        replicated store's ``ReplicaStats.replica_bytes``.  Zero when the
+        plan has no local level or replication is disabled."""
+        k = plan.effective_replication
+        if k == 0:
+            return 0.0
+        out = 0.0
+        for level, kind in plan.levels_due(trigger_index):
+            if level != "local":
+                continue
+            frac = 1.0 if kind == "full" else (
+                self.delta_int8_fraction if plan.delta_codec == "int8"
+                else self.delta_fraction)
+            out += k * frac * self.state_bytes
+        return out
+
+    def avg_replica_bytes(self, plan: CheckpointPlan) -> float:
+        """Steady-state average replica bytes per trigger — what the
+        controller trades against recovery time when it searches the
+        ``replication_factor`` plan dimension."""
+        period = self._cadence_period(plan)
+        return sum(self.trigger_replica_bytes(plan, i)
+                   for i in range(period)) / period
+
     def plan_overhead_fraction(self, plan: CheckpointPlan,
                                ci_s: Optional[float] = None) -> float:
         """Steady-state fraction of capacity spent on checkpointing: the
@@ -293,13 +377,17 @@ class SimCostModel:
 
     def surviving_levels(self, plan: CheckpointPlan,
                          failure_kind: str) -> tuple[str, ...]:
-        """Plan levels surviving ``failure_kind`` (fastest first) under the
-        asserted LEVEL_COVERAGE mapping.  Raises ``ValueError`` on an
-        unknown failure kind — silently defaulting would price a typo'd
-        kind as an arbitrary recovery path."""
+        """Plan levels surviving ``failure_kind`` (fastest first), DERIVED
+        from the plan's replication factor: with k>=1 ring replicas the
+        level-2 store survives a node loss (the PeerReplicatedStore
+        mechanism), with k=0 a node failure degrades to remote.  Raises
+        ``ValueError`` on an unknown failure kind — silently defaulting
+        would price a typo'd kind as an arbitrary recovery path."""
         from repro.checkpoint.multilevel import allowed_levels
-        return tuple(l for l in allowed_levels(failure_kind)
-                     if l in plan.levels)
+        return tuple(
+            l for l in allowed_levels(failure_kind,
+                                      plan.effective_replication)
+            if l in plan.levels)
 
     def restore_level(self, plan: CheckpointPlan,
                       failure_kind: str) -> Optional[str]:
@@ -315,9 +403,8 @@ class SimCostModel:
         if level is None:
             # nothing survives: model a cold restart at the worst price
             return self.detect_s + self.restart_s + self.restore_duration("remote")
-        with_delta = plan.mode == "incremental" and level != "memory"
         return (self.detect_s + self.restart_s
-                + self.restore_duration(level, with_delta))
+                + self.restore_duration_for(plan, failure_kind, level))
 
     def plan_lost_work_multiplier(self, plan: CheckpointPlan,
                                   failure_kind: str = "node") -> float:

@@ -235,15 +235,18 @@ class StreamSimulator:
                       for l in surviving]
         if candidates:
             offset, _, level = max(candidates)
-            with_delta = self.plan.mode == "incremental" and level != "memory"
-            restore_s = self.cost.restore_duration(level, with_delta)
+            # restore_duration_for folds in the delta-apply term and the
+            # degraded-partial path (node failure + replicated level-2)
+            restore_s = self.cost.restore_duration_for(self.plan, ev.kind,
+                                                       level)
         else:
             # nothing survives: cold restart, reprocess everything
             offset, level = 0.0, None
             restore_s = self.cost.restore_duration("remote")
-        # the failure destroys the levels it covers
-        for wiped in ("memory",) if ev.kind == "node" else \
-                     ("memory", "local") if ev.kind == "cluster" else ():
+        # the failure destroys the levels it doesn't survive at — derived
+        # from the plan's replication factor (an un-replicated plan loses
+        # its local level to a node failure)
+        for wiped in self.cost.wiped_levels(self.plan, ev.kind):
             if wiped in self.offset_by_level:
                 self.offset_by_level[wiped] = 0.0
         self.down_until = ev.t + self.cost.detect_s + self.cost.restart_s \

@@ -4,7 +4,7 @@ import pytest
 
 from repro.config import MeshConfig
 from repro.ft import (FailureInjector, FailureModel, HeartbeatDetector,
-                      StragglerDetector, plan_rescale)
+                      StragglerDetector, plan_recovery, plan_rescale)
 
 
 def test_heartbeat_detector():
@@ -64,6 +64,75 @@ def test_rescale_raises_below_tp():
     mesh = MeshConfig(data=16, model=16)
     with pytest.raises(ValueError):
         plan_rescale(mesh, hosts_alive=3, chips_per_host=4)
+
+
+def test_rescale_batch_walkdown_terminates_at_data_one():
+    # a prime global batch divides nothing: the divisibility walk-down
+    # must terminate at data=1 (where any batch divides) instead of
+    # looping or going to zero
+    mesh = MeshConfig(data=16, model=16)
+    plan = plan_rescale(mesh, hosts_alive=60, chips_per_host=4,
+                        global_batch=977)
+    assert plan.new.data == 1
+    assert plan.new.model == 16
+    assert plan.batch_ok          # 977 % 1 == 0: data=1 always shards
+
+
+def test_rescale_multi_pod_symmetry_demotion_threshold():
+    mesh = MeshConfig(multi_pod=True, data=16, model=16, pods=2)
+    # below 2*model chips the pods cannot stay symmetric: single pod
+    demoted = plan_rescale(mesh, hosts_alive=5, chips_per_host=4)   # 20 chips
+    assert not demoted.new.multi_pod and demoted.new.model == 16
+    # exactly 2*model chips is the smallest symmetric multi-pod mesh
+    kept = plan_rescale(mesh, hosts_alive=8, chips_per_host=4)      # 32 chips
+    assert kept.new.multi_pod and kept.new.data == 1
+
+
+def test_recovery_standby_path_keeps_mesh():
+    mesh = MeshConfig(data=16, model=16)
+    rec = plan_recovery(mesh, hosts_lost=2, standbys=4)
+    assert rec.mesh == mesh and not rec.rescaled and rec.rescale is None
+    assert rec.standbys_used == 2 and rec.standbys_left == 2
+
+
+def test_recovery_exhausted_standbys_rescales_down():
+    mesh = MeshConfig(data=16, model=16)     # 256 chips = 64 hosts
+    rec = plan_recovery(mesh, hosts_lost=5, standbys=1, chips_per_host=4,
+                        global_batch=256)
+    assert rec.rescaled and rec.standbys_left == 0
+    assert rec.mesh.num_devices < mesh.num_devices
+    assert rec.mesh.model == 16              # TP pinned through recovery
+    assert 256 % rec.mesh.data == 0          # batch still shards cleanly
+    assert rec.rescale.hosts_alive == 60     # 64 in-mesh + 1 standby - 5 lost
+
+    with pytest.raises(ValueError):
+        plan_recovery(mesh, hosts_lost=-1, standbys=0)
+
+
+def test_worst_case_failure_is_host_targeted():
+    inj = FailureInjector(epsilon_s=1.0)
+    f = inj.worst_case_failure(100.0, last_ckpt_t=0.0, interval_s=60.0,
+                               ckpt_cost_s=5.0, kind="node", host=3)
+    assert abs(f.t - 124.0) < 1e-9            # same §III-C worst-case time
+    assert f.kind == "node" and f.host == 3
+    assert "host 3" in str(f)
+    assert inj.log[-1]["host"] == 3 and inj.log[-1]["kind"] == "node"
+
+
+def test_peer_loss_kills_host_then_its_ring_peer():
+    inj = FailureInjector(epsilon_s=1.0)
+    failures = inj.peer_loss(100.0, last_ckpt_t=0.0, interval_s=60.0,
+                             ckpt_cost_s=5.0, host=3, num_hosts=4)
+    assert [f.host for f in failures] == [3, 0]   # ring peer of 3 is 0
+    assert all(f.kind == "node" for f in failures)
+    # the second kill lands inside the window, before any new checkpoint
+    # could complete
+    assert failures[0].t < failures[1].t <= failures[0].t + 5.0
+    assert inj.log[-1]["scenario"] == "peer_loss"
+    # degenerate ring: a single host has no peer to lose
+    solo = FailureInjector().peer_loss(0.0, 0.0, 60.0, 1.0,
+                                       host=0, num_hosts=1)
+    assert len(solo) == 1
 
 
 def test_straggler_detector_flags_persistent_slow_host():

@@ -1,0 +1,301 @@
+"""The peer-replication plane: ring placement, bounded-retry pushes,
+quorum commit, host kills, degraded partial restore, and the derived
+survival rule the cost model prices from (PR 7 tentpole)."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.multilevel import (LEVEL_COVERAGE, allowed_levels,
+                                         derived_coverage, level_survives)
+from repro.checkpoint.replication import (PeerReplicatedStore,
+                                          ReplicationError,
+                                          retry_with_backoff, ring_peers)
+from repro.checkpoint.store import CheckpointStore
+from repro.config import CheckpointPlan
+from repro.sim import SimCostModel
+
+
+def _state(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"w": rng.standard_normal((64, 32)).astype(np.float32),
+            "v": rng.standard_normal((512,)).astype(np.float32),
+            "m": rng.standard_normal((100,)).astype(np.float64),
+            "step": np.asarray(42, np.int64)}
+
+
+def _same(a, b):
+    return all(np.array_equal(np.asarray(a[k]), np.asarray(b[k])) for k in a)
+
+
+# ---------------------------------------------------------------------------
+# ring placement + retry primitives
+# ---------------------------------------------------------------------------
+
+def test_ring_peers_wraps_and_clamps():
+    assert ring_peers(0, 4, 1) == (1,)
+    assert ring_peers(3, 4, 2) == (0, 1)       # wraps mod H
+    assert ring_peers(2, 4, 9) == (3, 0, 1)    # clamped to H-1 distinct peers
+    assert ring_peers(0, 1, 3) == ()           # no peers to push to
+    assert ring_peers(5, 8, 0) == ()
+
+
+def test_retry_with_backoff_bounded_and_jittered():
+    sleeps = []
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise OSError("transient")
+        return "ok"
+
+    out = retry_with_backoff(flaky, attempts=4, base_s=0.1, factor=2.0,
+                             sleep=sleeps.append)
+    assert out == "ok" and calls["n"] == 3
+    assert len(sleeps) == 2
+    # exponential envelope with jitter in [1, 1.5): 0.1*2^i * [1, 1.5)
+    assert 0.1 <= sleeps[0] < 0.15 and 0.2 <= sleeps[1] < 0.3
+
+    def always():
+        raise OSError("dead disk")
+
+    with pytest.raises(OSError, match="dead disk"):
+        retry_with_backoff(always, attempts=3, sleep=lambda s: None)
+    # non-OSError propagates immediately, no retry
+    with pytest.raises(ValueError):
+        retry_with_backoff(lambda: (_ for _ in ()).throw(ValueError("x")),
+                           attempts=5, sleep=lambda s: None)
+
+
+def test_store_write_retries_through_flaky_filesystem(tmp_path):
+    """Satellite: a transient IO error on a (remote-level) store write is
+    retried with backoff instead of failing the save."""
+    fails = {"n": 0}
+
+    def flaky_fs(path):
+        # deterministic under the concurrent shard writers: only shard 0's
+        # writer (whose retries are sequential) sees the transient errors
+        if path.endswith("shard_00000.npz") and fails["n"] < 2:
+            fails["n"] += 1
+            raise OSError("EIO: transient")
+
+    store = CheckpointStore(str(tmp_path / "remote"), num_shards=4,
+                            fault_hook=flaky_fs, write_backoff_s=0.0)
+    state = _state()
+    store.save(7, state)
+    assert store.write_retries == 2
+    assert store.stats()["write_retries"] == 2
+    got, _ = store.restore(state, 7)
+    assert _same(got, state)
+
+    # a PERSISTENT error still propagates after bounded retry, and the
+    # half-written checkpoint stays invisible
+    dead = CheckpointStore(str(tmp_path / "dead"), num_shards=2,
+                           fault_hook=lambda p: (_ for _ in ()).throw(
+                               OSError("gone")),
+                           write_backoff_s=0.0, write_attempts=2)
+    with pytest.raises(OSError):
+        dead.save(8, state)
+    assert dead.newest() is None
+
+
+# ---------------------------------------------------------------------------
+# replicated store: push/quorum/kill/restore
+# ---------------------------------------------------------------------------
+
+def test_replicated_save_pushes_ring_replicas(tmp_path):
+    store = PeerReplicatedStore(str(tmp_path), num_shards=4,
+                                replication_factor=1, sleep=lambda s: None)
+    store.save(3, _state())
+    files = sorted(os.listdir(tmp_path / "step_0000000003"))
+    # every shard j has exactly one replica, on ring peer (j+1) % 4
+    for j in range(4):
+        assert f"replica_h{(j + 1) % 4:03d}_shard_{j:05d}.npz" in files
+    assert store.replica_stats.acks == 4
+    assert store.replica_stats.replica_bytes > 0
+    m = store._valid("step_0000000003")
+    assert m["placement"]["owners"]["shard_00002.npz"] == 2
+    assert len(m["replicas"]) == 4
+
+
+def test_quorum_failure_leaves_no_manifest(tmp_path):
+    """A push that dies after bounded retry fails the quorum, the save
+    raises, and NOTHING becomes visible — the commit-marker invariant."""
+    def kill_replicas(path):
+        if "replica_" in os.path.basename(path):
+            raise OSError("peer unreachable")
+
+    store = PeerReplicatedStore(str(tmp_path), num_shards=4,
+                                replication_factor=1,
+                                fault_hook=kill_replicas,
+                                push_attempts=2, push_backoff_s=0.0,
+                                sleep=lambda s: None)
+    with pytest.raises(ReplicationError, match="quorum"):
+        store.save(5, _state())
+    assert store.newest() is None
+    assert store.replica_stats.push_failures == 4   # counted on the main thread
+    assert store.replica_stats.push_retries >= 1    # backoff was exercised
+
+
+def test_kill_host_then_degraded_partial_restore(tmp_path):
+    state = _state()
+    store = PeerReplicatedStore(str(tmp_path), num_shards=4,
+                                replication_factor=1, sleep=lambda s: None)
+    store.save(9, state)
+    full = store.total_bytes(9)
+    removed = store.kill_host(1)
+    # host 1 loses its primary shard AND the replica it held for host 0
+    assert any("shard_00001.npz" in r and "replica" not in r
+               for r in removed)
+    assert any(r.endswith("replica_h001_shard_00000.npz") for r in removed)
+    assert store.newest() == 9          # replicas keep the step valid
+    got, _ = store.restore(state)
+    assert _same(got, state)
+    lr = store.last_restore
+    assert lr["degraded"] and lr["shards_from_peer"] == 1
+    assert 0 < lr["restored_bytes"] < full
+
+
+def test_peer_loss_falls_back_per_shard_to_remote(tmp_path):
+    state = _state(3)
+    local = PeerReplicatedStore(str(tmp_path / "local"), num_shards=4,
+                                replication_factor=1, sleep=lambda s: None)
+    remote = CheckpointStore(str(tmp_path / "remote"), num_shards=2)
+    local.save(11, state)
+    remote.save(11, state)
+    # k=1 worst case: a host and the peer holding its replica both die
+    local.kill_host(2)
+    local.kill_host(3)
+    assert local.newest() is None                         # not locally whole
+    assert local.newest_restorable(remote.list_steps()) == 11
+    got, _ = local.restore(state, step=11, shard_fallback=remote.read_leaves)
+    assert _same(got, state)
+    lr = local.last_restore
+    assert lr["shards_from_remote"] >= 1 and lr["degraded"]
+    # without a fallback the same restore must refuse, not corrupt
+    with pytest.raises(FileNotFoundError):
+        local.restore(state, step=11)
+
+
+def test_read_leaves_loads_only_owning_shards(tmp_path):
+    state = _state(4)
+    store = CheckpointStore(str(tmp_path), num_shards=4)
+    store.save(2, state)
+    m = store._valid("step_0000000002")
+    name = "w"
+    got = store.read_leaves(2, [name])
+    assert np.array_equal(got[name], state[name])
+    # only leaves sharing the shard ride along, never the whole state
+    shard_of_w = m["assign"][name]
+    expect = {n for n, j in m["assign"].items() if j == shard_of_w}
+    assert set(got) == expect
+    with pytest.raises(KeyError):
+        store.read_leaves(2, ["nope"])
+
+
+# ---------------------------------------------------------------------------
+# derived survival + cost-model pricing
+# ---------------------------------------------------------------------------
+
+def test_survival_derived_from_replication():
+    assert derived_coverage(1) == LEVEL_COVERAGE
+    assert derived_coverage(0)["node"] == "remote"
+    assert level_survives("local", "node", 1)
+    assert not level_survives("local", "node", 0)
+    assert not level_survives("local", "cluster", 99)   # k can't save a cluster
+    assert allowed_levels("node", 0) == ("remote",)
+    assert allowed_levels("node", 1) == ("local", "remote")
+    with pytest.raises(ValueError, match="known kinds"):
+        allowed_levels("rack", 1)
+    with pytest.raises(ValueError, match="unknown level"):
+        level_survives("tape", "node")
+
+
+def test_costmodel_prices_replication_dimension():
+    cost = SimCostModel(state_bytes=1e9, replica_push_factor=0.1)
+    rep1 = CheckpointPlan(levels=("local", "remote"), replication_factor=1)
+    rep0 = CheckpointPlan(levels=("local", "remote"), replication_factor=0)
+    rep2 = CheckpointPlan(levels=("local", "remote"), replication_factor=2)
+    # survival: derived, not hard-coded
+    assert cost.surviving_levels(rep1, "node") == ("local", "remote")
+    assert cost.surviving_levels(rep0, "node") == ("remote",)
+    # wipes: an un-replicated plan loses local disk to a node failure
+    assert cost.wiped_levels(rep0, "node") == ("memory", "local")
+    assert cost.wiped_levels(rep1, "node") == ("memory",)
+    assert cost.wiped_levels(rep1, "cluster") == ("memory", "local")
+    # replica traffic scales with k; rep0 pays none
+    assert cost.avg_replica_bytes(rep0) == 0.0
+    assert cost.avg_replica_bytes(rep2) == \
+        pytest.approx(2 * cost.avg_replica_bytes(rep1))
+    # write duration: each replica push adds replica_push_factor x payload
+    base = cost.write_duration("full", "local")
+    assert cost.write_duration("full", "local", replicas=2) == \
+        pytest.approx(base * 1.2)
+    # downtime: replicas buy the fast level-2 node restore
+    assert cost.plan_downtime_s(rep1, "node") < \
+        cost.plan_downtime_s(rep0, "node")
+    # degraded restore pricing is reachable and scales with the factor
+    slow = SimCostModel(replica_restore_factor=1.5)
+    assert slow.restore_duration_for(rep1, "node", "local") == \
+        pytest.approx(1.5 * slow.restore_duration("local"))
+    assert slow.restore_duration_for(rep0, "node", "remote") == \
+        pytest.approx(slow.restore_duration("remote"))
+
+
+def test_default_variants_carry_replication_dimension():
+    from repro.core.ci_optimizer import default_plan_variants
+
+    variants = default_plan_variants(SimCostModel(state_bytes=1e9),
+                                     ci_ref=60.0)
+    reps = {p.replication_factor for p in variants}
+    assert {0, 1, 2} <= reps
+    # rep appears in the plan tag only when it leaves the default
+    assert any(p.name.endswith("rep0") for p in variants)
+    assert any(p.name.endswith("rep2") for p in variants)
+
+
+# ---------------------------------------------------------------------------
+# manager-level drills (the acceptance path end to end)
+# ---------------------------------------------------------------------------
+
+def test_manager_node_failure_recovers_from_peers_bit_exact(tmp_path):
+    state = _state(5)
+    plan = CheckpointPlan(levels=("local", "remote"), remote_every=1,
+                         num_shards=4, replication_factor=1)
+    mgr = CheckpointManager(str(tmp_path), plan)
+    mgr.save(50, state, 1.0)
+    mgr.on_failure("node", host=0)
+    rep = mgr.restore(state, "node")
+    assert rep.level == "local" and rep.degraded
+    assert 0 < rep.restored_bytes < mgr.stores["local"].total_bytes(50)
+    assert _same(rep.state, state)
+
+
+def test_manager_rep0_degrades_to_remote(tmp_path):
+    state = _state(6)
+    plan = CheckpointPlan(levels=("local", "remote"), remote_every=1,
+                         num_shards=4, replication_factor=0)
+    mgr = CheckpointManager(str(tmp_path), plan)
+    assert not isinstance(mgr.stores["local"], PeerReplicatedStore)
+    mgr.save(50, state, 1.0)
+    mgr.on_failure("node", host=0)
+    rep = mgr.restore(state, "node")
+    assert rep.level == "remote" and not rep.degraded
+    assert _same(rep.state, state)
+
+
+def test_manager_untargeted_node_failure_keeps_local_disk(tmp_path):
+    """host=None keeps the legacy semantics: the process dies, the node's
+    disk survives, the restore is a healthy local read."""
+    state = _state(8)
+    plan = CheckpointPlan(levels=("local",), num_shards=4,
+                         replication_factor=1)
+    mgr = CheckpointManager(str(tmp_path), plan)
+    mgr.save(50, state, 1.0)
+    mgr.on_failure("node")
+    rep = mgr.restore(state, "node")
+    assert rep.level == "local" and not rep.degraded
+    assert rep.restored_bytes == 0
+    assert _same(rep.state, state)

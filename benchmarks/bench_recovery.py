@@ -7,11 +7,11 @@ The E4 grid now runs twice: through the scalar ``StreamSimulator`` loop
 the same table rows.  A 10x larger scenario grid (CI x mechanism x failure
 kind x workload, >= 200 lanes) then measures campaign throughput, and the
 whole measurement is emitted as the ``BENCH_sim.json`` artifact (schema
-"bench_sim/1") — the perf trajectory of the vectorized simulator, next to
+"bench_sim/2") — the perf trajectory of the vectorized simulator, next to
 ``BENCH_ckpt.json``'s "bench_ckpt/1" checkpoint-plane calibration.
 
-bench_sim/1 schema:
-  schema               "bench_sim/1"
+bench_sim/2 schema:
+  schema               "bench_sim/2"
   e4                   the equivalence gate: per-CI latency/recovery from
                        BOTH engines, wall-clocks, max absolute divergence
   grid                 the throughput measurement: lanes, lane_ticks,
@@ -19,9 +19,20 @@ bench_sim/1 schema:
                        compactions/lanes_compacted (lane-level early exit:
                        recovered lanes are compacted out of the arrays),
                        and the scenario axes the lanes span
+  proactive            the E10 proactive-control result
+                       (``bench_proactive``): either the full head-to-head
+                       (per-config ``qos_violation_s`` — the validator
+                       gates Khaos-proactive STRICTLY below Khaos-reactive,
+                       with >= 1 forecast-driven plan switch) or, under
+                       ``--smoke``, the micro drill summary (pre-act before
+                       the peak, a ``reprofile`` re-entry in the phase log,
+                       backpressure-suppressed cadence slots)
   scalar_ticks_per_s   the scalar loop's measured tick rate
   speedup              grid lane-ticks/s over scalar ticks/s (the >= 20x
                        campaign-throughput target)
+
+"bench_sim/1" (no proactive section) is no longer emitted; readers treat
+it as a stale artifact and re-run the bench.
 """
 from __future__ import annotations
 
@@ -45,8 +56,9 @@ E4_HORIZON_S = 5000.0          # post-injection window of the scalar sweep
 GRID_HORIZON = 2200            # ticks per grid lane (recovery completes well
                                # inside this for every grid scenario family)
 
-SIM_SCHEMA = "bench_sim/1"
-SIM_SCHEMA_KEYS = ("schema", "e4", "grid", "scalar_ticks_per_s", "speedup")
+SIM_SCHEMA = "bench_sim/2"
+SIM_SCHEMA_KEYS = ("schema", "e4", "grid", "proactive", "scalar_ticks_per_s",
+                   "speedup")
 
 
 def _e4_cost() -> SimCostModel:
@@ -184,7 +196,8 @@ def bench_grid(cost: SimCostModel, repeats: int = 3) -> dict:
 # ---------------------------------------------------------------------------
 
 def build_sim_artifact(scalar_rows, scalar_wall, scalar_ticks,
-                       batched_rows, batched_wall, grid: dict) -> dict:
+                       batched_rows, batched_wall, grid: dict,
+                       proactive: dict) -> dict:
     s = np.array(scalar_rows)
     b = np.array(batched_rows)
     scalar_tps = scalar_ticks / max(scalar_wall, 1e-9)
@@ -202,9 +215,45 @@ def build_sim_artifact(scalar_rows, scalar_wall, scalar_ticks,
             "max_abs_latency_diff_ms": float(np.nanmax(np.abs(s[:, 1] - b[:, 1]))),
         },
         "grid": grid,
+        "proactive": proactive,
         "scalar_ticks_per_s": float(scalar_tps),
         "speedup": float(grid["lane_ticks_per_s"] / scalar_tps),
     }
+
+
+def _validate_proactive(p: dict) -> None:
+    """Gate the E10 section: the artifact only validates if proactive control
+    actually paid off (full form) or the micro drill exercised every rung of
+    the ladder (smoke form)."""
+    if not isinstance(p, dict) or not p:
+        raise ValueError("proactive section missing or empty")
+    if "qos_violation_s" in p:
+        # full head-to-head: twin controllers on one campaign, the only
+        # difference the proactive flag — the gate is a STRICT win
+        qos = p["qos_violation_s"]
+        for name in ("Khaos-proactive", "Khaos-reactive"):
+            if name not in qos:
+                raise ValueError(f"proactive.qos_violation_s missing {name!r}")
+        if not (qos["Khaos-proactive"] < qos["Khaos-reactive"]):
+            raise ValueError(
+                "proactive Khaos did not strictly beat reactive Khaos: "
+                f"{qos['Khaos-proactive']:.0f}s vs "
+                f"{qos['Khaos-reactive']:.0f}s of QoS violation")
+        if not (int(p.get("proactive_decisions", 0)) >= 1):
+            raise ValueError("no forecast-driven plan switch in the "
+                             "head-to-head run")
+        if not np.isfinite(p.get("first_proactive_t", float("nan"))):
+            raise ValueError("first_proactive_t missing or non-finite")
+    else:
+        # micro smoke drill: one lane, one crash, one backpressure window
+        if not np.isfinite(p.get("first_proactive_t", float("nan"))):
+            raise ValueError("smoke drill produced no proactive decision")
+        if "reprofile" not in p.get("phase_sequence", ()):
+            raise ValueError("smoke drill never re-entered the reprofile "
+                             "phase after the anomaly")
+        if not (int(p.get("bp_suppressed", 0)) >= 1):
+            raise ValueError("backpressure window suppressed no checkpoint "
+                             "cadence slots")
 
 
 def validate_sim_artifact(art: dict) -> None:
@@ -234,6 +283,7 @@ def validate_sim_artifact(art: dict) -> None:
         raise ValueError("lanes_compacted exceeds the lane count")
     if not (0.0 < g["recovered_fraction"] <= 1.0):
         raise ValueError(f"implausible recovered_fraction {g['recovered_fraction']}")
+    _validate_proactive(art["proactive"])
     if art["speedup"] <= 0:
         raise ValueError("speedup must be positive")
 
@@ -257,7 +307,14 @@ def emit_sim_artifact(path: str, art: dict) -> dict:
 # drivers
 # ---------------------------------------------------------------------------
 
-def bench_recovery_vs_ci(out: str = "BENCH_sim.json"):
+def bench_recovery_vs_ci(out: str = "BENCH_sim.json",
+                         proactive: dict | None = None):
+    """`proactive` is the E10 section from ``bench_proactive`` —
+    ``benchmarks/run.py`` passes its result through so the head-to-head
+    runs once per campaign; standalone invocations compute it here."""
+    if proactive is None:
+        from benchmarks.bench_proactive import bench_proactive
+        proactive = bench_proactive()
     cost = _e4_cost()
     print("\n=== Recovery & latency vs CI (constant 3000 ev/s, worst-case failure) ===")
     scalar_rows, scalar_wall, scalar_ticks = scalar_e4(cost)
@@ -275,14 +332,20 @@ def bench_recovery_vs_ci(out: str = "BENCH_sim.json"):
           f"campaign grid: {grid['wall_s']:.2f}s "
           f"({grid['recovered_fraction']*100:.0f}% of lanes recovered)")
     art = build_sim_artifact(scalar_rows, scalar_wall, scalar_ticks,
-                             batched_rows, batched_wall, grid)
+                             batched_rows, batched_wall, grid, proactive)
     emit_sim_artifact(out, art)
     return scalar_rows
 
 
-def smoke(tmpdir: str = "/tmp/repro_bench_sim_smoke") -> dict:
+def smoke(tmpdir: str = "/tmp/repro_bench_sim_smoke",
+          proactive: dict | None = None) -> dict:
     """Tiny 4-lane campaign end-to-end: equivalence vs the scalar oracle on
-    a reduced E4 grid, artifact emission, schema validation, reload."""
+    a reduced E4 grid, artifact emission, schema validation, reload.  The
+    embedded proactive section comes from ``bench_proactive.smoke()`` —
+    passed through by run.py, or computed here when run standalone."""
+    if proactive is None:
+        from benchmarks.bench_proactive import smoke as proactive_smoke
+        proactive = proactive_smoke()
     shutil.rmtree(tmpdir, ignore_errors=True)
     os.makedirs(tmpdir, exist_ok=True)
     cost = _e4_cost()
@@ -306,7 +369,7 @@ def smoke(tmpdir: str = "/tmp/repro_bench_sim_smoke") -> dict:
             "plans": ["full-sync"], "kinds": ["task", "node"],
             "workloads": ["const"], "ci_grid": [float(cis[0]), float(cis[-1]), 2]}
     art = build_sim_artifact(scalar_rows, scalar_wall, scalar_ticks,
-                             batched_rows, batched_wall, grid)
+                             batched_rows, batched_wall, grid, proactive)
     path = os.path.join(tmpdir, "BENCH_sim.json")
     emit_sim_artifact(path, art)
     with open(path) as f:
@@ -318,8 +381,8 @@ def smoke(tmpdir: str = "/tmp/repro_bench_sim_smoke") -> dict:
     return art
 
 
-def main(out: str = "BENCH_sim.json"):
-    return bench_recovery_vs_ci(out)
+def main(out: str = "BENCH_sim.json", proactive: dict | None = None):
+    return bench_recovery_vs_ci(out, proactive=proactive)
 
 
 if __name__ == "__main__":

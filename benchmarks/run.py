@@ -4,19 +4,28 @@
   E2  YSB analogue           (paper Table III, Fig. 2b/2d, Fig. 3b)
   E4  recovery/latency vs CI (paper §III-C premise; scalar oracle AND the
                               batched campaign — emits BENCH_sim.json with
-                              the lane-vs-scalar table and the campaign
-                              throughput measurement, schema "bench_sim/1")
+                              the lane-vs-scalar table, the campaign
+                              throughput measurement, and the embedded E10
+                              proactive section, schema "bench_sim/2")
   E5  checkpoint subsystem   (beyond-paper; emits the BENCH_ckpt.json
                               calibration artifact the sim cost model loads)
   E6  kernel validation      (oracle timings + interpret-mode allclose)
   E7  dry-run / roofline     (reads experiments/dryrun.json)
+  E10 proactive vs reactive  (forecast-driven plan switching + anomaly-
+                              triggered reprofiling vs a reactive twin on
+                              ONE gray-failure campaign; its result is the
+                              "proactive" section of BENCH_sim.json and the
+                              validator gates a STRICT proactive win)
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--quick | --smoke]
 
 ``--smoke`` is the tier-1-adjacent CI check: it runs the E5 checkpoint
 bench on a tiny state (device-placement delta encodes included, plus a
 micro trainer on an ``encode_placement="device"`` plan in interpret
-mode), a tiny 4-lane E4 campaign, a tiny end-to-end ``KhaosRuntime``
+mode), the PROACTIVE-CONTROL DRILL (diurnal ramp + backpressure window +
+crash on one supervised lane, asserting a forecast-driven plan switch
+BEFORE the λ peak and an anomaly-triggered ``reprofile`` re-entry in the
+phase log), a tiny 4-lane E4 campaign, a tiny end-to-end ``KhaosRuntime``
 (all three phases on a 4-lane controller-in-the-loop campaign + a micro
 live trainer with a mid-run plan switch), and the replication RECOVERY
 DRILL (save under k=1 ring replication, kill one host, assert the
@@ -28,8 +37,9 @@ BENCH_ckpt.json / BENCH_sim.json artifacts match their schemas
 ("bench_ckpt/3" via ``SimCostModel.from_calibration`` — placement/codec
 fields, int8 link fraction <= 0.26, the fused flat device encode under
 the per-leaf dispatch baseline, with "bench_ckpt/1" and "/2" artifacts
-still loadable as the versioned fallbacks; "bench_sim/1" via
-``bench_recovery.validate_sim_artifact``) and that the phase order /
+still loadable as the versioned fallbacks; "bench_sim/2" via
+``bench_recovery.validate_sim_artifact``, which also gates the embedded
+proactive drill) and that the phase order /
 JobHandle protocol have not regressed — exiting non-zero on any
 mismatch.
 """
@@ -52,11 +62,14 @@ def main() -> None:
 
     t0 = time.monotonic()
     if args.smoke:
-        from benchmarks import (bench_ckpt, bench_recovery, bench_replication,
-                                bench_runtime)
+        from benchmarks import (bench_ckpt, bench_proactive, bench_recovery,
+                                bench_replication, bench_runtime)
         try:
             bench_ckpt.smoke()
-            bench_recovery.smoke()
+            # the proactive drill's summary is embedded (and gated) in the
+            # BENCH_sim.json artifact that bench_recovery.smoke() emits
+            proactive = bench_proactive.smoke()
+            bench_recovery.smoke(proactive=proactive)
             bench_replication.smoke()
             bench_runtime.smoke()
         except (ValueError, AssertionError) as e:
@@ -65,13 +78,14 @@ def main() -> None:
         print(f"smoke done in {time.monotonic() - t0:.0f}s")
         return
     from benchmarks import (bench_ckpt, bench_dryrun, bench_kernels,
-                            bench_khaos_training, bench_recovery,
-                            bench_replication, bench_tables)
+                            bench_khaos_training, bench_proactive,
+                            bench_recovery, bench_replication, bench_tables)
 
     repeats = 1 if args.quick else 3
     bench_tables.bench_iot_vehicles(repeats=repeats)
     bench_tables.bench_ysb(repeats=repeats)
-    bench_recovery.main()
+    proactive = bench_proactive.main()
+    bench_recovery.main(proactive=proactive)
     bench_replication.main()
     bench_khaos_training.main()
     bench_ckpt.main()

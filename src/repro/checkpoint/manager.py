@@ -172,7 +172,27 @@ class CheckpointManager:
         self.saves_by_level = {l: 0 for l in ("memory", "local", "remote")}
         self.skips = 0
         self.savepoints = 0
+        self.late_saves = 0           # triggers landing past their cadence
+        self.late_by_s = 0.0          # slot, and by how much in total — a
+                                      # backpressured trigger widens the
+                                      # lost-work window the controller's
+                                      # CI assumption prices, so the slip
+                                      # is measured rather than silent
         self.restores: list[tuple[int, str, str]] = []
+
+    def _mark_trigger(self, timestamp: float) -> None:
+        """Advance the cadence clock, accounting how late the trigger ran
+        relative to the slot that made it due (regular triggers only —
+        ``savepoint`` is cadence-exempt and marks directly)."""
+        slot = self.policy.next_due(timestamp)
+        slip = timestamp - slot
+        # polling quantization lands every trigger a little past its slot;
+        # only a slip a controller could care about (5% of the interval)
+        # counts as late — backpressure windows exceed this by design
+        if slip > 0.05 * self.policy.interval_s:
+            self.late_saves += 1
+            self.late_by_s += slip
+        self.policy.mark(timestamp)
 
     # -- save ---------------------------------------------------------------
     def _kind(self) -> str:
@@ -187,7 +207,7 @@ class CheckpointManager:
             if self.plan.busy_policy == "skip":
                 self.skips += 1
                 self._count += 1          # the trigger happened; cadence moves on
-                self.policy.mark(timestamp)
+                self._mark_trigger(timestamp)
                 return SaveReport(step, "skipped", synchronous=False)
             self._committer.wait()
 
@@ -280,7 +300,7 @@ class CheckpointManager:
         else:
             self._committer.submit(commit)
             report.blocking_s = time.monotonic() - t0   # snapshot only
-        self.policy.mark(timestamp)
+        self._mark_trigger(timestamp)
         return report
 
     # -- savepoint (cadence-exempt checkpoint-now) ---------------------------
@@ -478,6 +498,8 @@ class CheckpointManager:
             "saves": self._count,
             "skips": self.skips,
             "savepoints": self.savepoints,
+            "late_saves": self.late_saves,
+            "late_by_s": self.late_by_s,
             "bytes_by_kind": dict(self.bytes_by_kind),
             "bytes_written": sum(self.bytes_by_kind.values()),
             "bytes_on_link": self.link_bytes,

@@ -437,6 +437,16 @@ class KhaosConfig:
     optimization_period: float = 60.0   # seconds between optimization cycles
     forecast_horizon: int = 5           # multi-step-ahead TSF steps
     defer_drop_fraction: float = 0.10   # ">10% decrease -> defer"
+    proactive: bool = False             # pre-act on forecasted violations:
+                                        # when the TSF predicts the rate
+                                        # rising enough to break a QoS
+                                        # constraint within the horizon,
+                                        # re-optimize at the PREDICTED peak
+                                        # instead of waiting for the breach
+    proactive_rise_fraction: float = 0.05   # minimum forecasted rise
+                                        # (fraction of the current rate)
+                                        # before pre-acting — symmetric
+                                        # guard to defer_drop_fraction
     rescale_history: int = 5            # k pairwise fractional differences for p
     reconfig_cooldown: float = 120.0
     model_degree: int = 2               # polynomial degree for M_L / M_R

@@ -3,7 +3,10 @@
 Monitors the production job for violations of the two QoS constraints
 (average end-to-end latency vs ``l_const``; predicted worst-case recovery
 time vs ``r_const``), defers reconfiguration when the TSF expects the
-workload to drop >10%, and otherwise solves Eq. 8 for a new CI — or, when
+workload to drop >10%, pre-acts when ``cfg.proactive`` is set and the TSF
+forecasts a rise that would breach a constraint within the horizon
+(re-optimizing at the predicted peak so the switch lands before the
+load), and otherwise solves Eq. 8 for a new CI — or, when
 a cost model is attached (``cost``), for a new *checkpoint plan*: the
 search then spans mechanism variants (incremental encoding, async commit,
 multi-level routing, and the encode placement — device variants priced as
@@ -107,13 +110,18 @@ class Decision:
       defer        TSF predicts a >10% workload drop -> wait it out
       reconfigure  actuated: ``new_ci`` (and ``new_plan`` when the
                    mechanism search is active) were applied to the job
+      proactive    actuated BEFORE any breach: the TSF forecast a rate
+                   rise that would violate a constraint within the
+                   horizon, so the plan was re-optimized at the predicted
+                   peak (``cfg.proactive`` gates this path)
       infeasible   no (CI, plan) satisfies both constraints
       cooldown     a reconfiguration happened too recently
       unhealthy    the job is down/catching up; samples were discarded
     """
 
     KINDS: ClassVar[tuple[str, ...]] = ("none", "defer", "reconfigure",
-                                        "infeasible", "cooldown", "unhealthy")
+                                        "proactive", "infeasible",
+                                        "cooldown", "unhealthy")
 
     t: float
     kind: str
@@ -211,6 +219,11 @@ class KhaosController:
         lat_violation = lat > self.cfg.latency_constraint
         rec_violation = pred_rec > self.cfg.recovery_constraint
         if not (lat_violation or rec_violation):
+            if self.cfg.proactive:
+                pre = self._maybe_preact(job, t, lat, tr_avg, ci_now,
+                                         pred_rec)
+                if pre is not None:
+                    return pre
             return self._decide(t, "none", lat, tr_avg, pred_rec)
 
         # TSF deferral: workload expected to drop > 10% -> defer
@@ -237,6 +250,68 @@ class KhaosController:
         job.reconfigure(res.ci)
         self._last_reconfig_t = t
         return self._decide(t, "reconfigure", lat, tr_avg, pred_rec, res.ci)
+
+    def _maybe_preact(self, job: JobHandle, t, lat, tr_avg, ci_now,
+                      pred_rec) -> Optional[Decision]:
+        """Forecast-driven pre-switching: no constraint is violated *now*,
+        but the TSF predicts the rate rising enough within the horizon to
+        break one.  Re-optimize at the PREDICTED peak rate and actuate
+        immediately, so the switch (and its drain cost) lands before the
+        load does — the mirror image of the defer rule, which only ever
+        postpones action on downswings.  Returns None to fall through to
+        the ordinary "none" decision: an unwarmed forecaster, a flat
+        forecast, a peak the current config already satisfies, an active
+        cooldown, and an infeasible peak all stay silent — a *forecast*
+        never logs "infeasible" or "cooldown", only a breach does."""
+        fr = self.forecaster
+        if not fr.warmed_up:
+            return None
+        tr_peak = fr.predicted_peak()
+        rise_gate = (1.0 + self.cfg.proactive_rise_fraction) * tr_avg
+        if not np.isfinite(tr_peak) or tr_peak <= rise_gate:
+            return None
+        # would the CURRENT config violate a constraint at the peak rate?
+        peak_lat = float(self.m_l.predict(np.array([ci_now]), tr_peak)[0])
+        peak_rec = float(self.m_r.predict(np.array([ci_now]), tr_peak)[0])
+        if not (peak_lat * self.rescaler.p > self.cfg.latency_constraint
+                or peak_rec > self.cfg.recovery_constraint):
+            return None
+        if t - self._last_reconfig_t < self.cfg.reconfig_cooldown:
+            return None
+        if self.cost is not None:
+            res = optimize_plan(self.m_l, self.m_r, tr_peak,
+                                self.cfg.latency_constraint,
+                                self.cfg.recovery_constraint,
+                                self.rescaler.p,
+                                self.cfg.ci_min, self.cfg.ci_max,
+                                self.cost, variants=self.plan_variants,
+                                mtbf_s=self.mtbf_s)
+            if not res.feasible or res.plan is None:
+                return None
+            same_mechanism = res.plan.name == job.current_plan().name
+            if same_mechanism and abs(res.ci - ci_now) < 1.0:
+                return None
+            if same_mechanism:
+                job.reconfigure(res.ci)
+                self._last_reconfig_t = t
+                return self._decide(t, "proactive", lat, tr_avg, peak_rec,
+                                    res.ci)
+            job.reconfigure_plan(res.plan)
+            self._last_reconfig_t = t
+            return self._decide(t, "proactive", lat, tr_avg, peak_rec,
+                                res.ci, res.plan)
+        res = optimize_ci(self.m_l, self.m_r, tr_peak,
+                          self.cfg.latency_constraint,
+                          self.cfg.recovery_constraint,
+                          self.rescaler.p,
+                          self.cfg.ci_min, self.cfg.ci_max)
+        if not res.feasible or res.ci is None:
+            return None
+        if abs(res.ci - ci_now) < 1.0:
+            return None
+        job.reconfigure(res.ci)
+        self._last_reconfig_t = t
+        return self._decide(t, "proactive", lat, tr_avg, peak_rec, res.ci)
 
     def _optimize_mechanism(self, job: JobHandle, t, lat, tr_avg, ci_now,
                             pred_rec) -> Decision:

@@ -39,3 +39,17 @@ class WorkloadForecaster:
         fc = self.forecast()
         future = float(np.min(fc))   # most optimistic drop within the horizon
         return future < (1.0 - self.defer_drop_fraction) * self._last
+
+    @property
+    def warmed_up(self) -> bool:
+        return self._model.warmed_up
+
+    def predicted_peak(self) -> float:
+        """Highest forecasted rate within the horizon — the load the
+        proactive controller must already satisfy when it arrives.  Before
+        warm-up (or with no positive observation yet) the forecast is
+        meaningless, so the last observation stands in: the proactive rule
+        then degenerates to the reactive one instead of acting on noise."""
+        if not self._model.warmed_up or self._last <= 0:
+            return self._last
+        return float(np.max(self.forecast()))

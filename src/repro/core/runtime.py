@@ -28,6 +28,21 @@ Phase 3 runs in two shapes:
     across all live lanes.  This vectorizes Phase-3 *evaluation* the way
     ``BatchedDeployment`` vectorized Phase-2 profiling — day-scale E1/E2
     controlled runs no longer tick the scalar engine lane by lane.
+    ``lane_cfgs`` gives selected lanes their own ``KhaosConfig`` so e.g.
+    proactive and reactive controllers run as lanes of ONE campaign.
+
+Phase 3 also carries the *mitigation ladder* for gray failures — the
+degradations of ``ft.failures`` that slow a job without killing it:
+
+  rung 1  ``attach_anomaly_detector`` + ``observe_metrics``: a sustained
+          anomaly on the supervised metrics (the QoS models no longer
+          describe the degraded cluster) triggers ``reprofile()`` — a
+          legal re-entry into Phase 2 that re-runs the chaos campaign,
+          refits M_L/M_R and swaps them onto every live controller;
+  rung 2  ``attach_straggler_detector`` + ``observe_host_steps``: a host
+          flagged as a persistent straggler escalates to an elastic
+          recovery plan (``ft.elastic.plan_recovery`` — replace from hot
+          standbys, else rescale down), recorded in ``mitigations``.
 """
 from __future__ import annotations
 
@@ -94,6 +109,18 @@ class KhaosRuntime:
         self.m_r: Optional[QoSModel] = None
         self.controller: Optional[KhaosController] = None
         self.job: Optional[JobHandle] = None
+        # mitigation ladder (gray failures): optional attachments
+        self.anomaly: Optional[Any] = None
+        self.anomaly_lane: int = 0
+        self.straggler: Optional[Any] = None
+        self.mesh: Optional[Any] = None
+        self.standbys: int = 0
+        self.chips_per_host: int = 4
+        self.global_batch: Optional[int] = None
+        self.mitigations: list = []          # (t, kind, info) escalations
+        self._reprofile_source: Optional[tuple] = None
+        self._reprofiled_episode = False     # one reprofile per anomaly
+        self._active_controllers: list = []  # model-swap targets
 
     # -- phase machinery ----------------------------------------------------
     def _transition(self, to: str, **info) -> None:
@@ -184,10 +211,11 @@ class KhaosRuntime:
         self.m_l, self.m_r = m_l, m_r
 
     # -- Phase 3: runtime optimization (§III-D) ------------------------------
-    def _make_controller(self) -> KhaosController:
+    def _make_controller(self, cfg: Optional[KhaosConfig] = None
+                         ) -> KhaosController:
         assert self.m_l is not None and self.m_r is not None
-        return KhaosController(cfg=self.cfg, m_l=self.m_l, m_r=self.m_r,
-                               cost=self.cost,
+        return KhaosController(cfg=cfg or self.cfg, m_l=self.m_l,
+                               m_r=self.m_r, cost=self.cost,
                                plan_variants=self.plan_variants,
                                mtbf_s=self.mtbf_s)
 
@@ -208,6 +236,7 @@ class KhaosRuntime:
             raise TypeError(f"{type(job).__name__} does not implement the "
                             f"JobHandle protocol: missing {missing}")
         self.controller = self._make_controller()
+        self._active_controllers = [self.controller]
         self.job = job
         self._transition("optimizing", handle=type(job).__name__)
         return self.controller
@@ -219,10 +248,112 @@ class KhaosRuntime:
             raise PhaseError("step requires attach() (Phase 3)")
         return self.controller.maybe_optimize(self.job)
 
+    # -- Phase 3, mitigation ladder (gray failures) ---------------------------
+    def attach_anomaly_detector(self, detector, lane: int = 0) -> None:
+        """Arm rung 1: ``detector`` (``core.anomaly.AnomalyDetector``) is
+        fed by ``observe_metrics`` — directly or, under ``drive_campaign``,
+        from the supervised lane ``lane`` at every chunk boundary.  Its
+        metric names must come from {"throughput", "latency"} on the
+        campaign path (those are the observables a lane exposes)."""
+        self.anomaly = detector
+        self.anomaly_lane = lane
+
+    def attach_straggler_detector(self, detector, mesh=None, standbys: int = 0,
+                                  chips_per_host: int = 4,
+                                  global_batch: Optional[int] = None) -> None:
+        """Arm rung 2: ``detector`` (``ft.straggler.StragglerDetector``)
+        is fed by ``observe_host_steps``; a newly-flagged host escalates
+        to ``ft.elastic.plan_recovery`` against ``mesh``/``standbys``
+        (escalation is recorded but not actuated when ``mesh`` is None)."""
+        self.straggler = detector
+        self.mesh = mesh
+        self.standbys = standbys
+        self.chips_per_host = chips_per_host
+        self.global_batch = global_batch
+
+    def enable_reprofiling(self, deployment, ci_values=None) -> None:
+        """Store the chaos-campaign substrate ``reprofile()`` re-runs when
+        the anomaly rung fires (same contract as ``run_profiling``)."""
+        self._reprofile_source = (deployment, ci_values)
+
+    def reprofile(self, deployment=None, ci_values=None,
+                  reason: str = "anomaly") -> ProfilingResult:
+        """Anomaly-triggered re-entry into Phase 2: the QoS models no
+        longer describe the (degraded) cluster, so re-run the chaos
+        campaign, refit M_L/M_R and swap the fresh models onto every live
+        controller.  Legal only from ``optimizing``; the detour is logged
+        as a ``reprofile`` event so ``phase_log`` stays truthful, then the
+        machine re-walks steady_state -> profiled -> optimizing."""
+        if self.phase != "optimizing":
+            raise PhaseError("reprofile is a Phase-3 mitigation and "
+                             "requires phase 'optimizing'")
+        if self.steady is None:
+            raise PhaseError("reprofile requires a recorded steady state "
+                             "(install_models skipped Phase 1)")
+        if deployment is None:
+            if self._reprofile_source is None:
+                raise PhaseError("reprofile needs a deployment: pass one "
+                                 "or call enable_reprofiling first")
+            deployment, ci_values = self._reprofile_source
+        self.phase_log.append(PhaseEvent("reprofile", {"reason": reason}))
+        self.phase = "steady_state"
+        prof = self.run_profiling(deployment, ci_values=ci_values)
+        self._transition("optimizing", handle="reprofile", reason=reason)
+        for ctl in self._active_controllers:
+            ctl.m_l, ctl.m_r = self.m_l, self.m_r
+        return prof
+
+    def observe_metrics(self, t: float, values: dict,
+                        healthy: bool = True) -> bool:
+        """Rung 1 feed: one supervised-metrics sample for the anomaly
+        detector (``healthy=False`` freezes learning so a failure is not
+        learned as normal).  The FIRST observation of a sustained anomaly
+        triggers ``reprofile()`` — once per anomaly episode, and only when
+        a reprofiling substrate is armed.  Returns True when it fired."""
+        if self.anomaly is None:
+            return False
+        anomalous = self.anomaly.observe(t, values, learn=healthy)
+        if not anomalous:
+            self._reprofiled_episode = False
+            return False
+        if (self._reprofiled_episode or self._reprofile_source is None
+                or self.phase != "optimizing"):
+            return False
+        self._reprofiled_episode = True
+        self.mitigations.append((t, "reprofile", {"reason": "anomaly"}))
+        self.reprofile(reason="anomaly")
+        return True
+
+    def observe_host_steps(self, t: float, host_step_times: dict) -> list:
+        """Rung 2 feed: per-host step times for the straggler detector.
+        Every host it newly flags escalates to an elastic recovery plan —
+        replace it from hot standbys when any remain, else rescale down —
+        appended to ``mitigations``.  Returns the plans (None entries when
+        no mesh was attached to plan against)."""
+        if self.straggler is None:
+            return []
+        plans = []
+        for host in self.straggler.observe_step(t, host_step_times):
+            plan = None
+            if self.mesh is not None:
+                from repro.ft.elastic import plan_recovery   # local: core
+                # must stay importable without the ft package loaded first
+                plan = plan_recovery(self.mesh, hosts_lost=1,
+                                     standbys=self.standbys,
+                                     chips_per_host=self.chips_per_host,
+                                     global_batch=self.global_batch)
+                self.standbys = plan.standbys_left
+                self.mesh = plan.mesh
+            self.mitigations.append((t, "straggler_evict",
+                                     {"host": host, "plan": plan}))
+            plans.append(plan)
+        return plans
+
     # -- Phase 3, vectorized: controller-in-the-loop campaigns ---------------
     def drive_campaign(self, campaign,
                        lanes: Optional[Sequence[int]] = None,
-                       period_ticks: Optional[int] = None
+                       period_ticks: Optional[int] = None,
+                       lane_cfgs: Optional[dict] = None
                        ) -> "CampaignSupervision":
         """Run Phase 3 across every lane of a ``sim.BatchedCampaign``.
 
@@ -238,6 +369,14 @@ class KhaosRuntime:
         scalar decision clock exactly (bit-exact per lane, at more
         Python overhead per tick).  Requires the campaign to record
         history (the handles' latency windows read it).
+
+        ``lane_cfgs`` maps lane id -> ``KhaosConfig`` override for that
+        lane's controller (lanes absent from the map use the runtime's
+        config) — the head-to-head harness: proactive vs reactive
+        controllers supervising twin lanes of the SAME campaign.  When an
+        anomaly detector is attached, the supervised lane's metrics are
+        fed to it at every chunk boundary and a sustained anomaly fires
+        the reprofile rung mid-campaign.
         """
         if self.phase not in ("profiled", "optimizing"):
             raise PhaseError("drive_campaign requires Phase 2 to have "
@@ -247,7 +386,9 @@ class KhaosRuntime:
         lane_ids = list(range(campaign.n_lanes)) if lanes is None \
             else list(lanes)
         handles = [BatchedLaneHandle(campaign, i) for i in lane_ids]
-        controllers = [self._make_controller() for _ in lane_ids]
+        controllers = [self._make_controller((lane_cfgs or {}).get(i))
+                       for i in lane_ids]
+        self._active_controllers = list(controllers)
         period = max(1, int(period_ticks if period_ticks is not None
                             else round(self.cfg.optimization_period)))
         if self.phase == "profiled":
@@ -260,6 +401,8 @@ class KhaosRuntime:
             preds = self._shared_predictions(live)
             for (ctl, h), pred in zip(live, preds):
                 ctl.maybe_optimize(h, shared_pred=pred)
+            if self.anomaly is not None:
+                self._feed_campaign_anomaly(handles, lane_ids)
         # the scalar loop polls once more after its final tick (alive()
         # is already False there, so the in-loop polls skip it); actuation
         # on a finished lane is as inert as the scalar's post-loop one
@@ -267,6 +410,20 @@ class KhaosRuntime:
         for (ctl, h), pred in zip(pairs, self._shared_predictions(pairs)):
             ctl.maybe_optimize(h, shared_pred=pred)
         return CampaignSupervision(campaign, lane_ids, handles, controllers)
+
+    def _feed_campaign_anomaly(self, handles, lane_ids) -> None:
+        """One anomaly-detector sample from the supervised lane's trailing
+        window (skipped while the window is empty or the lane finished)."""
+        if self.anomaly_lane not in lane_ids:
+            return
+        h = handles[lane_ids.index(self.anomaly_lane)]
+        tr = h.avg_throughput(self.cfg.optimization_period)
+        lat = h.avg_latency(self.cfg.optimization_period)
+        if not (np.isfinite(tr) and np.isfinite(lat)):
+            return
+        vals = {m: {"throughput": tr, "latency": lat}[m]
+                for m in self.anomaly.metrics}
+        self.observe_metrics(h.now(), vals, healthy=h.healthy())
 
     def _shared_predictions(self, pairs: Sequence[tuple]) -> list:
         """One ``QoSModel.predict`` over ALL lanes' (CI, TR) vectors per
@@ -276,16 +433,17 @@ class KhaosRuntime:
         prediction site are evaluated (the gating predicates below mirror
         its early exits exactly), and ``QoSModel.predict`` is
         row-independent, so per-lane Decisions are BIT-identical to the
-        per-lane evaluation loop (asserted in tests)."""
-        window = self.cfg.optimization_period
+        per-lane evaluation loop (asserted in tests).  Gating reads each
+        controller's OWN config (``lane_cfgs`` lanes may differ from the
+        runtime's)."""
         rows: list[tuple[int, float, float]] = []
         for i, (ctl, h) in enumerate(pairs):
-            if h.now() - ctl._last_opt_t < self.cfg.optimization_period:
+            if h.now() - ctl._last_opt_t < ctl.cfg.optimization_period:
                 continue                      # not due: returns None
             if not h.healthy():
                 continue                      # "unhealthy" decision
-            lat = h.avg_latency(window)
-            tr = h.avg_throughput(window)
+            lat = h.avg_latency(ctl.cfg.optimization_period)
+            tr = h.avg_throughput(ctl.cfg.optimization_period)
             if not (np.isfinite(lat) and np.isfinite(tr)):
                 continue                      # empty-window "none" decision
             rows.append((i, h.current_ci(), tr))

@@ -1,11 +1,14 @@
-from repro.ft.failures import FailureModel, FailureInjector, InjectedFailure
+from repro.ft.failures import (CRASH_KINDS, DEGRADATION_KINDS, DIRECTIONS,
+                               KINDS, Degradation, FailureModel,
+                               FailureInjector, InjectedFailure, jitter_phase)
 from repro.ft.detector import HeartbeatDetector
 from repro.ft.elastic import (plan_recovery, plan_rescale, RecoveryPlan,
                               RescalePlan)
 from repro.ft.straggler import StragglerDetector
 
 __all__ = [
-    "FailureModel", "FailureInjector", "InjectedFailure",
-    "HeartbeatDetector", "plan_recovery", "plan_rescale", "RecoveryPlan",
-    "RescalePlan", "StragglerDetector",
+    "CRASH_KINDS", "DEGRADATION_KINDS", "DIRECTIONS", "KINDS",
+    "Degradation", "FailureModel", "FailureInjector", "InjectedFailure",
+    "jitter_phase", "HeartbeatDetector", "plan_recovery", "plan_rescale",
+    "RecoveryPlan", "RescalePlan", "StragglerDetector",
 ]

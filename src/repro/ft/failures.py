@@ -1,12 +1,43 @@
-"""Failure models and injection (the chaos in Khaos).
+"""Failure taxonomy and injection (the chaos in Khaos).
 
-* ``FailureModel`` samples node failures from exponential (Poisson process)
+The vocabulary splits into two families with different semantics:
+
+**Crashes** (``CRASH_KINDS`` — task/node/cluster) kill the job: detect →
+restart → restore from the newest surviving checkpoint level → offset
+rollback → catch-up.  What survives is placement- and replication-derived
+(a node crash takes its local disk with it unless the level is peer-
+replicated), so the *kind* decides the restore path and its price.
+
+**Degradations** (``DEGRADATION_KINDS``) are gray failures: the job stays
+up but its dynamics bend — real DSP deployments degrade before they die.
+
+* ``net_delay`` — mean network delay + jitter, DIRECTIONAL: injected
+  ``to_source`` it sits on the source→job path and inflates end-to-end
+  latency; injected ``to_ckpt_store`` it sits under the checkpoint
+  barrier and stretches every trigger's write duration (longer sync
+  pauses, staler completed offsets).
+* ``straggler`` — one host's step time inflated by a factor for a window;
+  under a synchronous barrier the slowest host gates everyone, so
+  effective capacity drops by the cost model's barrier fraction.
+* ``backpressure`` — checkpoint barriers/triggers are delayed past their
+  cadence slot (a backpressured source cannot propagate the barrier), so
+  the checkpoint is taken too late and the NEXT crash replays extra work.
+
+Both families share one closed ``KINDS`` set: ``FailureModel`` and the
+injectors validate against it and raise on unknowns (mirroring
+``core.controller.Decision.KINDS``) instead of accepting any string.
+
+* ``FailureModel`` samples failures from exponential (Poisson process)
   or Weibull (infant-mortality / wear-out) inter-arrival distributions —
   feeds both the simulator's background failures and MTBF estimates for
   the Young/Daly baseline.
 * ``FailureInjector`` implements the paper's worst-case injection: given
   the checkpoint schedule, a requested injection time is snapped to just
   before the *next checkpoint completes* (maximizing lost work, §III-C).
+* ``Degradation`` is the injectable gray-failure event, consumed by the
+  scalar simulator (``inject_degradation``), by campaign lanes
+  (``LaneSpec.degradations``), and by the live trainer
+  (``ResilientTrainer.inject_degradation_at``).
 """
 from __future__ import annotations
 
@@ -15,6 +46,53 @@ from dataclasses import dataclass, field
 from typing import Optional
 
 import numpy as np
+
+#: crashes: the job dies and restores from a checkpoint
+CRASH_KINDS = ("task", "node", "cluster")
+#: gray failures: the job stays up but its dynamics degrade
+DEGRADATION_KINDS = ("net_delay", "straggler", "backpressure")
+#: the closed failure vocabulary (validated everywhere, like Decision.KINDS)
+KINDS = CRASH_KINDS + DEGRADATION_KINDS
+
+#: directional injection targets for ``net_delay``
+DIRECTIONS = ("to_source", "to_ckpt_store")
+
+
+def jitter_phase(t, t0):
+    """Deterministic ±1 jitter phase: alternates each second of the
+    degradation window.  Elementwise on arrays and exact on scalars, so
+    the scalar simulator and the batched lanes price the same jittered
+    delay bit-for-bit (no RNG in the tick loop)."""
+    return np.where((t - t0) % 2.0 < 1.0, 1.0, -1.0)
+
+
+@dataclass
+class Degradation:
+    """One gray-failure window, starting at ``t`` for ``duration_s``.
+
+    ``severity`` is kind-specific: mean delay seconds (``net_delay``) or
+    the step-time inflation factor (``straggler``); ``backpressure`` only
+    needs the window (triggers are suppressed for its whole span).
+    ``direction`` applies to ``net_delay`` only; ``host`` optionally pins
+    a straggler to a concrete host for detector-facing drills.
+    """
+    t: float
+    kind: str
+    duration_s: float
+    severity: float = 0.0
+    jitter_s: float = 0.0
+    direction: str = "to_source"
+    host: Optional[int] = None
+
+    def __post_init__(self) -> None:
+        if self.kind not in DEGRADATION_KINDS:
+            raise ValueError(f"unknown degradation kind {self.kind!r}; "
+                             f"expected one of {DEGRADATION_KINDS}")
+        if self.direction not in DIRECTIONS:
+            raise ValueError(f"unknown direction {self.direction!r}; "
+                             f"expected one of {DIRECTIONS}")
+        if self.duration_s <= 0:
+            raise ValueError("degradation window must have duration_s > 0")
 
 
 class InjectedFailure(RuntimeError):
@@ -25,6 +103,10 @@ class InjectedFailure(RuntimeError):
 
     def __init__(self, kind: str = "node", host: Optional[int] = None,
                  t: float = 0.0):
+        if kind not in CRASH_KINDS:
+            raise ValueError(f"unknown crash kind {kind!r}; expected one of "
+                             f"{CRASH_KINDS} (degradations are Degradation "
+                             f"windows, not raised failures)")
         where = "" if host is None else f" on host {host}"
         super().__init__(f"injected {kind} failure{where} at t={t:.1f}")
         self.kind = kind
@@ -42,6 +124,10 @@ class FailureModel:
     kinds: tuple = (("task", 0.3), ("node", 0.65), ("cluster", 0.05))
 
     def __post_init__(self) -> None:
+        for kind, _w in self.kinds:
+            if kind not in KINDS:
+                raise ValueError(f"unknown failure kind {kind!r}; expected "
+                                 f"one of {KINDS}")
         self._rng = np.random.default_rng(self.seed)
 
     @property
@@ -107,6 +193,9 @@ class FailureInjector:
         placement — ``host``'s node-local files (its primary shards and
         the replicas it held) die with it, so the restore that follows
         exercises the degraded-partial path, not a free local read."""
+        if kind not in CRASH_KINDS:
+            raise ValueError(f"unknown crash kind {kind!r}; expected one of "
+                             f"{CRASH_KINDS}")
         t = self.worst_case_time(requested_t, last_ckpt_t, interval_s,
                                  ckpt_cost_s)
         self.log[-1].update({"kind": kind, "host": host})

@@ -26,7 +26,12 @@ class StragglerDetector:
     def observe_step(self, t: float, host_step_times: dict) -> list[int]:
         """Feed per-host step times for one step; returns hosts flagged."""
         times = sorted(host_step_times.values())
-        median = times[len(times) // 2]
+        mid = len(times) // 2
+        # true median: averaging the middle pair matters for even host
+        # counts — taking the upper element would compare every host in a
+        # 2-host cluster against the SLOWER one, hiding the straggler
+        median = times[mid] if len(times) % 2 else \
+            0.5 * (times[mid - 1] + times[mid])
         newly = []
         for host, st in host_step_times.items():
             model = self._models.setdefault(host, OnlineARIMA(p=6, d=0, lr=0.1))

@@ -6,6 +6,8 @@ train_step -> the unified checkpoint plane (one ``CheckpointManager``
 executing a ``CheckpointPlan``: full or delta encoding, memory/local/remote
 level routing, sync or async commit — atomically committed WITH the stream
 cursor for exactly-once) -> failure injection + failure-kind-aware restore
+(plus gray-failure *degradation* windows — straggler / net_delay /
+backpressure — that slow or starve the job without killing it)
 -> metrics -> the Khaos controller via ``TrainerJobHandle``.
 
 ``TrainerJobHandle`` implements the FULL ``core.controller.JobHandle``
@@ -36,7 +38,7 @@ from repro.config import CheckpointPlan, ModelConfig, OptimizerConfig
 from repro.config import replace as cfg_replace
 from repro.data.pipeline import StreamingBatcher
 from repro.data.stream import EventStream
-from repro.ft.failures import InjectedFailure
+from repro.ft.failures import Degradation, InjectedFailure, jitter_phase
 from repro.metrics import MetricsStore
 from repro.models import zoo
 from repro.optim import make_optimizer
@@ -95,10 +97,26 @@ class ResilientTrainer:
         self.step_fn = self.step_fn.lower(state_struct, specs).compile()
         self.t = 0.0                       # virtual clock (seconds)
         self.failure_schedule: list[float] = []
+        self.degradation_schedule: list[Degradation] = []
         self.events: list[dict] = []
         self.losses: list[float] = []
         self._measured_step_s: Optional[float] = None
         self._unhealthy_until = -1.0       # post-restore observation grace
+        # active gray-failure windows (mirrors the simulator's dynamics on
+        # the virtual clock: ft/failures.py "How degradations act")
+        self._dg_step_factor = 1.0         # straggler: virtual step time x
+        self._dg_step_until = -np.inf
+        self._dg_ck_delay = 0.0            # net_delay to_ckpt_store: extra
+        self._dg_ck_jitter = 0.0           # blocking seconds per trigger
+        self._dg_ck_t0 = 0.0
+        self._dg_ck_until = -np.inf
+        self._dg_lat_delay = 0.0           # net_delay to_source: latency
+        self._dg_lat_jitter = 0.0          # metric penalty
+        self._dg_lat_t0 = 0.0
+        self._dg_lat_until = -np.inf
+        self._dg_bp_until = -np.inf        # backpressure: triggers held
+        self._bp_last_slot = -np.inf
+        self.bp_suppressed = 0
 
     # ------------------------------------------------------------------
     def inject_failure_at(self, t: float, kind: str = "node",
@@ -110,6 +128,39 @@ class ResilientTrainer:
         semantics (the node's disk survives)."""
         self.failure_schedule.append((t, kind, host))
         self.failure_schedule.sort(key=lambda f: f[0])
+
+    def inject_degradation_at(self, t: float, kind: str, duration_s: float,
+                              severity: float = 0.0, jitter_s: float = 0.0,
+                              direction: str = "to_source",
+                              host: Optional[int] = None) -> None:
+        """Schedule a gray failure (``ft.failures.Degradation`` kinds):
+        ``straggler`` inflates virtual step time by ``severity`` for the
+        window, ``net_delay``/``to_ckpt_store`` adds blocking seconds to
+        every checkpoint trigger, ``net_delay``/``to_source`` inflates the
+        latency metric, ``backpressure`` holds triggers past their cadence
+        slot (the manager's late-save accounting prices the slip).  The
+        job never crashes — that is the point."""
+        self.degradation_schedule.append(
+            Degradation(t, kind, duration_s, severity, jitter_s, direction,
+                        host))
+        self.degradation_schedule.sort(key=lambda d: d.t)
+
+    def _begin_degradation(self, d: Degradation) -> None:
+        until = d.t + d.duration_s
+        if d.kind == "straggler":
+            self._dg_step_factor = max(d.severity, 1.0)
+            self._dg_step_until = until
+        elif d.kind == "net_delay" and d.direction == "to_ckpt_store":
+            self._dg_ck_delay, self._dg_ck_jitter = d.severity, d.jitter_s
+            self._dg_ck_t0, self._dg_ck_until = d.t, until
+        elif d.kind == "net_delay":
+            self._dg_lat_delay, self._dg_lat_jitter = d.severity, d.jitter_s
+            self._dg_lat_t0, self._dg_lat_until = d.t, until
+        else:                              # backpressure
+            self._dg_bp_until = until
+        self.events.append({"t": self.t, "event": "degradation",
+                            "kind": d.kind, "direction": d.direction,
+                            "host": d.host, "until": until})
 
     def healthy(self) -> bool:
         """False during the post-failure grace window, while latency/lag
@@ -223,11 +274,30 @@ class ResilientTrainer:
             if self.failure_schedule and self.t >= self.failure_schedule[0][0]:
                 _, kind, host = self.failure_schedule.pop(0)
                 raise InjectedFailure(kind=kind, host=host, t=self.t)
+            while (self.degradation_schedule
+                   and self.t >= self.degradation_schedule[0].t):
+                self._begin_degradation(self.degradation_schedule.pop(0))
+            if self.t >= self._dg_step_until:
+                self._dg_step_factor = 1.0
             self.stream.produce_until(self.t)
             if self.policy.due(self.t):
-                # only the blocking part (sync write, or async snapshot)
-                # advances the virtual job clock
-                self.t += self._checkpoint() * self.tcfg.time_scale
+                if self.t < self._dg_bp_until:
+                    # backpressure: the barrier can't complete — hold the
+                    # trigger, counting each missed cadence slot once
+                    slot = self.policy.next_due(self.t)
+                    if slot != self._bp_last_slot:
+                        self._bp_last_slot = slot
+                        self.bp_suppressed += 1
+                        self.events.append({"t": self.t,
+                                            "event": "backpressure_skip"})
+                else:
+                    # only the blocking part (sync write, or async snapshot)
+                    # advances the virtual job clock
+                    blocking = self._checkpoint()
+                    if self.t < self._dg_ck_until:
+                        blocking += self._dg_ck_delay + self._dg_ck_jitter \
+                            * float(jitter_phase(self.t, self._dg_ck_t0))
+                    self.t += blocking * self.tcfg.time_scale
             batch = self.batcher.next_batch()
             if batch is None:
                 self.t += 0.05        # idle: stream underrun
@@ -239,14 +309,20 @@ class ResilientTrainer:
             loss = float(metrics["loss"])
             wall = time.monotonic() - w0
             self._measured_step_s = wall
-            self.t += wall * self.tcfg.time_scale
+            # a straggler window inflates the virtual step time — the job
+            # runs slower without any failure event firing (gray, not dead)
+            step_s = wall * self._dg_step_factor
+            self.t += step_s * self.tcfg.time_scale
             self.losses.append(loss)
             self.metrics.record("loss", self.t, loss)
-            self.metrics.record("step_time", self.t, wall)
+            self.metrics.record("step_time", self.t, step_s)
             self.metrics.record("consumer_lag", self.t, self.stream.lag)
             self.metrics.record("arrival_rate", self.t,
                                 self.stream.rate_at(self.t))
-            lat = self.stream.lag / max(self.tcfg.batch / max(wall * self.tcfg.time_scale, 1e-6), 1e-9)
+            lat = self.stream.lag / max(self.tcfg.batch / max(step_s * self.tcfg.time_scale, 1e-6), 1e-9)
+            if self.t < self._dg_lat_until:
+                lat += self._dg_lat_delay + self._dg_lat_jitter \
+                    * float(jitter_phase(self.t, self._dg_lat_t0))
             self.metrics.record("latency", self.t, lat)
             if on_second is not None:
                 on_second({"t": self.t, "loss": loss, "lag": self.stream.lag})
@@ -261,6 +337,9 @@ class ResilientTrainer:
             "checkpoints": sum(1 for e in self.events if e["event"] == "checkpoint"),
             "failures": sum(1 for e in self.events if e["event"] == "failure"),
             "restores": sum(1 for e in self.events if e["event"] == "restore"),
+            "degradations": sum(1 for e in self.events
+                                if e["event"] == "degradation"),
+            "bp_suppressed": self.bp_suppressed,
             "plan_switches": sum(1 for e in self.events if e["event"] == "set_plan"),
             "measured_step_s": self._measured_step_s,
             "ckpt_stats": self.ckpt.stats(),

@@ -42,7 +42,7 @@ fixed-seed lanes stay bit-exact against their scalar twins.
 
 ``benchmarks/bench_recovery.py`` measures the engine (lane-ticks/s vs the
 scalar loop) and emits the ``BENCH_sim.json`` artifact (schema
-"bench_sim/1").
+"bench_sim/2").
 """
 from __future__ import annotations
 
@@ -54,7 +54,8 @@ import numpy as np
 
 from repro.config import CheckpointPlan
 from repro.data.stream import (RateSchedule, WorkloadRecording, dense_rates)
-from repro.ft.failures import FailureInjector
+from repro.ft.failures import (DEGRADATION_KINDS, DIRECTIONS, Degradation,
+                               FailureInjector, jitter_phase)
 from repro.sim.costmodel import SimCostModel
 
 #: fixed level order; column index == level, ordered fastest-restore first
@@ -62,6 +63,11 @@ from repro.sim.costmodel import SimCostModel
 LEVELS = ("memory", "local", "remote")
 KINDS = ("task", "node", "cluster")
 _KIND_ID = {k: i for i, k in enumerate(KINDS)}
+# gray failures ride a separate event stream: they never touch the
+# wipe/survival/restore tables (the job stays up), they bend the tick
+# dynamics through per-lane window state instead
+_DEG_ID = {k: i for i, k in enumerate(DEGRADATION_KINDS)}
+_DIR_ID = {d: i for i, d in enumerate(DIRECTIONS)}
 # NOTE: the per-kind wipe/survival/restore tables are PER PLAN now — the
 # replication factor decides whether a node failure takes the local level
 # with it — so they live in ``_PlanTable`` (built from the same
@@ -84,6 +90,7 @@ class LaneSpec:
     t0: float = 0.0
     plan: Optional[CheckpointPlan] = None
     failures: Sequence[tuple[float, str]] = ()
+    degradations: Sequence[Degradation] = ()
     tag: Optional[dict] = None
 
     def resolved_plan(self, cost: SimCostModel) -> CheckpointPlan:
@@ -243,8 +250,50 @@ class BatchedCampaign:
         self.fptr = np.zeros(N, dtype=np.int64)
         self._next_fail = self.fail_t[:, 0].copy()   # fail_t[i, fptr[i]] cache
 
+        # -- gray-failure injections: per-lane event queues + window state --
+        # (mirrors StreamSimulator.degradations / dg_* scalars exactly)
+        D = max(1, max((len(l.degradations) for l in self.lanes), default=1))
+        self.deg_t = np.full((N, D), np.inf)
+        self.deg_kind = np.zeros((N, D), dtype=np.int64)
+        self.deg_dur = np.zeros((N, D))
+        self.deg_sev = np.zeros((N, D))
+        self.deg_jit = np.zeros((N, D))
+        self.deg_dir = np.zeros((N, D), dtype=np.int64)
+        self._n_deg = D
+        for i, l in enumerate(self.lanes):
+            for j, d in enumerate(sorted(l.degradations, key=lambda d: d.t)):
+                self.deg_t[i, j] = d.t
+                self.deg_kind[i, j] = _DEG_ID[d.kind]
+                self.deg_dur[i, j] = d.duration_s
+                self.deg_sev[i, j] = d.severity
+                self.deg_jit[i, j] = d.jitter_s
+                self.deg_dir[i, j] = _DIR_ID[d.direction]
+        self.dptr = np.zeros(N, dtype=np.int64)
+        self._next_deg = self.deg_t[:, 0].copy()
+        self._any_deg = bool(np.isfinite(self.deg_t).any())
+        self.dg_cap_scale = np.ones(N)
+        self.dg_cap_until = np.full(N, -np.inf)
+        self.dg_ck_delay = np.zeros(N)
+        self.dg_ck_jitter = np.zeros(N)
+        self.dg_ck_t0 = np.zeros(N)
+        self.dg_ck_until = np.full(N, -np.inf)
+        self.dg_lat_delay = np.zeros(N)
+        self.dg_lat_jitter = np.zeros(N)
+        self.dg_lat_t0 = np.zeros(N)
+        self.dg_lat_until = np.full(N, -np.inf)
+        self.dg_bp_until = np.full(N, -np.inf)
+        self.bp_suppressed = np.zeros(N, dtype=np.int64)
+
         self.record_history = record_history
         self._lag_hist_tm = np.zeros((T, N)) if record_history else None
+        # to-source net delay inflates reported latency without touching
+        # lag; its per-tick penalty needs its own history column so the
+        # derived latency_history stays exact (allocated only when a lane
+        # actually carries one)
+        lat_deg = any(d.kind == "net_delay" and d.direction == "to_source"
+                      for l in self.lanes for d in l.degradations)
+        self._lat_extra_tm = np.zeros((T, N)) \
+            if (record_history and lat_deg) else None
         self._step_idx = 0
         # hoisted per-step constants
         self._mu_ck = np.where(
@@ -278,7 +327,13 @@ class BatchedCampaign:
                  "down", "down_until", "pending_ro", "steady_lag",
                  "af_active", "af_t0", "af_kind", "af_ci", "af_level",
                  "plan_id", "_period", "_sync", "_mu_ck",
-                 "fail_t", "fail_kind", "fptr", "_next_fail", "_had_fail")
+                 "fail_t", "fail_kind", "fptr", "_next_fail", "_had_fail",
+                 "deg_t", "deg_kind", "deg_dur", "deg_sev", "deg_jit",
+                 "deg_dir", "dptr", "_next_deg",
+                 "dg_cap_scale", "dg_cap_until", "dg_ck_delay",
+                 "dg_ck_jitter", "dg_ck_t0", "dg_ck_until", "dg_lat_delay",
+                 "dg_lat_jitter", "dg_lat_t0", "dg_lat_until",
+                 "dg_bp_until", "bp_suppressed")
 
     # -- compaction -----------------------------------------------------
     def _refresh_lane_cache(self) -> None:
@@ -292,9 +347,12 @@ class BatchedCampaign:
             return
         drop = self._step_idx >= self.lane_ticks          # past own horizon
         if self.early_exit:
-            # chaos resolved: every injection fired and recovered
+            # chaos resolved: every injection fired and recovered, no
+            # degradation pending or still bending capacity
             drop = drop | (self._had_fail & np.isinf(self._next_fail)
-                           & ~self.down & ~self.af_active)
+                           & ~self.down & ~self.af_active
+                           & np.isinf(self._next_deg)
+                           & (self.t >= self.dg_cap_until))
         nd = int(drop.sum())
         if nd == 0 or nd * 8 < drop.size:                 # amortize copies
             return
@@ -388,6 +446,40 @@ class BatchedCampaign:
         self.af_ci = np.where(act, self.interval, self.af_ci)
         self.af_level = np.where(act, np.where(has, lvl, -1), self.af_level)
 
+    def _begin_degradation(self, mask: np.ndarray, cur: np.ndarray) -> None:
+        """Vectorized StreamSimulator._begin_degradation for lanes in
+        ``mask``: activate each lane's current queued window (last-writer
+        semantics on overlap, exactly as the scalar's sorted pop)."""
+        ar = self._ar
+        kind = self.deg_kind[ar, cur]
+        ev_t = self.deg_t[ar, cur]
+        until = ev_t + self.deg_dur[ar, cur]
+        sev = self.deg_sev[ar, cur]
+        jit = self.deg_jit[ar, cur]
+        dirn = self.deg_dir[ar, cur]
+        m = mask & (kind == _DEG_ID["straggler"])
+        if m.any():
+            self.dg_cap_scale = np.where(
+                m, self.cost.straggler_capacity_scale(sev),
+                self.dg_cap_scale)
+            self.dg_cap_until = np.where(m, until, self.dg_cap_until)
+        nd = mask & (kind == _DEG_ID["net_delay"])
+        m = nd & (dirn == _DIR_ID["to_ckpt_store"])
+        if m.any():
+            self.dg_ck_delay = np.where(m, sev, self.dg_ck_delay)
+            self.dg_ck_jitter = np.where(m, jit, self.dg_ck_jitter)
+            self.dg_ck_t0 = np.where(m, ev_t, self.dg_ck_t0)
+            self.dg_ck_until = np.where(m, until, self.dg_ck_until)
+        m = nd & (dirn == _DIR_ID["to_source"])
+        if m.any():
+            self.dg_lat_delay = np.where(m, sev, self.dg_lat_delay)
+            self.dg_lat_jitter = np.where(m, jit, self.dg_lat_jitter)
+            self.dg_lat_t0 = np.where(m, ev_t, self.dg_lat_t0)
+            self.dg_lat_until = np.where(m, until, self.dg_lat_until)
+        m = mask & (kind == _DEG_ID["backpressure"])
+        if m.any():
+            self.dg_bp_until = np.where(m, until, self.dg_bp_until)
+
     def _step(self) -> None:
         k = self._step_idx
         all_alive = k < self._min_ticks
@@ -415,6 +507,22 @@ class BatchedCampaign:
                 nxt = np.minimum(self.fptr, self._n_fail - 1)
                 self._next_fail = np.where(
                     self.fptr < self._n_fail, self.fail_t[self._ar, nxt],
+                    np.inf)
+
+        # pending gray-failure windows (mirrors the scalar's second pop)
+        if self._any_deg:
+            while True:
+                pend = self._next_deg <= t
+                if not all_alive:
+                    pend &= alive
+                if not pend.any():
+                    break
+                cur = np.minimum(self.dptr, self._n_deg - 1)
+                self._begin_degradation(pend, cur)
+                self.dptr = np.where(pend, self.dptr + 1, self.dptr)
+                nxt = np.minimum(self.dptr, self._n_deg - 1)
+                self._next_deg = np.where(
+                    self.dptr < self._n_deg, self.deg_t[self._ar, nxt],
                     np.inf)
 
         down_any = self.down.any()
@@ -459,6 +567,13 @@ class BatchedCampaign:
             due = (t - self.pol_last >= self.interval) & ~self.ck_active
             if not up_all:
                 due &= up
+            if self._any_deg:
+                # backpressured lanes: the barrier cannot propagate, the
+                # trigger slips past its cadence slot (counted per lane)
+                bp = due & (t < self.dg_bp_until)
+                if bp.any():
+                    self.bp_suppressed += bp
+                    due &= ~bp
             di = np.flatnonzero(due)
             if di.size:
                 td = t[di]
@@ -466,15 +581,34 @@ class BatchedCampaign:
                 pid = self.plan_id[di]
                 idx = self.save_count[di] % self._period[di]
                 self.save_count[di] += 1
+                dur = self.table.trig_dur[pid, idx]
+                if self._any_deg:
+                    ckd = td < self.dg_ck_until[di]
+                    if ckd.any():
+                        # to-checkpoint-store net delay under the barrier
+                        dur = dur + np.where(
+                            ckd, self.cost.net_delay_barrier_penalty(
+                                self.dg_ck_delay[di], self.dg_ck_jitter[di],
+                                jitter_phase(td, self.dg_ck_t0[di])), 0.0)
                 # barrier semantics: snapshot the offset at start
-                self.ck_end[di] = td + self.table.trig_dur[pid, idx]
+                self.ck_end[di] = td + dur
                 self.ck_off[di] = self.consumed[di]
                 self.ck_lvls[di] = self.table.trig_lvls[pid, idx]
                 self.ck_active[di] = True
             # in-flight writes after both transitions == the scalar's
             # per-tick `checkpointing` flag
             checkpointing = self.ck_active if up_all else up & self.ck_active
-            mu = np.where(checkpointing, self._mu_ck, self.cost.capacity_eps)
+            if self._any_deg:
+                # straggler window expiry + capacity scale (x1.0 exact
+                # identity on undegraded lanes, matching the scalar)
+                reset = (t >= self.dg_cap_until) if up_all \
+                    else (up & (t >= self.dg_cap_until))
+                self.dg_cap_scale = np.where(reset, 1.0, self.dg_cap_scale)
+                mu = np.where(checkpointing, self._mu_ck,
+                              self.cost.capacity_eps) * self.dg_cap_scale
+            else:
+                mu = np.where(checkpointing, self._mu_ck,
+                              self.cost.capacity_eps)
             inflow = self.lag + lam
             if down_any or not all_alive:
                 processed = np.where(up, np.minimum(inflow, mu), 0.0)
@@ -491,6 +625,20 @@ class BatchedCampaign:
                 self._lag_hist_tm[k] = self.lag
             else:      # compacted: scatter into the full-width history row
                 self._lag_hist_tm[k, self._active] = self.lag
+        if self._lat_extra_tm is not None:
+            la = t < self.dg_lat_until
+            if not all_alive:
+                la &= alive
+            if la.any():
+                # to-source net delay: latency penalty recorded alongside
+                # lag (the scalar adds it to its per-tick latency metric)
+                pen = np.where(la, self.cost.net_delay_latency_penalty(
+                    self.dg_lat_delay, self.dg_lat_jitter,
+                    jitter_phase(t, self.dg_lat_t0)), 0.0)
+                if self._final is None:
+                    self._lat_extra_tm[k] = pen
+                else:
+                    self._lat_extra_tm[k, self._active] = pen
 
         # recovery bookkeeping (ground truth: lag back to steady envelope)
         if self.af_active.any():
@@ -585,7 +733,10 @@ class BatchedCampaign:
         assert self._lag_hist_tm is not None, \
             "campaign ran with record_history=False"
         steady_mu = max(self.cost.capacity_eps, 1e-9)
-        return self.cost.base_latency_s + self.lag_hist / steady_mu
+        lat = self.cost.base_latency_s + self.lag_hist / steady_mu
+        if self._lat_extra_tm is not None:
+            lat = lat + self._lat_extra_tm.T   # to-source net-delay penalty
+        return lat
 
     def lane_recovery(self, lane: int) -> Optional[float]:
         """First recorded recovery_s of ``lane`` (scalar: recoveries[0])."""
@@ -709,11 +860,15 @@ class BatchedLaneHandle:
 
     def avg_latency(self, window_s: float) -> float:
         camp = self.camp
-        lag = camp._lag_hist_tm[self._window(window_s), self.lane]
+        sl = self._window(window_s)
+        lag = camp._lag_hist_tm[sl, self.lane]
         if not lag.size:
             return float("nan")
         steady_mu = max(camp.cost.capacity_eps, 1e-9)
-        return float(np.mean(camp.cost.base_latency_s + lag / steady_mu))
+        vals = camp.cost.base_latency_s + lag / steady_mu
+        if camp._lat_extra_tm is not None:
+            vals = vals + camp._lat_extra_tm[sl, self.lane]
+        return float(np.mean(vals))
 
     def avg_throughput(self, window_s: float) -> float:
         lam = self.camp.lane_rates(self.lane)[self._window(window_s)]

@@ -31,6 +31,8 @@ import os
 from dataclasses import dataclass, fields
 from typing import Any, Optional, Union
 
+import numpy as np
+
 from repro.config import CheckpointPlan
 
 #: required keys of the BENCH_ckpt.json calibration artifact (written by
@@ -120,6 +122,18 @@ class SimCostModel:
     #    (1.0 = neutral: same duration as a healthy local restore)
     replica_push_factor: float = 0.0
     replica_restore_factor: float = 1.0
+
+    # 7) degradation pricing (gray failures, ft.failures.DEGRADATION_KINDS):
+    #    a straggler's inflated step time hits capacity through the
+    #    synchronous barrier — straggler_barrier_fraction is how much of
+    #    the pipeline the slowest host gates (1.0 = fully barriered, the
+    #    data-parallel default; 0.0 = fully decoupled, stragglers free);
+    #    net_delay_*_factor scale how much of a directional network delay
+    #    lands on the checkpoint barrier (to_ckpt_store) vs the reported
+    #    end-to-end latency (to_source)
+    straggler_barrier_fraction: float = 1.0
+    net_delay_store_factor: float = 1.0
+    net_delay_source_factor: float = 1.0
 
     def __post_init__(self) -> None:
         # the priced restore paths hang off the survival derivation in
@@ -213,6 +227,27 @@ class SimCostModel:
 
     def downtime_s(self) -> float:
         return self.detect_s + self.restart_s + self.restore_s
+
+    # -- degradation pricing (gray failures) --------------------------------
+    # Elementwise on arrays AND exact on scalars: the scalar simulator and
+    # the batched lanes call the same methods, so the priced effect is
+    # bit-identical in both engines (the parity invariant).
+    def straggler_capacity_scale(self, slow_factor):
+        """Capacity multiplier while one host runs ``slow_factor`` x slower:
+        under a barrier fraction f the effective step time inflates to
+        ``1 + f*(slow_factor - 1)`` of nominal."""
+        return 1.0 / (1.0 + self.straggler_barrier_fraction
+                      * (np.maximum(slow_factor, 1.0) - 1.0))
+
+    def net_delay_barrier_penalty(self, delay_s, jitter_s, phase):
+        """Extra seconds a to-checkpoint-store network delay adds to one
+        trigger's composite write (``phase`` = ±1 from ``jitter_phase``)."""
+        return self.net_delay_store_factor * delay_s + jitter_s * phase
+
+    def net_delay_latency_penalty(self, delay_s, jitter_s, phase):
+        """Extra end-to-end latency seconds a to-source network delay adds
+        at one tick (``phase`` = ±1 from ``jitter_phase``)."""
+        return self.net_delay_source_factor * delay_s + jitter_s * phase
 
     # -- per-kind / per-level pricing ---------------------------------------
     def write_duration(self, kind: str = "full", level: str = "local",

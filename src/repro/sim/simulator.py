@@ -33,7 +33,8 @@ from repro.checkpoint.policy import CheckpointPolicy
 from repro.config import CheckpointPlan
 from repro.core.anomaly import AnomalyDetector
 from repro.data.stream import RateSchedule, WorkloadRecording, dense_rates
-from repro.ft.failures import FailureInjector
+from repro.ft.failures import (CRASH_KINDS, Degradation, FailureInjector,
+                               jitter_phase)
 from repro.metrics import MetricsStore
 from repro.sim.costmodel import SimCostModel, levels_due
 
@@ -84,6 +85,25 @@ class StreamSimulator:
         self.recoveries: list[dict] = []
         self._active_failure: Optional[dict] = None
         self._steady_lag = 0.0
+        # gray-failure machinery (ft.failures.DEGRADATION_KINDS): pending
+        # windows plus the active-window state each kind bends —
+        # capacity scale (straggler), barrier-write penalty (net_delay
+        # to_ckpt_store), latency penalty (net_delay to_source), trigger
+        # suppression (backpressure).  The batched engine mirrors every
+        # field as a per-lane array with identical update order.
+        self.degradations: list[Degradation] = []
+        self.dg_cap_scale = 1.0
+        self.dg_cap_until = -np.inf
+        self.dg_ck_delay = 0.0
+        self.dg_ck_jitter = 0.0
+        self.dg_ck_t0 = 0.0
+        self.dg_ck_until = -np.inf
+        self.dg_lat_delay = 0.0
+        self.dg_lat_jitter = 0.0
+        self.dg_lat_t0 = 0.0
+        self.dg_lat_until = -np.inf
+        self.dg_bp_until = -np.inf
+        self.bp_suppressed = 0     # triggers delayed past their cadence slot
         # dense λ(t) buffer: the tick loop reads an array slot instead of
         # paying a Python call per tick (recordings resolve vectorized)
         self._rate_buf: Optional[np.ndarray] = None
@@ -115,8 +135,21 @@ class StreamSimulator:
         return lam
 
     def inject_failure(self, t: float, kind: str = "node") -> None:
+        if kind not in CRASH_KINDS:
+            raise ValueError(f"unknown crash kind {kind!r}; expected one of "
+                             f"{CRASH_KINDS} (use inject_degradation for "
+                             f"gray failures)")
         self.failures.append(FailureEvent(t, kind))
         self.failures.sort(key=lambda f: f.t)
+
+    def inject_degradation(self, t: float, kind: str, duration_s: float,
+                           severity: float = 0.0, jitter_s: float = 0.0,
+                           direction: str = "to_source") -> None:
+        """Schedule a gray-failure window (validated by ``Degradation``)."""
+        self.degradations.append(Degradation(
+            t=t, kind=kind, duration_s=duration_s, severity=severity,
+            jitter_s=jitter_s, direction=direction))
+        self.degradations.sort(key=lambda d: d.t)
 
     def set_ci(self, ci_s: float) -> None:
         """Hot CI change (TPU semantics) or controlled restart (Flink)."""
@@ -154,6 +187,9 @@ class StreamSimulator:
         while self.failures and self.failures[0].t <= t:
             ev = self.failures.pop(0)
             self._begin_failure(ev)
+        # pending gray-failure windows
+        while self.degradations and self.degradations[0].t <= t:
+            self._begin_degradation(self.degradations.pop(0))
 
         if self.down_until is not None:
             # job down: arrivals accumulate, nothing processed
@@ -187,23 +223,42 @@ class StreamSimulator:
             # checkpoint start: the levels due at this trigger index define
             # the composite write's duration (full vs delta, per level)
             if self.ckpt_in_progress is None and self.policy.due(t):
-                self.policy.mark(t)
-                due = levels_due(self.plan, self.save_count)
-                duration = max(cost.trigger_write_duration(self.plan,
-                                                           self.save_count),
-                               1e-3)
-                self.save_count += 1
-                # barrier semantics: snapshot the offset at start
-                self.ckpt_in_progress = (t + duration, self.consumed,
-                                         tuple(l for l, _ in due))
-                checkpointing = True
-            mu = cost.effective_capacity(checkpointing, sync=self.plan.sync)
+                if t < self.dg_bp_until:
+                    # backpressured source: the barrier cannot propagate,
+                    # the trigger slips past its cadence slot — lost work
+                    # at the next crash grows with the slip
+                    self.bp_suppressed += 1
+                else:
+                    self.policy.mark(t)
+                    due = levels_due(self.plan, self.save_count)
+                    duration = max(cost.trigger_write_duration(
+                        self.plan, self.save_count), 1e-3)
+                    if t < self.dg_ck_until:
+                        # to-checkpoint-store net delay under the barrier
+                        duration = duration + cost.net_delay_barrier_penalty(
+                            self.dg_ck_delay, self.dg_ck_jitter,
+                            jitter_phase(t, self.dg_ck_t0))
+                    self.save_count += 1
+                    # barrier semantics: snapshot the offset at start
+                    self.ckpt_in_progress = (t + duration, self.consumed,
+                                             tuple(l for l, _ in due))
+                    checkpointing = True
+            if t >= self.dg_cap_until:
+                self.dg_cap_scale = 1.0    # straggler window expired
+            mu = cost.effective_capacity(checkpointing, sync=self.plan.sync) \
+                * self.dg_cap_scale
             processed = min(self.lag + lam, mu)
             self.lag = max(0.0, self.lag + lam - processed)
             self.consumed += processed
 
         steady_mu = cost.capacity_eps
         latency = cost.base_latency_s + self.lag / max(steady_mu, 1e-9)
+        if t < self.dg_lat_until:
+            # to-source net delay sits on the source->job path: end-to-end
+            # latency inflates, lag does not (arrivals are offset-stamped)
+            latency = latency + cost.net_delay_latency_penalty(
+                self.dg_lat_delay, self.dg_lat_jitter,
+                jitter_phase(t, self.dg_lat_t0))
         self.metrics.record("throughput", t, processed)
         self.metrics.record("consumer_lag", t, self.lag)
         self.metrics.record("latency", t, latency)
@@ -223,6 +278,28 @@ class StreamSimulator:
         self.t += 1.0
         return {"t": t, "throughput": processed, "consumer_lag": self.lag,
                 "latency": latency, "arrival_rate": lam}
+
+    def _begin_degradation(self, d: Degradation) -> None:
+        """Activate one gray-failure window.  Overlapping windows of the
+        same kind: the newest wins (last-writer semantics, mirrored by the
+        batched engine's vectorized activation)."""
+        until = d.t + d.duration_s
+        if d.kind == "straggler":
+            self.dg_cap_scale = self.cost.straggler_capacity_scale(d.severity)
+            self.dg_cap_until = until
+        elif d.kind == "net_delay":
+            if d.direction == "to_ckpt_store":
+                self.dg_ck_delay = d.severity
+                self.dg_ck_jitter = d.jitter_s
+                self.dg_ck_t0 = d.t
+                self.dg_ck_until = until
+            else:
+                self.dg_lat_delay = d.severity
+                self.dg_lat_jitter = d.jitter_s
+                self.dg_lat_t0 = d.t
+                self.dg_lat_until = until
+        else:   # backpressure
+            self.dg_bp_until = until
 
     def _begin_failure(self, ev: FailureEvent) -> None:
         if self.down_until is not None:

@@ -9,7 +9,7 @@ from repro.core import (QoSModel, optimize_plan, run_profiling,
                         run_profiling_campaign, select_failure_points)
 from repro.data.stream import (constant_rate, dense_rates, diurnal_rate,
                                record_workload)
-from repro.ft.failures import FailureInjector
+from repro.ft.failures import Degradation, FailureInjector
 from repro.sim import (BatchedCampaign, BatchedDeployment, LaneSpec,
                        SimCostModel, SimDeployment, StreamSimulator,
                        make_plan_verifier)
@@ -272,6 +272,124 @@ def test_optimize_plan_simulate_to_verify():
         assert {"latency_s", "recovery_s", "objective", "feasible"} <= set(c.sim)
     # the chosen plan is one of the replayed shortlist
     assert res.plan.name in {c.plan.name for c in replayed} or res.plan is None
+
+
+DEGRADATIONS = {
+    "straggler": [Degradation(t=300.0, kind="straggler", duration_s=400.0,
+                              severity=1.8)],
+    "net_delay_source": [Degradation(t=250.0, kind="net_delay",
+                                     duration_s=500.0, severity=3.0,
+                                     jitter_s=0.8, direction="to_source")],
+    "net_delay_store": [Degradation(t=250.0, kind="net_delay",
+                                    duration_s=600.0, severity=4.0,
+                                    jitter_s=1.0,
+                                    direction="to_ckpt_store")],
+    "backpressure": [Degradation(t=200.0, kind="backpressure",
+                                 duration_s=150.0)],
+}
+
+
+def _scalar_degraded(ci, plan, degs, failures, t_end, sched):
+    sim = StreamSimulator(COST, ci_s=ci, schedule=sched, plan=plan)
+    for d in degs:
+        sim.inject_degradation(d.t, d.kind, d.duration_s, severity=d.severity,
+                               jitter_s=d.jitter_s, direction=d.direction)
+    for (ft, kind) in failures:
+        sim.inject_failure(ft, kind)
+    sim.run_until(t_end)
+    return sim
+
+
+def test_lane_matches_scalar_under_degradations():
+    """Bit-exact lane-vs-scalar parity for all three gray-failure kinds
+    (both net_delay directions), alone and composed with a crash, on a
+    real-valued diurnal λ(t): full lag AND latency trajectories, event
+    conservation, suppressed-trigger counts and recovery records."""
+    T = 2500
+    sched = diurnal_rate(base=2800, amplitude=0.5, period=5400, seed=7)
+    lanes, scalars = [], []
+    for ci in (30.0, 75.0):
+        for plan in (None, PLANS[3]):
+            for name, degs in DEGRADATIONS.items():
+                for failures in ((), ((_worst_case(ci) + 400.0, "node"),)):
+                    scalars.append(_scalar_degraded(ci, plan, degs,
+                                                    failures, T, sched))
+                    lanes.append(LaneSpec(
+                        rates=dense_rates(0.0, T, schedule=sched), ci_s=ci,
+                        plan=plan, failures=failures, degradations=degs,
+                        tag={"deg": name}))
+    camp = BatchedCampaign(COST, lanes).run()
+    lat_hist = camp.latency_history()
+    for i, sim in enumerate(scalars):
+        name = lanes[i].tag["deg"]
+        np.testing.assert_array_equal(
+            np.array(sim.metrics.series("consumer_lag").values),
+            camp.lag_hist[i], err_msg=f"lane {i} ({name}) lag diverged")
+        np.testing.assert_array_equal(
+            np.array(sim.metrics.series("latency").values),
+            lat_hist[i], err_msg=f"lane {i} ({name}) latency diverged")
+        assert camp.produced[i] == sim.produced
+        assert camp.consumed[i] == sim.consumed
+        assert camp.ckpt_count[i] == sim.ckpt_count
+        assert camp.bp_suppressed[i] == sim.bp_suppressed
+        rec = sim.recoveries[0]["recovery_s"] if sim.recoveries else None
+        assert camp.lane_recovery(i) == rec, f"lane {i} ({name}) recovery"
+
+
+def test_degradation_semantics_are_gray_not_crashes():
+    """Degradations bend dynamics without killing the job: a straggler
+    window builds lag then drains; backpressure suppresses triggers and
+    inflates lost work at the next crash; to-store delay stretches
+    checkpoints; to-source delay inflates latency but not lag."""
+    T = 2000
+    sched = constant_rate(3000.0)
+
+    base = _scalar_degraded(30.0, None, [], (), T, sched)
+    strag = _scalar_degraded(30.0, None, DEGRADATIONS["straggler"], (),
+                             T, sched)
+    assert not strag.recoveries and strag.down_until is None
+    # capacity dips below λ inside the window: lag peaks, then drains back
+    lag = np.array(strag.metrics.series("consumer_lag").values)
+    assert lag[300:700].max() > 100.0 and lag[-1] <= lag[300:700].max()
+    assert strag.ckpt_count > 0
+
+    bp = _scalar_degraded(30.0, None, DEGRADATIONS["backpressure"],
+                          ((340.0, "node"),), T, sched)
+    ref = _scalar_degraded(30.0, None, [], ((340.0, "node"),), T, sched)
+    assert bp.bp_suppressed > 0 and ref.bp_suppressed == 0
+    # the barrier slipped past its slot: fewer checkpoints, and the crash
+    # right after the window replays more work than the undegraded twin
+    assert bp.ckpt_count < ref.ckpt_count
+    assert bp.recoveries[0]["recovery_s"] > ref.recoveries[0]["recovery_s"]
+
+    store = _scalar_degraded(30.0, None, DEGRADATIONS["net_delay_store"], (),
+                             T, sched)
+    # stretched barrier writes: longer sync pauses build more lag inside
+    # the window than the undegraded twin
+    lag_store = np.array(store.metrics.series("consumer_lag").values)
+    lag_base = np.array(base.metrics.series("consumer_lag").values)
+    assert lag_store[260:860].mean() > lag_base[260:860].mean() * 1.5
+
+    src = _scalar_degraded(30.0, None, DEGRADATIONS["net_delay_source"], (),
+                           T, sched)
+    lat = np.array(src.metrics.series("latency").values)
+    lat0 = np.array(base.metrics.series("latency").values)
+    assert lat[260:740].mean() > lat0[260:740].mean() + 1.0
+    np.testing.assert_array_equal(
+        np.array(src.metrics.series("consumer_lag").values),
+        np.array(base.metrics.series("consumer_lag").values))
+
+
+def test_unknown_kind_rejected_everywhere():
+    """The closed-KINDS contract: unknown kinds raise at every entry."""
+    sim = StreamSimulator(COST, ci_s=30.0, schedule=constant_rate(100.0))
+    with pytest.raises(ValueError, match="unknown crash kind"):
+        sim.inject_failure(10.0, "gray_goo")
+    with pytest.raises(ValueError, match="unknown degradation kind"):
+        sim.inject_degradation(10.0, "node", 50.0)
+    with pytest.raises(ValueError, match="unknown direction"):
+        Degradation(t=0.0, kind="net_delay", duration_s=10.0,
+                    direction="sideways")
 
 
 def test_campaign_scales_to_large_grids():

@@ -85,6 +85,36 @@ def test_anomaly_detector_measures_disruption():
     assert (end - start) >= 55
 
 
+def test_anomaly_detector_recovery_interval_bookkeeping():
+    # the streak hysteresis and the (start, end) ledger, deterministically:
+    # an isolated spike shorter than min_anomaly_len opens nothing; a
+    # sustained excursion opens at the streak threshold and closes only
+    # after recovery_normal_len clean samples, recording the interval
+    # error_window=30: the cold-start predictions are ~0, so their relative
+    # errors are astronomical — a wide window would still hold them here and
+    # inflate the 3-sigma threshold beyond any real excursion
+    det = AnomalyDetector(metrics=("throughput",), min_anomaly_len=2,
+                          recovery_normal_len=3, error_window=30)
+    for t in range(60):
+        det.observe(float(t), {"throughput": 100.0})
+    assert det.warmed_up and not det.anomalous
+
+    det.observe(60.0, {"throughput": 1e4}, learn=False)   # single blip
+    for t in (61, 62, 63):
+        det.observe(float(t), {"throughput": 100.0})
+    assert not det.recoveries and not det.anomalous
+    assert det.last_recovery_time() is None
+
+    for t in (64, 65):                                     # sustained: opens
+        det.observe(float(t), {"throughput": 1e4}, learn=False)
+    assert det.anomalous
+    for t in (66, 67, 68):                                 # clean run: closes
+        det.observe(float(t), {"throughput": 100.0})
+    assert not det.anomalous
+    assert det.recoveries == [(65.0, 68.0)]
+    assert det.last_recovery_time() == 3.0
+
+
 def test_anomaly_detector_quiet_on_steady_stream():
     det = AnomalyDetector(threshold_sigma=5.0)
     rng = np.random.default_rng(1)
@@ -158,6 +188,36 @@ def test_forecaster_no_defer_on_stable_load():
     for t in range(400):
         f.observe(2000 + rng.normal(0, 10))
     assert not f.should_defer()
+
+
+def test_forecaster_cold_start_is_inert():
+    # before warm-up the forecast is meaningless: no deferral, and
+    # predicted_peak degenerates to the last observation so the proactive
+    # rule falls back to reactive behavior instead of acting on noise
+    f = WorkloadForecaster(horizon=5)
+    assert not f.warmed_up
+    assert not f.should_defer()
+    assert f.predicted_peak() == 0.0          # nothing observed yet
+    f.observe(1800.0)
+    assert not f.warmed_up
+    assert f.predicted_peak() == 1800.0
+    assert not f.should_defer()
+    # a warmed model fed only zeros still refuses to defer (_last <= 0)
+    z = WorkloadForecaster(horizon=5)
+    for _ in range(100):
+        z.observe(0.0)
+    assert z.warmed_up and not z.should_defer()
+    assert z.predicted_peak() == 0.0
+
+
+def test_forecaster_predicted_peak_leads_a_ramp():
+    f = WorkloadForecaster(horizon=5)
+    for t in range(400):
+        f.observe(1000.0 + 5.0 * t)
+    assert f.warmed_up
+    # on a rising ramp the peak within the horizon exceeds the last
+    # observation — that lead is what the proactive controller plans for
+    assert f.predicted_peak() > f._last
 
 
 # -- young/daly ----------------------------------------------------------------

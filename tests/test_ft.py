@@ -3,8 +3,9 @@ import numpy as np
 import pytest
 
 from repro.config import MeshConfig
-from repro.ft import (FailureInjector, FailureModel, HeartbeatDetector,
-                      StragglerDetector, plan_recovery, plan_rescale)
+from repro.ft import (Degradation, FailureInjector, FailureModel,
+                      HeartbeatDetector, InjectedFailure, StragglerDetector,
+                      plan_recovery, plan_rescale)
 
 
 def test_heartbeat_detector():
@@ -25,6 +26,24 @@ def test_failure_model_mtbf_statistics():
         gaps.append(nt - t)
         t = nt
     assert abs(np.mean(gaps) - 86400.0 / 64) / (86400.0 / 64) < 0.2
+
+
+def test_failure_vocabulary_is_closed():
+    # the KINDS set is validated everywhere, mirroring Decision.KINDS:
+    # typos die at construction, not deep inside a campaign
+    with pytest.raises(ValueError, match="unknown failure kind"):
+        FailureModel(kinds=(("gremlin", 1.0),))
+    with pytest.raises(ValueError, match="unknown crash kind"):
+        InjectedFailure(kind="net_delay")     # degradations aren't raised
+    with pytest.raises(ValueError, match="unknown crash kind"):
+        FailureInjector().worst_case_failure(100.0, 0.0, 60.0, 5.0,
+                                             kind="straggler")
+    with pytest.raises(ValueError, match="unknown degradation kind"):
+        Degradation(0.0, "node", 60.0)        # crashes aren't windows
+    with pytest.raises(ValueError, match="unknown direction"):
+        Degradation(0.0, "net_delay", 60.0, direction="sideways")
+    with pytest.raises(ValueError, match="duration_s > 0"):
+        Degradation(0.0, "backpressure", 0.0)
 
 
 def test_failure_model_weibull():
@@ -146,6 +165,18 @@ def test_straggler_detector_flags_persistent_slow_host():
         flagged += det.observe_step(float(t), times)
     assert flagged == [2]
     assert det.flagged == {2}
+
+
+def test_straggler_detector_two_host_true_median():
+    # even host counts need the TRUE median (mean of the middle pair): the
+    # upper-middle element of a 2-host cluster IS the slow host, so the
+    # old comparison (st > factor * upper) could never flag it — 2.5 vs a
+    # 3.5 threshold.  Against the true median 1.75 the threshold is 2.45
+    # and the straggler is caught.
+    det = StragglerDetector(num_hosts=2, slow_factor=1.4, patience=3)
+    for t in range(10):
+        det.observe_step(float(t), {0: 1.0, 1: 2.5})
+    assert det.flagged == {1}
 
 
 def test_straggler_detector_ignores_transient_blips():

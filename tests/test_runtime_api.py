@@ -86,7 +86,8 @@ def test_controller_module_has_no_capability_probing():
 
 def test_decision_kinds_closed_set():
     assert set(Decision.KINDS) == {"none", "defer", "reconfigure",
-                                   "infeasible", "cooldown", "unhealthy"}
+                                   "proactive", "infeasible", "cooldown",
+                                   "unhealthy"}
     with pytest.raises(AssertionError):
         Decision(0.0, "bogus", 0.0, 0.0, 0.0)
 

@@ -16,6 +16,13 @@
                               ONE gray-failure campaign; its result is the
                               "proactive" section of BENCH_sim.json and the
                               validator gates a STRICT proactive win)
+  E11 fleet supervisor       (one control plane over 8+ concurrent jobs —
+                              emits BENCH_fleet.json, schema "bench_fleet/1",
+                              gating the shared-tick wall-clock ratio < 2x
+                              one job, >= 5x less profiling lane-time via
+                              QoS-model transfer with matched twin QoS, and
+                              admission-control rejection of an infeasible
+                              firehose job)
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--quick | --smoke]
 
@@ -32,7 +39,11 @@ DRILL (save under k=1 ring replication, kill one host, assert the
 degraded partial restore is bit-exact and pulls only the failed host's
 shard bytes — ``restored_bytes < full_state_bytes`` — plus the peer-loss
 worst case through the per-shard remote fallback and the optimizer's
-``replication_factor`` dimension), validating that the emitted
+``replication_factor`` dimension), and the FLEET DRILL (a 3-job
+supervisor: one cold admit, one fingerprint-matched transfer admit that
+skips Phase 2 via the QoS-model registry, and one firehose rejected by
+admission control, validating the emitted BENCH_fleet.json against
+``bench_fleet.validate_fleet_artifact``), validating that the emitted
 BENCH_ckpt.json / BENCH_sim.json artifacts match their schemas
 ("bench_ckpt/3" via ``SimCostModel.from_calibration`` — placement/codec
 fields, int8 link fraction <= 0.26, the fused flat device encode under
@@ -62,8 +73,9 @@ def main() -> None:
 
     t0 = time.monotonic()
     if args.smoke:
-        from benchmarks import (bench_ckpt, bench_proactive, bench_recovery,
-                                bench_replication, bench_runtime)
+        from benchmarks import (bench_ckpt, bench_fleet, bench_proactive,
+                                bench_recovery, bench_replication,
+                                bench_runtime)
         try:
             bench_ckpt.smoke()
             # the proactive drill's summary is embedded (and gated) in the
@@ -72,14 +84,16 @@ def main() -> None:
             bench_recovery.smoke(proactive=proactive)
             bench_replication.smoke()
             bench_runtime.smoke()
+            bench_fleet.smoke()
         except (ValueError, AssertionError) as e:
             print(f"SMOKE FAILED: {e}", file=sys.stderr)
             sys.exit(1)
         print(f"smoke done in {time.monotonic() - t0:.0f}s")
         return
-    from benchmarks import (bench_ckpt, bench_dryrun, bench_kernels,
-                            bench_khaos_training, bench_proactive,
-                            bench_recovery, bench_replication, bench_tables)
+    from benchmarks import (bench_ckpt, bench_dryrun, bench_fleet,
+                            bench_kernels, bench_khaos_training,
+                            bench_proactive, bench_recovery,
+                            bench_replication, bench_tables)
 
     repeats = 1 if args.quick else 3
     bench_tables.bench_iot_vehicles(repeats=repeats)
@@ -87,6 +101,7 @@ def main() -> None:
     proactive = bench_proactive.main()
     bench_recovery.main(proactive=proactive)
     bench_replication.main()
+    bench_fleet.main()
     bench_khaos_training.main()
     bench_ckpt.main()
     bench_kernels.main()

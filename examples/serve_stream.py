@@ -3,6 +3,13 @@ batches, with per-batch latency metrics — the serving-side data plane the
 dry-run lowers at the assigned decode shapes.
 
     PYTHONPATH=src python examples/serve_stream.py --arch recurrentgemma-2b
+
+``--fleet`` additionally serves the CONTROL plane: a ``FleetSupervisor``
+admitting three jobs next to the data plane (one cold-profiled, one
+transfer-admitted from the registry, one rejected for capacity) and
+printing the fleet status — the supervisor a real deployment would run
+beside its servers.  See ``examples/fleet_supervision.py`` for the full
+fleet walkthrough.
 """
 import argparse
 import time
@@ -15,10 +22,45 @@ from repro.models import zoo
 from repro.runtime.server import ServeRequest, StreamServer
 
 
+def serve_fleet_supervisor() -> dict:
+    """The --fleet mode: one supervisor over three admission outcomes."""
+    from repro.config import KhaosConfig
+    from repro.data.stream import constant_rate
+    from repro.fleet import FleetJobSpec, FleetSupervisor
+    from repro.sim import SimCostModel
+
+    cost = SimCostModel(capacity_eps=2600.0, ckpt_duration_s=1.0,
+                        state_bytes=1e9)
+    kcfg = KhaosConfig(latency_constraint=1.5, recovery_constraint=240.0,
+                       optimization_period=30.0, ci_min=10, ci_max=120,
+                       num_failure_points=2, num_configs=3,
+                       record_seconds=600.0, reconfig_cooldown=60.0)
+    sup = FleetSupervisor(fleet_capacity_eps=6000.0)
+
+    def spec(name, rate, seed=0):
+        return FleetJobSpec(name, cost, kcfg, schedule=constant_rate(rate),
+                            seed=seed, horizon_s=300.0,
+                            profile_max_recovery_s=900.0)
+
+    print("cold:     ", sup.submit(spec("serve-a", 1500.0)).action)
+    sup.run_profiling_pooled()          # fits serve-a, files it in the registry
+    print("transfer: ", sup.submit(spec("serve-b", 1500.0, seed=1)).action)
+    print("rejected: ", sup.submit(spec("serve-xl", 9000.0)).action)
+    sup.run_profiling_pooled()
+    sup.start()
+    status = sup.run(300.0, chunk_s=30.0)
+    print(f"fleet status after {status['t']:.0f}s: "
+          f"{ {n: j['status'] for n, j in status['jobs'].items()} } "
+          f"decisions {status['decisions_by_kind']}")
+    return status
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="yi-6b")
     ap.add_argument("--batches", type=int, default=4)
+    ap.add_argument("--fleet", action="store_true",
+                    help="also run the fleet-supervisor control plane demo")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
@@ -41,6 +83,9 @@ def main():
         print(f"batch {b}: served {len(out)} requests in {dt*1e3:.0f}ms "
               f"({dt*1e3/ (4*8):.1f} ms/token); "
               f"sample completion: {out[reqs[0].rid].tolist()}")
+
+    if args.fleet:
+        serve_fleet_supervisor()
 
 
 if __name__ == "__main__":

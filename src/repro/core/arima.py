@@ -71,7 +71,7 @@ class OnlineARIMA:
             if norm > self.clip:
                 self.w *= self.clip / norm
         dv = self._difference(y)
-        self._hist = np.roll(self._hist, 1)
+        self._hist[1:] = self._hist[:-1]   # in-place roll: no allocation
         self._hist[0] = dv
         self._n += 1
         return pred, y - pred

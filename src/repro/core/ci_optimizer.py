@@ -165,44 +165,62 @@ def default_plan_variants(cost, ci_ref: float,
 
 
 def _variant_predictions(m_l: QoSModel, m_r: QoSModel, cost,
-                         plan: CheckpointPlan, ci: np.ndarray, tr_avg: float,
-                         baseline: CheckpointPlan,
+                         plans: Sequence[CheckpointPlan], ci: np.ndarray,
+                         tr_avg: float, baseline: CheckpointPlan,
                          failure_mix=FAILURE_MIX
-                         ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
-    """Re-price the fitted (full-sync) QoS surfaces for a plan variant.
+                         ) -> tuple[list, list, list]:
+    """Re-price the fitted (full-sync) QoS surfaces for EVERY plan variant.
 
     Latency: the excess over the base latency is driven by the checkpoint
     duty cycle (capacity lost to sync pauses / the async tax), so it is
-    scaled by the variant's overhead relative to the baseline's.
+    scaled by each variant's overhead relative to the baseline's.
 
     Recovery: lost work is bounded by the cadence of the fastest level
     surviving each failure kind (a cluster failure replays back to the
     last remote full), so M_R is evaluated at the per-kind effective CI
     and shifted by the restore-path downtime delta; kinds are mixed with
     the failure model's probabilities.
+
+    Evaluation is batched across variants: the variant-independent
+    pieces (M_L at the grid, the baseline overhead) are computed once,
+    and the (variant x kind) M_R reads go through ONE stacked
+    ``QoSModel.predict`` — its reduction is row-independent, so the
+    per-variant values are bit-identical to per-variant calls.
     """
-    o_base = np.array([cost.plan_overhead_fraction(baseline, c) for c in ci])
-    o_v = np.array([cost.plan_overhead_fraction(plan, c) for c in ci])
-    ratio = o_v / np.maximum(o_base, 1e-9)
-    lat_base = m_l.predict(ci, tr_avg)
-    lat = cost.base_latency_s + np.maximum(lat_base - cost.base_latency_s, 0.0) \
-        * ratio
+    if hasattr(cost, "plan_overhead_fractions"):   # vectorized fast path
+        o_base = np.asarray(cost.plan_overhead_fractions(baseline, ci))
+        o_vs = [np.asarray(cost.plan_overhead_fractions(p, ci))
+                for p in plans]
+    else:
+        o_base = np.array([cost.plan_overhead_fraction(baseline, c)
+                           for c in ci])
+        o_vs = [np.array([cost.plan_overhead_fraction(p, c) for c in ci])
+                for p in plans]
+    o_floor = np.maximum(o_base, 1e-9)
+    excess = np.maximum(m_l.predict(ci, tr_avg) - cost.base_latency_s, 0.0)
+    lats = [cost.base_latency_s + excess * (o_v / o_floor) for o_v in o_vs]
 
     ci_hi = float(ci.max())
-    rec = np.zeros_like(ci)
-    for kind, w in failure_mix:
-        mult = cost.plan_lost_work_multiplier(plan, kind)
-        if not np.isfinite(mult):
-            # nothing survives this kind: replay-from-zero — price it as
-            # the worst the fitted surface has seen, four CIs out
-            ci_eff = np.full_like(ci, 4.0 * ci_hi)
-        else:
-            # avoid wild polynomial extrapolation far beyond the fit range
-            ci_eff = np.minimum(ci * mult, 4.0 * ci_hi)
-        d_downtime = (cost.plan_downtime_s(plan, kind)
-                      - cost.plan_downtime_s(baseline, kind))
-        rec = rec + w * (m_r.predict(ci_eff, tr_avg) + d_downtime)
-    return lat, rec, o_v
+    rows: list[tuple[int, float, float]] = []   # (plan idx, weight, dt)
+    ci_effs: list[np.ndarray] = []
+    for pi, plan in enumerate(plans):
+        for kind, w in failure_mix:
+            mult = cost.plan_lost_work_multiplier(plan, kind)
+            if not np.isfinite(mult):
+                # nothing survives this kind: replay-from-zero — price it
+                # as the worst the fitted surface has seen, four CIs out
+                ci_effs.append(np.full_like(ci, 4.0 * ci_hi))
+            else:
+                # avoid wild polynomial extrapolation beyond the fit range
+                ci_effs.append(np.minimum(ci * mult, 4.0 * ci_hi))
+            rows.append((pi, w, cost.plan_downtime_s(plan, kind)
+                         - cost.plan_downtime_s(baseline, kind)))
+    preds = m_r.predict(np.concatenate(ci_effs),
+                        tr_avg).reshape(len(rows), len(ci))
+    recs = [np.zeros_like(ci) for _ in plans]
+    for (pi, w, d_downtime), pred in zip(rows, preds):
+        recs[pi] = recs[pi] + w * (pred + d_downtime)
+    return lats, recs, o_vs
 
 
 def optimize_plan(m_l: QoSModel, m_r: QoSModel, tr_avg: float,
@@ -231,9 +249,9 @@ def optimize_plan(m_l: QoSModel, m_r: QoSModel, tr_avg: float,
                                          mtbf_s=mtbf_s)
 
     candidates: list[PlanCandidate] = []
-    for plan in variants:
-        lat, rec, o_v = _variant_predictions(m_l, m_r, cost, plan, ci,
-                                             tr_avg, baseline)
+    lats, recs, o_vs = _variant_predictions(m_l, m_r, cost, list(variants),
+                                            ci, tr_avg, baseline)
+    for plan, lat, rec, o_v in zip(variants, lats, recs, o_vs):
         q_r = rec / r_const
         q_l = p * lat / l_const
         obj = q_r + q_l + np.abs(q_r - q_l)

@@ -1,3 +1,3 @@
-from repro.metrics.timeseries import TimeSeries, MetricsStore
+from repro.metrics.timeseries import MetricsStore, Rollup, TimeSeries
 
-__all__ = ["TimeSeries", "MetricsStore"]
+__all__ = ["MetricsStore", "Rollup", "TimeSeries"]

@@ -26,29 +26,54 @@ class ServeRequest:
 
 class StreamServer:
     def __init__(self, cfg: ModelConfig, params, max_batch: int = 4,
-                 max_seq: int = 128):
+                 max_seq: int = 128, metrics_maxlen: int = 4096):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.max_seq = max_seq
         self.prefill = jax.jit(zoo.make_prefill_step(cfg))
         self.decode = jax.jit(zoo.make_decode_step(cfg))
-        self.metrics = MetricsStore()
+        # bounded: a long-lived server must not grow per-batch series forever
+        self.metrics = MetricsStore(maxlen=metrics_maxlen)
         self._t = 0.0
+        self.last_decode_positions: list[int] = []
+
+    def _grow_caches(self, caches, extra: int):
+        """Extend full-attention K/V caches (dense/moe/vlm: stacked
+        (L, B, S, H, hd) with the seq axis at 2) by ``extra`` slots so
+        decode steps have somewhere to write.  Ring (hybrid window) and
+        state (ssm) caches are fixed-size by design and pass through."""
+        if extra <= 0 or not (isinstance(caches, dict) and "k" in caches):
+            return caches
+        pad = [(0, 0), (0, 0), (0, extra), (0, 0), (0, 0)]
+        return {"k": jnp.pad(caches["k"], pad),
+                "v": jnp.pad(caches["v"], pad)}
 
     def serve_batch(self, requests: list[ServeRequest]) -> dict[int, np.ndarray]:
         """Prefill a batch of equal-length prompts, then decode greedily."""
         assert 0 < len(requests) <= self.max_batch
         S = len(requests[0].prompt)
         assert all(len(r.prompt) == S for r in requests), "bucket by length"
+        max_new = max(r.max_new_tokens for r in requests)
+        assert S + max_new <= self.max_seq, \
+            f"prompt ({S}) + generation ({max_new}) exceeds max_seq " \
+            f"({self.max_seq})"
         tokens = jnp.asarray(np.stack([r.prompt for r in requests]))
         next_tok, caches = self.prefill(self.params, {"tokens": tokens})
-        # decode caches sized S; continue writing into ring position
+        # prefill caches hold exactly S positions; generated tokens land at
+        # S, S+1, ... — grow the caches up front (an out-of-range scatter
+        # would be silently DROPPED by JAX, so without room every step
+        # would stomp one slot and decode against a stale window)
+        caches = self._grow_caches(caches, max_new - 1)
         outs = [ [int(t)] for t in np.asarray(next_tok) ]
-        max_new = max(r.max_new_tokens for r in requests)
         cur = next_tok[:, None]
+        self.last_decode_positions = []
         for i in range(max_new - 1):
-            pos = jnp.full((len(requests),), min(S - 1, S - 1), jnp.int32)
+            # step i writes the token generated at position S + i and
+            # rotates its query to that absolute position
+            p = S + i
+            self.last_decode_positions.append(p)
+            pos = jnp.full((len(requests),), p, jnp.int32)
             cur, caches = self.decode(self.params, caches,
                                       {"tokens": cur, "pos": pos})
             for b, t in enumerate(np.asarray(cur)[:, 0]):

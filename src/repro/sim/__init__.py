@@ -2,9 +2,12 @@ from repro.sim.costmodel import SimCostModel, costmodel_from_arch, levels_due
 from repro.sim.simulator import StreamSimulator, SimDeployment, SimJobHandle
 from repro.sim.batched import (BatchedCampaign, BatchedDeployment,
                                BatchedLaneHandle, LaneSpec,
-                               make_plan_verifier, measure_profile_lanes)
+                               build_profile_lanes, make_plan_verifier,
+                               measure_profile_lanes,
+                               scatter_profile_results)
 
 __all__ = ["SimCostModel", "costmodel_from_arch", "levels_due",
            "StreamSimulator", "SimDeployment", "SimJobHandle",
            "BatchedCampaign", "BatchedDeployment", "BatchedLaneHandle",
-           "LaneSpec", "make_plan_verifier", "measure_profile_lanes"]
+           "LaneSpec", "build_profile_lanes", "make_plan_verifier",
+           "measure_profile_lanes", "scatter_profile_results"]

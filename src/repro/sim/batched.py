@@ -907,7 +907,8 @@ class LaneMeasurement:
 
 
 def measure_profile_lanes(camp: BatchedCampaign, inject_ts: Sequence[float],
-                          margin: float, max_recovery_s: float
+                          margin: float, max_recovery_s: float,
+                          lanes: Optional[Sequence[int]] = None
                           ) -> list[LaneMeasurement]:
     """Post-hoc replication of ``SimDeployment.profile_failure``'s on_tick
     measurement over a finished campaign: per lane, pre-failure latency
@@ -915,11 +916,17 @@ def measure_profile_lanes(camp: BatchedCampaign, inject_ts: Sequence[float],
     inside the pre-failure envelope, after the detection timeout).  The
     scalar path computes these inside the tick loop; with full lag
     histories recorded they are pure array reductions.
+
+    ``lanes`` selects which campaign lanes ``inject_ts`` refers to
+    (default: lanes 0..len(inject_ts)-1) — the pooled multi-job profiling
+    path measures each job's contiguous lane slice with that job's own
+    margin/horizon.
     """
     cost = camp.cost
     lat_hist = camp.latency_history()
     out: list[LaneMeasurement] = []
-    for i, inject_t in enumerate(inject_ts):
+    lane_ids = range(len(inject_ts)) if lanes is None else lanes
+    for i, inject_t in zip(lane_ids, inject_ts):
         ts = camp.times(i)
         n = len(ts)
         lag = camp.lag_hist[i, :n]
@@ -952,6 +959,58 @@ def measure_profile_lanes(camp: BatchedCampaign, inject_ts: Sequence[float],
 # Phase-2 profiling over lanes (implements core.profiler.CampaignDeployment)
 # ---------------------------------------------------------------------------
 
+def build_profile_lanes(cost: SimCostModel, recording: WorkloadRecording,
+                        failure_times, ci_values, margin: float,
+                        warmup_s: float = 300.0,
+                        max_recovery_s: float = 7200.0,
+                        job: Optional[str] = None
+                        ) -> tuple[list[LaneSpec], list[float]]:
+    """Lane specs + injection times for one job's z x m Phase-2 grid.
+
+    Module-level (rather than a ``BatchedDeployment`` method) so a fleet
+    supervisor can build grids for MANY jobs, concatenate the lanes into
+    one pooled ``BatchedCampaign``, and scatter the measurements back per
+    job via the ``job`` tag each lane carries.
+    """
+    ci_values = np.asarray(ci_values, dtype=np.float64)
+    failure_times = np.asarray(failure_times, dtype=np.float64)
+    injector = FailureInjector()
+    lanes: list[LaneSpec] = []
+    inject_ts: list[float] = []
+    for j, ci in enumerate(ci_values):
+        for i, ft in enumerate(failure_times):
+            t0 = max(float(recording.times[0]),
+                     float(ft) - margin - warmup_s)
+            # worst case: just before the next checkpoint completes
+            inject_t = injector.worst_case_time(
+                float(ft), t0, float(ci), cost.ckpt_duration_s)
+            n = int(np.ceil(inject_t + max_recovery_s - t0))
+            tag = {"ci_index": j, "fp_index": i}
+            if job is not None:
+                tag["job"] = job
+            lanes.append(LaneSpec(
+                rates=dense_rates(t0, n, recording=recording),
+                ci_s=float(ci), t0=t0, failures=((inject_t, "node"),),
+                tag=tag))
+            inject_ts.append(inject_t)
+    return lanes, inject_ts
+
+
+def scatter_profile_results(lanes: Sequence[LaneSpec],
+                            meas: Sequence[LaneMeasurement],
+                            n_failure_points: int, n_ci: int
+                            ) -> tuple[np.ndarray, np.ndarray]:
+    """Scatter per-lane measurements back into (m, z) latency / recovery
+    matrices using each lane's grid-index tag.  In the pooled multi-job
+    case, call once per job with that job's lane/measurement slice."""
+    L = np.zeros((n_failure_points, n_ci))
+    R = np.zeros((n_failure_points, n_ci))
+    for lane, msr in zip(lanes, meas):
+        L[lane.tag["fp_index"], lane.tag["ci_index"]] = msr.latency_s
+        R[lane.tag["fp_index"], lane.tag["ci_index"]] = msr.recovery_s
+    return L, R
+
+
 class BatchedDeployment:
     """All z CIs x m failure points profiled in ONE batched sweep.
 
@@ -974,34 +1033,15 @@ class BatchedDeployment:
     def profile_campaign(self, failure_times, ci_values, margin: float
                          ) -> tuple[np.ndarray, np.ndarray]:
         """(m, z) latency and recovery matrices for the full grid."""
-        ci_values = np.asarray(ci_values, dtype=np.float64)
-        failure_times = np.asarray(failure_times, dtype=np.float64)
-        injector = FailureInjector()
-        lanes, inject_ts = [], []
-        for j, ci in enumerate(ci_values):
-            for i, ft in enumerate(failure_times):
-                t0 = max(float(self.recording.times[0]),
-                         float(ft) - margin - self.warmup_s)
-                # worst case: just before the next checkpoint completes
-                inject_t = injector.worst_case_time(
-                    float(ft), t0, float(ci), self.cost.ckpt_duration_s)
-                n = int(np.ceil(inject_t + self.max_recovery_s - t0))
-                lanes.append(LaneSpec(
-                    rates=dense_rates(t0, n, recording=self.recording),
-                    ci_s=float(ci), t0=t0, failures=((inject_t, "node"),),
-                    tag={"ci_index": j, "fp_index": i}))
-                inject_ts.append(inject_t)
+        lanes, inject_ts = build_profile_lanes(
+            self.cost, self.recording, failure_times, ci_values, margin,
+            warmup_s=self.warmup_s, max_recovery_s=self.max_recovery_s)
         camp = BatchedCampaign(self.cost, lanes).run()
         self.last_campaign = camp
         meas = measure_profile_lanes(camp, inject_ts, margin,
                                      self.max_recovery_s)
-        z, m = len(ci_values), len(failure_times)
-        L = np.zeros((m, z))
-        R = np.zeros((m, z))
-        for lane, msr in zip(lanes, meas):
-            L[lane.tag["fp_index"], lane.tag["ci_index"]] = msr.latency_s
-            R[lane.tag["fp_index"], lane.tag["ci_index"]] = msr.recovery_s
-        return L, R
+        return scatter_profile_results(lanes, meas, len(failure_times),
+                                       len(ci_values))
 
 
 # ---------------------------------------------------------------------------

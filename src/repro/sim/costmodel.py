@@ -31,6 +31,8 @@ import os
 from dataclasses import dataclass, fields
 from typing import Any, Optional, Union
 
+from functools import lru_cache
+
 import numpy as np
 
 from repro.config import CheckpointPlan
@@ -327,8 +329,12 @@ class SimCostModel:
                                        replicas=plan.effective_replication)
                    for level, kind in levels_due(plan, trigger_index))
 
+    @lru_cache(maxsize=4096)
     def avg_write_duration(self, plan: CheckpointPlan) -> float:
-        """Steady-state average write seconds per checkpoint trigger."""
+        """Steady-state average write seconds per checkpoint trigger.
+        Memoized: both ``self`` and ``plan`` are frozen (value-hashable)
+        and the cadence walk is pure, so the Eq.-8 searches that re-price
+        the same variants every optimization period hit the cache."""
         period = self._cadence_period(plan)
         return sum(self.trigger_write_duration(plan, i)
                    for i in range(period)) / period
@@ -410,6 +416,18 @@ class SimCostModel:
         tax = self.ckpt_sync_penalty if plan.sync else self.async_overhead
         return min(1.0, duty * tax)
 
+    def plan_overhead_fractions(self, plan: CheckpointPlan,
+                                ci_values) -> np.ndarray:
+        """``plan_overhead_fraction`` vectorized over a CI grid.  The
+        average write duration is CI-independent, so it is priced ONCE and
+        divided across the grid — the plan optimizer sweeps grid x
+        variants every re-plan, and walking the cadence period per grid
+        point is what used to dominate the controller tick."""
+        ci = np.maximum(np.asarray(ci_values, np.float64), 1e-9)
+        tax = self.ckpt_sync_penalty if plan.sync else self.async_overhead
+        return np.minimum(1.0, self.avg_write_duration(plan) / ci * tax)
+
+    @lru_cache(maxsize=4096)
     def surviving_levels(self, plan: CheckpointPlan,
                          failure_kind: str) -> tuple[str, ...]:
         """Plan levels surviving ``failure_kind`` (fastest first), DERIVED
@@ -432,6 +450,7 @@ class SimCostModel:
         surviving = self.surviving_levels(plan, failure_kind)
         return surviving[0] if surviving else None
 
+    @lru_cache(maxsize=4096)
     def plan_downtime_s(self, plan: CheckpointPlan, failure_kind: str = "node"
                         ) -> float:
         level = self.restore_level(plan, failure_kind)
@@ -441,6 +460,7 @@ class SimCostModel:
         return (self.detect_s + self.restart_s
                 + self.restore_duration_for(plan, failure_kind, level))
 
+    @lru_cache(maxsize=4096)
     def plan_lost_work_multiplier(self, plan: CheckpointPlan,
                                   failure_kind: str = "node") -> float:
         """Lost work after a failure, as a multiple of the base CI: the

@@ -1,0 +1,327 @@
+"""Fleet supervision: registry transfer, admission control, pooled
+profiling, the multiplexed Phase-3 tick, and the bounded metrics plane."""
+import numpy as np
+import pytest
+
+from repro.config import KhaosConfig, replace
+from repro.core.qos_models import QoSModel, demo_prior_models
+from repro.core.runtime import KhaosRuntime, PhaseError
+from repro.data.stream import constant_rate, record_workload
+from repro.fleet import (DivergenceWatchdog, FleetJobSpec, FleetSupervisor,
+                         QoSModelRegistry, decide_admission, fingerprint)
+from repro.metrics import MetricsStore, TimeSeries
+from repro.sim import BatchedDeployment, SimCostModel
+
+
+def _cost(**kw):
+    kw.setdefault("capacity_eps", 2600.0)
+    kw.setdefault("ckpt_duration_s", 1.0)
+    kw.setdefault("state_bytes", 1e9)
+    return SimCostModel(**kw)
+
+
+def _cfg(**kw):
+    kw.setdefault("latency_constraint", 1.5)
+    kw.setdefault("recovery_constraint", 240.0)
+    kw.setdefault("optimization_period", 30.0)
+    kw.setdefault("ci_min", 10.0)
+    kw.setdefault("ci_max", 120.0)
+    kw.setdefault("num_failure_points", 2)
+    kw.setdefault("num_configs", 2)
+    kw.setdefault("record_seconds", 400.0)
+    kw.setdefault("reconfig_cooldown", 60.0)
+    return KhaosConfig(**kw)
+
+
+def _spec(name, rate=1200.0, **kw):
+    kw.setdefault("cost", _cost())
+    kw.setdefault("cfg", _cfg())
+    kw.setdefault("schedule", constant_rate(rate))
+    kw.setdefault("horizon_s", 300.0)
+    kw.setdefault("profile_max_recovery_s", 600.0)
+    return FleetJobSpec(name, **kw)
+
+
+# ---------------------------------------------------------------------------
+# fingerprints + registry
+# ---------------------------------------------------------------------------
+
+def test_fingerprint_matches_near_twin_and_misses_different_job():
+    cfg = _cfg()
+    rec_a = record_workload(constant_rate(1200.0), 400.0, seed=0)
+    rec_b = record_workload(constant_rate(1200.0), 400.0, seed=7)
+    fp_a = fingerprint(cfg, rec_a, state_bytes=1e9)
+    fp_b = fingerprint(cfg, rec_b, state_bytes=1e9)
+    assert fp_a.key() == fp_b.key()       # twin workloads collide (hit)
+    # 4x the state -> different write/restore economics -> miss
+    assert fingerprint(cfg, rec_a, 4e9).key() != fp_a.key()
+    # 4x the rate envelope -> miss
+    rec_hot = record_workload(constant_rate(4800.0), 400.0, seed=0)
+    assert fingerprint(cfg, rec_hot, 1e9).key() != fp_a.key()
+    # different CI search window -> miss
+    assert fingerprint(replace(cfg, ci_max=300.0), rec_a, 1e9).key() \
+        != fp_a.key()
+
+
+def test_registry_roundtrip(tmp_path):
+    m_l, m_r = demo_prior_models()
+    cfg = _cfg()
+    rec = record_workload(constant_rate(1200.0), 400.0, seed=0)
+    fp = fingerprint(cfg, rec, 1e9)
+    reg = QoSModelRegistry()
+    assert reg.lookup(fp) is None
+    reg.put(fp, m_l, m_r, "donor-job")
+    path = str(tmp_path / "registry.json")
+    reg.save(path)
+    back = QoSModelRegistry.load(path)
+    entry = back.lookup(fp)
+    assert entry is not None and entry.source_job == "donor-job"
+    ci = np.linspace(10, 60, 7)
+    tr = np.linspace(200, 900, 7)
+    np.testing.assert_allclose(entry.m_l.predict(ci, tr),
+                               m_l.predict(ci, tr), rtol=1e-12)
+    np.testing.assert_allclose(entry.m_r.predict(ci, tr),
+                               m_r.predict(ci, tr), rtol=1e-12)
+
+
+def test_divergence_watchdog_fires_once_per_episode():
+    wd = DivergenceWatchdog(rel_err_threshold=0.5, patience=2)
+    assert not wd.observe(1.0, 1.0)        # accurate
+    assert not wd.observe(2.0, 1.0)        # bad x1
+    assert wd.observe(2.0, 1.0)            # bad x2 -> fires
+    assert not wd.observe(2.0, 1.0)        # same episode: no refire
+    assert not wd.observe(1.0, 1.0)        # recovers
+    assert not wd.observe(2.0, 1.0)
+    assert wd.observe(2.0, 1.0)            # new episode fires again
+
+
+# ---------------------------------------------------------------------------
+# adopt_models phase legality
+# ---------------------------------------------------------------------------
+
+def test_adopt_models_requires_phase1_and_logs_transfer():
+    m_l, m_r = demo_prior_models()
+    rt = KhaosRuntime(_cfg())
+    with pytest.raises(PhaseError):
+        rt.adopt_models(m_l, m_r)          # Phase 1 has not run
+    rec = record_workload(constant_rate(1200.0), 400.0, seed=0)
+    rt.record_steady_state(rec)
+    rt.adopt_models(m_l, m_r, source="neighbor")
+    assert rt.phase == "profiled" and rt.transferred
+    ev = rt.phase_log[-1]
+    assert ev.phase == "profiled" and ev.info["transferred"] \
+        and ev.info["source"] == "neighbor"
+
+
+# ---------------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------------
+
+def test_admission_rejects_queues_and_admits():
+    cost, cfg = _cost(), _cfg()
+    rec = record_workload(constant_rate(1200.0), 400.0, seed=0)
+    ok = decide_admission("j", cost, rec, cfg, residual_eps=8000.0)
+    assert ok.action == "admit" and ok.admitted
+    over = decide_admission("j", cost, rec, cfg, residual_eps=500.0)
+    assert over.action == "reject" and not over.admitted
+    q = decide_admission("j", cost, rec, cfg, residual_eps=500.0,
+                         queueable=True)
+    assert q.action == "queue" and not q.admitted
+
+
+def test_whatif_catches_recovery_infeasible_residual():
+    """A job that fits the budget at steady state but cannot drain its
+    post-failure backlog at the residual capacity is still rejected —
+    the what-if campaign, not the reservation arithmetic, catches it."""
+    cost, cfg = _cost(), _cfg(recovery_constraint=60.0)
+    rec = record_workload(constant_rate(1200.0), 400.0, seed=0)
+    # residual barely above the reservation: replay drains too slowly
+    d = decide_admission("j", cost, rec, cfg,
+                         residual_eps=1500.0, headroom=0.0)
+    assert d.action == "reject"
+    assert "what-if" in d.reason
+    assert d.whatif_recovery_s > cfg.recovery_constraint
+
+
+def test_supervisor_queue_retry_after_capacity_frees():
+    sup = FleetSupervisor(fleet_capacity_eps=2600.0)
+    d1 = sup.submit(_spec("first", rate=1200.0))
+    assert d1.admitted
+    d2 = sup.submit(_spec("waiting", rate=1200.0, queueable=True))
+    assert d2.action == "queue"
+    assert sup.jobs["waiting"].status == "queued"
+    # first job finishes -> its reservation is released -> retry admits
+    sup.jobs["first"].status = "done"
+    sup.reserved_eps -= sup.jobs["first"].admission.reserved_eps
+    out = sup.retry_queued()
+    assert [d.action for d in out] == ["admit"]
+    assert sup.jobs["waiting"].status == "admitted"
+
+
+# ---------------------------------------------------------------------------
+# pooled profiling
+# ---------------------------------------------------------------------------
+
+def test_pooled_profiling_matches_solo_deployment():
+    """A job profiled as a slice of the POOLED multi-job campaign gets
+    bit-identical (L, R) matrices to profiling alone through its own
+    BatchedDeployment — lanes are independent, pooling is free."""
+    sup = FleetSupervisor(fleet_capacity_eps=10_000.0)
+    sup.submit(_spec("a", rate=1200.0, seed=0))
+    sup.submit(_spec("b", rate=1400.0, seed=1))
+    sup.run_profiling_pooled()
+    job = sup.jobs["a"]
+    rt_solo = KhaosRuntime(_cfg())
+    rt_solo.record_steady_state(job.recording)
+    rt_solo.run_profiling(
+        BatchedDeployment(job.spec.cost, job.recording,
+                          warmup_s=job.spec.profile_warmup_s,
+                          max_recovery_s=job.spec.profile_max_recovery_s),
+        ci_values=rt_solo.default_ci_grid(),
+        margin=job.spec.cfg.profile_margin_seconds)
+    np.testing.assert_array_equal(job.runtime.profile.latencies,
+                                  rt_solo.profile.latencies)
+    np.testing.assert_array_equal(job.runtime.profile.recoveries,
+                                  rt_solo.profile.recoveries)
+    # both jobs walked the legal phase order through the shared sweep
+    for name in ("a", "b"):
+        assert sup.jobs[name].runtime.phase_sequence() == \
+            ["steady_state", "profiled"]
+    assert len(sup.registry) >= 1
+
+
+# ---------------------------------------------------------------------------
+# transfer fast path + divergence fallback (the tentpole loop)
+# ---------------------------------------------------------------------------
+
+def _fleet_with_transfer(divergence_threshold, patience=1):
+    sup = FleetSupervisor(fleet_capacity_eps=10_000.0,
+                          divergence_threshold=divergence_threshold,
+                          divergence_patience=patience)
+    cfg = _cfg(num_failure_points=3, num_configs=3)
+    assert sup.submit(_spec("donor", rate=1200.0, seed=0,
+                            cfg=cfg)).action == "admit"
+    sup.run_profiling_pooled()
+    d = sup.submit(_spec("twin", rate=1200.0, seed=3, cfg=cfg))
+    assert d.action == "admit_transfer"
+    return sup
+
+
+def test_transfer_skips_phase2_with_less_lane_time():
+    sup = _fleet_with_transfer(divergence_threshold=1e9)
+    donor, twin = sup.jobs["donor"], sup.jobs["twin"]
+    # the machine walked steady_state -> profiled WITHOUT a campaign
+    assert twin.runtime.phase == "profiled" and twin.runtime.transferred
+    assert twin.transfer_source == "donor"
+    # cold z x m grid (9 lanes) vs ONE validation-probe lane
+    assert donor.profiling_lane_ticks >= 5 * twin.profiling_lane_ticks
+    sup.start()
+    sup.run(300.0, chunk_s=30.0)
+    assert twin.runtime.phase == "optimizing"
+    assert twin.reprofiles == 0            # watchdog disabled: no fallback
+
+
+def test_transfer_divergence_triggers_reprofile_reentry():
+    sup = _fleet_with_transfer(divergence_threshold=1e-9, patience=1)
+    twin = sup.jobs["twin"]
+    sup.start()
+    sup.run(300.0, chunk_s=30.0)
+    # the watchdog tripped: a REAL Phase-2 re-entry ran mid-supervision
+    assert twin.reprofiles == 1 and not twin.transferred
+    seq = twin.runtime.phase_sequence()
+    i = seq.index("reprofile")
+    # the detour is logged, then the machine re-walks the legal order
+    # (phase snaps back to steady_state in place, so the next logged
+    # events are the re-fit and the re-entry)
+    assert seq[i:i + 3] == ["reprofile", "profiled", "optimizing"]
+    # the re-fitted models are the job's own now, and the registry healed
+    assert twin.runtime.transferred      # transfer HAPPENED historically
+    entry = sup.registry.lookup(twin.fp)
+    assert entry.source_job == "twin"
+    assert twin.watchdog is None         # disarmed after self-fit
+
+
+# ---------------------------------------------------------------------------
+# the multiplexed tick: shared campaign, shared decision log
+# ---------------------------------------------------------------------------
+
+def test_supervisor_multiplexes_substrates_with_shared_decision_log():
+    sup = FleetSupervisor(fleet_capacity_eps=16_000.0)
+    for i in range(3):
+        assert sup.submit(_spec(f"lane{i}", rate=1100.0 + 100 * i,
+                                seed=i)).admitted
+    assert sup.submit(_spec("scalar0", rate=1200.0, seed=9,
+                            substrate="scalar")).admitted
+    sup.run_profiling_pooled()
+    sup.start()
+    status = sup.run(300.0, chunk_s=30.0)
+    # ONE shared campaign carries every lane job
+    assert status["shared_campaigns"] == 1
+    camp = sup.jobs["lane0"].campaign
+    assert camp is sup.jobs["lane1"].campaign is sup.jobs["lane2"].campaign
+    assert {sup.jobs[f"lane{i}"].lane for i in range(3)} == {0, 1, 2}
+    # every job reached Phase 3 through its own machine
+    for n, j in sup.jobs.items():
+        assert j.runtime.phase == "optimizing", n
+    # the shared decision log saw every job's controller, labeled
+    labels = {label for label, _d in sup.decision_log}
+    assert labels == {"lane0", "lane1", "lane2", "scalar0"}
+    for label, d in sup.decision_log:
+        assert d.kind in ("none", "defer", "reconfigure", "proactive",
+                          "infeasible", "cooldown", "unhealthy")
+    # per-job and per-fleet series landed in the monitor plane
+    for n in ("lane0", "scalar0"):
+        assert len(sup.metrics.series(f"{n}/latency")) > 0
+    assert len(sup.metrics.series("fleet/jobs_optimizing")) > 0
+    assert sup.qos_violations("lane0")["qos_violation_s"] >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# bounded metrics plane
+# ---------------------------------------------------------------------------
+
+def test_bounded_timeseries_holds_memory_flat():
+    ts = TimeSeries("x", maxlen=64, max_rollups=8)
+    n = 20_000
+    for i in range(n):
+        ts.append(float(i), float(i % 100))
+    # raw buffer and rollup list are both bounded -> flat memory
+    assert len(ts.times) <= 64
+    assert len(ts.rollups) <= 8
+    # lifetime aggregates still see every sample
+    assert ts.lifetime_count() == n
+    ref = np.arange(n) % 100
+    assert abs(ts.lifetime_mean() - ref.mean()) < 1.0
+    assert ts.lifetime_max() == ref.max()
+    # recent-window queries stay exact over the raw tail
+    t, v = ts.window(n - 10, n)
+    np.testing.assert_array_equal(v, ref[-10:])
+
+
+def test_bounded_store_vs_unbounded_reference():
+    bounded = MetricsStore(maxlen=32)
+    exact = MetricsStore()
+    rng = np.random.default_rng(0)
+    vals = rng.uniform(0, 10, 5000)
+    for i, v in enumerate(vals):
+        bounded.record("m", float(i), float(v))
+        exact.record("m", float(i), float(v))
+    b, e = bounded.series("m"), exact.series("m")
+    assert len(b.times) <= 32 and len(e.times) == 5000
+    assert b.lifetime_count() == e.lifetime_count()
+    assert abs(b.lifetime_mean() - np.mean(vals)) < 1e-9
+    assert b.lifetime_max() == np.max(vals)
+    # non-monotonic appends still rejected in bounded mode
+    with pytest.raises(ValueError):
+        b.append(0.0, 1.0)
+
+
+def test_rollup_merge_preserves_aggregates():
+    from repro.metrics import Rollup
+    a = Rollup(0.0, 9.0, 10, 2.0, 1.0, 5.0)
+    b = Rollup(10.0, 19.0, 30, 4.0, 0.5, 9.0)
+    m = a.merge(b)
+    assert m.count == 40
+    assert abs(m.mean - (2.0 * 10 + 4.0 * 30) / 40) < 1e-12
+    assert m.vmin == 0.5 and m.vmax == 9.0
+    assert m.t_start == 0.0 and m.t_end == 19.0

@@ -75,3 +75,36 @@ def test_stream_server_serves_batch():
     for toks in out.values():
         assert toks.shape == (4,)
         assert toks.min() >= 0
+
+
+def test_stream_server_decode_positions_advance():
+    """Regression: every decode step must write a DISTINCT cache slot,
+    advancing from the prompt length — the old loop pinned pos at S-1, so
+    each step stomped one slot (out-of-range scatters are silently
+    dropped) and rotated every query to the same RoPE angle."""
+    cfg = get_smoke_config("yi-6b")
+    params = zoo.init_params(cfg, jax.random.PRNGKey(0))
+    srv = StreamServer(cfg, params, max_batch=2, max_seq=64)
+    from repro.runtime.server import ServeRequest
+    rng = np.random.default_rng(1)
+    S, new = 16, 4
+    prompts = [rng.integers(0, cfg.vocab_size, S, dtype=np.int32)
+               for _ in range(2)]
+    out = srv.serve_batch([ServeRequest(rid=i, prompt=p, max_new_tokens=new)
+                           for i, p in enumerate(prompts)])
+    assert srv.last_decode_positions == list(range(S, S + new - 1))
+    # oracle: greedy decode with correctly-advancing positions continues
+    # exactly as a fresh prefill over the extended prompt would (decode /
+    # prefill argmax parity is asserted in test_arch_smoke)
+    prefill = jax.jit(zoo.make_prefill_step(cfg))
+    for i, p in enumerate(prompts):
+        toks = out[i]
+        ext = jnp.asarray(np.concatenate([p, toks[:-1]]))[None]
+        next_ref, _ = prefill(params, {"tokens": ext})
+        assert int(next_ref[0]) == int(toks[-1])
+    # prompt + generation must FIT the cache; overflow is a loud error
+    with pytest.raises(AssertionError, match="max_seq"):
+        srv.serve_batch([ServeRequest(
+            rid=9, prompt=rng.integers(0, cfg.vocab_size, 62,
+                                       dtype=np.int32),
+            max_new_tokens=8)])

@@ -7,11 +7,11 @@ The E4 grid now runs twice: through the scalar ``StreamSimulator`` loop
 the same table rows.  A 10x larger scenario grid (CI x mechanism x failure
 kind x workload, >= 200 lanes) then measures campaign throughput, and the
 whole measurement is emitted as the ``BENCH_sim.json`` artifact (schema
-"bench_sim/2") — the perf trajectory of the vectorized simulator, next to
+"bench_sim/3") — the perf trajectory of the vectorized simulator, next to
 ``BENCH_ckpt.json``'s "bench_ckpt/1" checkpoint-plane calibration.
 
-bench_sim/2 schema:
-  schema               "bench_sim/2"
+bench_sim/3 schema:
+  schema               "bench_sim/3"
   e4                   the equivalence gate: per-CI latency/recovery from
                        BOTH engines, wall-clocks, max absolute divergence
   grid                 the throughput measurement: lanes, lane_ticks,
@@ -27,12 +27,21 @@ bench_sim/2 schema:
                        ``--smoke``, the micro drill summary (pre-act before
                        the peak, a ``reprofile`` re-entry in the phase log,
                        backpressure-suppressed cadence slots)
+  device               the E12 device-engine section (``bench_campaign``):
+                       throughput (NumPy vs device lane-ticks/s at
+                       1e3/1e4/1e5 lanes), parity (the HARD gate —
+                       ``divergent_lanes`` must be 0 across the full
+                       plan x crash x degradation matrix), and sweep
+                       (exhaustive device plan replay vs top-k, gated
+                       ``exhaustive_objective <= topk_objective``; null
+                       under ``--smoke``)
   scalar_ticks_per_s   the scalar loop's measured tick rate
   speedup              grid lane-ticks/s over scalar ticks/s (the >= 20x
                        campaign-throughput target)
 
-"bench_sim/1" (no proactive section) is no longer emitted; readers treat
-it as a stale artifact and re-run the bench.
+"bench_sim/1" (no proactive section) and "bench_sim/2" (no device
+section) are no longer emitted; readers treat them as stale artifacts
+and re-run the bench.
 """
 from __future__ import annotations
 
@@ -56,9 +65,9 @@ E4_HORIZON_S = 5000.0          # post-injection window of the scalar sweep
 GRID_HORIZON = 2200            # ticks per grid lane (recovery completes well
                                # inside this for every grid scenario family)
 
-SIM_SCHEMA = "bench_sim/2"
-SIM_SCHEMA_KEYS = ("schema", "e4", "grid", "proactive", "scalar_ticks_per_s",
-                   "speedup")
+SIM_SCHEMA = "bench_sim/3"
+SIM_SCHEMA_KEYS = ("schema", "e4", "grid", "proactive", "device",
+                   "scalar_ticks_per_s", "speedup")
 
 
 def _e4_cost() -> SimCostModel:
@@ -197,7 +206,7 @@ def bench_grid(cost: SimCostModel, repeats: int = 3) -> dict:
 
 def build_sim_artifact(scalar_rows, scalar_wall, scalar_ticks,
                        batched_rows, batched_wall, grid: dict,
-                       proactive: dict) -> dict:
+                       proactive: dict, device: dict) -> dict:
     s = np.array(scalar_rows)
     b = np.array(batched_rows)
     scalar_tps = scalar_ticks / max(scalar_wall, 1e-9)
@@ -216,6 +225,7 @@ def build_sim_artifact(scalar_rows, scalar_wall, scalar_ticks,
         },
         "grid": grid,
         "proactive": proactive,
+        "device": device,
         "scalar_ticks_per_s": float(scalar_tps),
         "speedup": float(grid["lane_ticks_per_s"] / scalar_tps),
     }
@@ -256,6 +266,42 @@ def _validate_proactive(p: dict) -> None:
                              "cadence slots")
 
 
+def _validate_device(d: dict) -> None:
+    """Gate the E12 device-engine section: parity is the hard requirement
+    (zero divergent lanes or the artifact is rejected); when the sweep ran,
+    the exhaustive pick must match or beat the top-k pick's measured
+    objective (it replays a superset with bit-identical measurements, so
+    anything else is a bug)."""
+    if not isinstance(d, dict) or not d:
+        raise ValueError("device section missing or empty")
+    thr = d.get("throughput")
+    if not thr:
+        raise ValueError("device.throughput missing or empty")
+    for row in thr:
+        for k in ("lanes", "lane_ticks", "numpy_lane_ticks_per_s",
+                  "device_lane_ticks_per_s"):
+            if not (k in row and row[k] > 0):
+                raise ValueError(f"device.throughput row missing {k}")
+    par = d.get("parity")
+    if not isinstance(par, dict) or "divergent_lanes" not in par:
+        raise ValueError("device.parity section missing")
+    if par["divergent_lanes"] != 0:
+        raise ValueError(
+            f"device engine diverged from the NumPy engine on "
+            f"{par['divergent_lanes']}/{par.get('lanes', '?')} parity lanes")
+    sweep = d.get("sweep")
+    if sweep is not None:
+        if not (sweep["replayed_exhaustive"] >= sweep["replayed_topk"]):
+            raise ValueError("exhaustive sweep replayed fewer candidates "
+                             "than the top-k shortlist")
+        if not (sweep["exhaustive_objective"]
+                <= sweep["topk_objective"] + 1e-9):
+            raise ValueError(
+                "exhaustive device sweep chose a WORSE measured objective "
+                f"than top-k replay ({sweep['exhaustive_objective']:.6f} vs "
+                f"{sweep['topk_objective']:.6f})")
+
+
 def validate_sim_artifact(art: dict) -> None:
     """Schema gate for BENCH_sim.json (run by ``benchmarks/run.py --smoke``)."""
     missing = [k for k in SIM_SCHEMA_KEYS if k not in art]
@@ -284,6 +330,7 @@ def validate_sim_artifact(art: dict) -> None:
     if not (0.0 < g["recovered_fraction"] <= 1.0):
         raise ValueError(f"implausible recovered_fraction {g['recovered_fraction']}")
     _validate_proactive(art["proactive"])
+    _validate_device(art["device"])
     if art["speedup"] <= 0:
         raise ValueError("speedup must be positive")
 
@@ -308,13 +355,18 @@ def emit_sim_artifact(path: str, art: dict) -> dict:
 # ---------------------------------------------------------------------------
 
 def bench_recovery_vs_ci(out: str = "BENCH_sim.json",
-                         proactive: dict | None = None):
-    """`proactive` is the E10 section from ``bench_proactive`` —
-    ``benchmarks/run.py`` passes its result through so the head-to-head
-    runs once per campaign; standalone invocations compute it here."""
+                         proactive: dict | None = None,
+                         device: dict | None = None):
+    """`proactive` is the E10 section from ``bench_proactive``, `device`
+    the E12 section from ``bench_campaign`` — ``benchmarks/run.py`` passes
+    their results through so each runs once; standalone invocations
+    compute them here."""
     if proactive is None:
         from benchmarks.bench_proactive import bench_proactive
         proactive = bench_proactive()
+    if device is None:
+        from benchmarks.bench_campaign import device_section
+        device = device_section()
     cost = _e4_cost()
     print("\n=== Recovery & latency vs CI (constant 3000 ev/s, worst-case failure) ===")
     scalar_rows, scalar_wall, scalar_ticks = scalar_e4(cost)
@@ -332,13 +384,15 @@ def bench_recovery_vs_ci(out: str = "BENCH_sim.json",
           f"campaign grid: {grid['wall_s']:.2f}s "
           f"({grid['recovered_fraction']*100:.0f}% of lanes recovered)")
     art = build_sim_artifact(scalar_rows, scalar_wall, scalar_ticks,
-                             batched_rows, batched_wall, grid, proactive)
+                             batched_rows, batched_wall, grid, proactive,
+                             device)
     emit_sim_artifact(out, art)
     return scalar_rows
 
 
 def smoke(tmpdir: str = "/tmp/repro_bench_sim_smoke",
-          proactive: dict | None = None) -> dict:
+          proactive: dict | None = None,
+          device: dict | None = None) -> dict:
     """Tiny 4-lane campaign end-to-end: equivalence vs the scalar oracle on
     a reduced E4 grid, artifact emission, schema validation, reload.  The
     embedded proactive section comes from ``bench_proactive.smoke()`` —
@@ -346,6 +400,9 @@ def smoke(tmpdir: str = "/tmp/repro_bench_sim_smoke",
     if proactive is None:
         from benchmarks.bench_proactive import smoke as proactive_smoke
         proactive = proactive_smoke()
+    if device is None:
+        from benchmarks.bench_campaign import device_section
+        device = device_section(smoke=True)
     shutil.rmtree(tmpdir, ignore_errors=True)
     os.makedirs(tmpdir, exist_ok=True)
     cost = _e4_cost()
@@ -369,7 +426,8 @@ def smoke(tmpdir: str = "/tmp/repro_bench_sim_smoke",
             "plans": ["full-sync"], "kinds": ["task", "node"],
             "workloads": ["const"], "ci_grid": [float(cis[0]), float(cis[-1]), 2]}
     art = build_sim_artifact(scalar_rows, scalar_wall, scalar_ticks,
-                             batched_rows, batched_wall, grid, proactive)
+                             batched_rows, batched_wall, grid, proactive,
+                             device)
     path = os.path.join(tmpdir, "BENCH_sim.json")
     emit_sim_artifact(path, art)
     with open(path) as f:
@@ -381,8 +439,9 @@ def smoke(tmpdir: str = "/tmp/repro_bench_sim_smoke",
     return art
 
 
-def main(out: str = "BENCH_sim.json", proactive: dict | None = None):
-    return bench_recovery_vs_ci(out, proactive=proactive)
+def main(out: str = "BENCH_sim.json", proactive: dict | None = None,
+         device: dict | None = None):
+    return bench_recovery_vs_ci(out, proactive=proactive, device=device)
 
 
 if __name__ == "__main__":

@@ -6,7 +6,8 @@
                               batched campaign — emits BENCH_sim.json with
                               the lane-vs-scalar table, the campaign
                               throughput measurement, and the embedded E10
-                              proactive section, schema "bench_sim/2")
+                              proactive section and the E12 device-engine
+                              section, schema "bench_sim/3")
   E5  checkpoint subsystem   (beyond-paper; emits the BENCH_ckpt.json
                               calibration artifact the sim cost model loads)
   E6  kernel validation      (oracle timings + interpret-mode allclose)
@@ -16,6 +17,11 @@
                               ONE gray-failure campaign; its result is the
                               "proactive" section of BENCH_sim.json and the
                               validator gates a STRICT proactive win)
+  E12 device mega-campaigns  (jitted DeviceCampaign vs the NumPy lanes:
+                              throughput at 1e3/1e4/1e5 lanes, the
+                              bit-exact parity matrix, and the exhaustive
+                              device plan sweep vs top-k replay — the
+                              "device" section of BENCH_sim.json)
   E11 fleet supervisor       (one control plane over 8+ concurrent jobs —
                               emits BENCH_fleet.json, schema "bench_fleet/1",
                               gating the shared-tick wall-clock ratio < 2x
@@ -71,17 +77,26 @@ def main() -> None:
                          "protocol gate (tier-1-adjacent check)")
     args = ap.parse_args()
 
+    # Pin the XLA CPU backend to a pre-FMA ISA BEFORE any bench initializes
+    # a backend: the device campaign's bit-exact parity gate needs it
+    # (importing sim.device appends the flag as a side effect).
+    from repro.sim.device import ensure_bitexact_cpu
+    ensure_bitexact_cpu()
+
     t0 = time.monotonic()
     if args.smoke:
-        from benchmarks import (bench_ckpt, bench_fleet, bench_proactive,
-                                bench_recovery, bench_replication,
-                                bench_runtime)
+        from benchmarks import (bench_campaign, bench_ckpt, bench_fleet,
+                                bench_proactive, bench_recovery,
+                                bench_replication, bench_runtime)
         try:
             bench_ckpt.smoke()
-            # the proactive drill's summary is embedded (and gated) in the
-            # BENCH_sim.json artifact that bench_recovery.smoke() emits
+            # the proactive drill's summary and the device-engine section
+            # are embedded (and gated) in the BENCH_sim.json artifact that
+            # bench_recovery.smoke() emits — the device parity gate
+            # (divergent_lanes == 0) runs on a small CPU campaign here
             proactive = bench_proactive.smoke()
-            bench_recovery.smoke(proactive=proactive)
+            device = bench_campaign.device_section(smoke=True)
+            bench_recovery.smoke(proactive=proactive, device=device)
             bench_replication.smoke()
             bench_runtime.smoke()
             bench_fleet.smoke()
@@ -90,16 +105,17 @@ def main() -> None:
             sys.exit(1)
         print(f"smoke done in {time.monotonic() - t0:.0f}s")
         return
-    from benchmarks import (bench_ckpt, bench_dryrun, bench_fleet,
-                            bench_kernels, bench_khaos_training,
-                            bench_proactive, bench_recovery,
-                            bench_replication, bench_tables)
+    from benchmarks import (bench_campaign, bench_ckpt, bench_dryrun,
+                            bench_fleet, bench_kernels,
+                            bench_khaos_training, bench_proactive,
+                            bench_recovery, bench_replication, bench_tables)
 
     repeats = 1 if args.quick else 3
     bench_tables.bench_iot_vehicles(repeats=repeats)
     bench_tables.bench_ysb(repeats=repeats)
     proactive = bench_proactive.main()
-    bench_recovery.main(proactive=proactive)
+    device = bench_campaign.main()
+    bench_recovery.main(proactive=proactive, device=device)
     bench_replication.main()
     bench_fleet.main()
     bench_khaos_training.main()

@@ -229,7 +229,8 @@ def optimize_plan(m_l: QoSModel, m_r: QoSModel, tr_avg: float,
                   variants: Optional[Sequence[CheckpointPlan]] = None,
                   mtbf_s: float = 3600.0, grid: int = 128,
                   verifier: Optional[PlanVerifier] = None,
-                  verify_top_k: int = 3) -> PlanOptimization:
+                  verify_top_k: int = 3, exhaustive: bool = False,
+                  engine: Optional[str] = None) -> PlanOptimization:
     """Eq. 8 over the (CI grid x plan variants) cross-product.
 
     ``cost`` is a ``sim.costmodel.SimCostModel`` (any object with the
@@ -241,6 +242,15 @@ def optimize_plan(m_l: QoSModel, m_r: QoSModel, tr_avg: float,
     re-ranked by their MEASURED Eq.-8 objective — the re-priced surfaces
     pick the shortlist, the simulator picks the winner.  Candidates that
     were replayed carry the measurement in ``PlanCandidate.sim``.
+
+    ``exhaustive=True`` drops the shortlist: EVERY feasible variant is
+    replayed and ranked by its measured objective.  That many replay lanes
+    is what the device engine exists for — pass ``engine="device"`` to
+    route the verifier's campaigns through ``sim.device.DeviceCampaign``
+    (any verifier exposing a mutable ``engine`` attribute honors it; the
+    one from ``make_plan_verifier`` does).  Because exhaustive mode scores
+    a superset of the top-k shortlist with the same measurements, its pick
+    can only match or improve on the top-k pick's measured objective.
     """
     ci = np.linspace(ci_min, ci_max, grid)
     baseline = CheckpointPlan()
@@ -277,6 +287,11 @@ def optimize_plan(m_l: QoSModel, m_r: QoSModel, tr_avg: float,
     if feasible:
         best = min(feasible, key=lambda c: (c.objective, c.overhead))
         verified = False
+        if verifier is not None and engine is not None \
+                and hasattr(verifier, "engine"):
+            verifier.engine = engine
+        if exhaustive:
+            verify_top_k = len(feasible)
         if verifier is not None and verify_top_k > 0:
             sim_best = _verify_candidates(
                 feasible, verifier, verify_top_k, l_const, r_const, p)

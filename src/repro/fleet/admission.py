@@ -27,7 +27,7 @@ import numpy as np
 
 from repro.config import KhaosConfig, replace
 from repro.data.stream import WorkloadRecording, dense_rates
-from repro.sim.batched import (BatchedCampaign, LaneSpec,
+from repro.sim.batched import (LaneSpec, make_campaign,
                                measure_profile_lanes)
 from repro.sim.costmodel import SimCostModel
 from repro.ft.failures import FailureInjector
@@ -58,8 +58,8 @@ def reservation_eps(recording: WorkloadRecording,
 def whatif_campaign(cost: SimCostModel, recording: WorkloadRecording,
                     cfg: KhaosConfig, residual_eps: float,
                     warmup_s: float = 120.0, margin_s: float = 60.0,
-                    max_recovery_s: float = 1800.0
-                    ) -> tuple[float, float]:
+                    max_recovery_s: float = 1800.0,
+                    engine: str = "numpy") -> tuple[float, float]:
     """Replay the candidate on the residual capacity with a worst-case
     failure at the recorded peak; returns (pre-failure latency, measured
     recovery) — the numbers the admission gate checks against l_const /
@@ -75,7 +75,7 @@ def whatif_campaign(cost: SimCostModel, recording: WorkloadRecording,
     lane = LaneSpec(rates=dense_rates(t0, n, recording=recording),
                     ci_s=ci, t0=t0, failures=((inject_t, "node"),),
                     tag={"whatif": True})
-    camp = BatchedCampaign(capped, [lane]).run()
+    camp = make_campaign(capped, [lane], engine=engine).run()
     msr = measure_profile_lanes(camp, [inject_t], margin_s,
                                 max_recovery_s)[0]
     return msr.latency_s, msr.recovery_s
@@ -84,8 +84,8 @@ def whatif_campaign(cost: SimCostModel, recording: WorkloadRecording,
 def decide_admission(job: str, cost: SimCostModel,
                      recording: WorkloadRecording, cfg: KhaosConfig,
                      residual_eps: float, headroom: float = 0.2,
-                     queueable: bool = False, transfer_hit: bool = False
-                     ) -> AdmissionDecision:
+                     queueable: bool = False, transfer_hit: bool = False,
+                     engine: str = "numpy") -> AdmissionDecision:
     """The full admission gate (budget fit, then the what-if campaign)."""
     need = reservation_eps(recording, headroom)
     if need > residual_eps:
@@ -94,7 +94,8 @@ def decide_admission(job: str, cost: SimCostModel,
             job, action,
             f"reservation {need:.0f} ev/s exceeds residual "
             f"{residual_eps:.0f} ev/s", need, residual_eps)
-    lat, rec = whatif_campaign(cost, recording, cfg, residual_eps)
+    lat, rec = whatif_campaign(cost, recording, cfg, residual_eps,
+                               engine=engine)
     if lat > cfg.latency_constraint or rec > cfg.recovery_constraint:
         action = "queue" if queueable else "reject"
         return AdmissionDecision(

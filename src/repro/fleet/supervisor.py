@@ -65,7 +65,8 @@ from repro.ft.failures import FailureInjector
 from repro.metrics import MetricsStore
 from repro.sim.batched import (BatchedCampaign, BatchedDeployment,
                                BatchedLaneHandle, LaneSpec,
-                               build_profile_lanes, measure_profile_lanes,
+                               build_profile_lanes, make_campaign,
+                               measure_profile_lanes,
                                scatter_profile_results)
 from repro.sim.costmodel import SimCostModel
 from repro.sim.simulator import SimJobHandle, StreamSimulator
@@ -176,9 +177,11 @@ class FleetSupervisor:
                  probe_tolerance: float = 0.75,
                  divergence_threshold: float = 0.5,
                  divergence_patience: int = 3,
-                 metrics_maxlen: Optional[int] = 512):
+                 metrics_maxlen: Optional[int] = 512,
+                 engine: str = "numpy"):
         self.fleet_capacity_eps = float(fleet_capacity_eps)
         self.registry = registry if registry is not None else QoSModelRegistry()
+        self.engine = engine                  # campaign engine for what-ifs
         self.headroom = headroom
         self.probe_tolerance = probe_tolerance
         self.divergence_threshold = divergence_threshold
@@ -205,7 +208,7 @@ class FleetSupervisor:
         fp = fingerprint(spec.cfg, recording, spec.cost.state_bytes)
         dec = decide_admission(spec.name, spec.cost, recording, spec.cfg,
                                self.residual_eps, headroom=self.headroom,
-                               queueable=spec.queueable)
+                               queueable=spec.queueable, engine=self.engine)
         if not dec.admitted:
             status = "queued" if dec.action == "queue" else "rejected"
             self.jobs[spec.name] = FleetJob(spec, status, dec,
@@ -261,7 +264,7 @@ class FleetSupervisor:
         lane = LaneSpec(rates=dense_rates(t0, n, recording=rec), ci_s=ci,
                         t0=t0, failures=((inject_t, "node"),),
                         tag={"job": job.name, "probe": True})
-        camp = BatchedCampaign(cost, [lane]).run()
+        camp = make_campaign(cost, [lane], engine=self.engine).run()
         msr = measure_profile_lanes(camp, [inject_t], margin,
                                     spec.profile_max_recovery_s)[0]
         job.profiling_lane_ticks += n
@@ -321,7 +324,8 @@ class FleetSupervisor:
                 all_lanes.extend(lanes)
                 all_injects.extend(injects)
                 j.profiling_lane_ticks += sum(len(l.rates) for l in lanes)
-            camp = BatchedCampaign(members[0].spec.cost, all_lanes).run()
+            camp = make_campaign(members[0].spec.cost, all_lanes,
+                                 engine=self.engine).run()
             total_lanes += len(all_lanes)
             off = 0
             for j, lanes, injects, grid in plan:
@@ -372,8 +376,9 @@ class FleetSupervisor:
             # plan switch must not pay a savepoint-restart, or every
             # post-failure reconfigure compounds the very backlog it is
             # trying to drain
-            camp = BatchedCampaign(members[0].spec.cost, lanes,
-                                   flink_semantics=False)
+            camp = make_campaign(members[0].spec.cost, lanes,
+                                 engine=self.engine,
+                                 flink_semantics=False)
             self._campaigns[key] = camp
             for j in members:
                 j.campaign = camp

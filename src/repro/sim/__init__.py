@@ -1,13 +1,38 @@
+"""Simulation package — a three-engine hierarchy, each bit-exact against
+the one above it:
+
+  ``StreamSimulator``  the scalar ORACLE: one job, a readable Python tick
+                       loop; authoritative for tick semantics.
+  ``BatchedCampaign``  NumPy LANES: N jobs advanced by one fused array
+                       tick (~27x scalar); authoritative for the
+                       vectorized floating-point order.
+  ``DeviceCampaign``   the DEVICE engine (``sim.device``): the same tick
+                       jitted into one ``lax.fori_loop`` program for
+                       10^5+-lane mega-campaigns and exhaustive plan
+                       sweeps; must match the NumPy lanes bit-for-bit.
+
+Pick an engine with ``make_campaign(cost, lanes, engine="numpy"|"device")``.
+``DeviceCampaign`` is exported lazily so importing ``repro.sim`` stays
+jax-free for NumPy-only consumers.
+"""
 from repro.sim.costmodel import SimCostModel, costmodel_from_arch, levels_due
 from repro.sim.simulator import StreamSimulator, SimDeployment, SimJobHandle
 from repro.sim.batched import (BatchedCampaign, BatchedDeployment,
                                BatchedLaneHandle, LaneSpec,
-                               build_profile_lanes, make_plan_verifier,
-                               measure_profile_lanes,
+                               build_profile_lanes, make_campaign,
+                               make_plan_verifier, measure_profile_lanes,
                                scatter_profile_results)
 
 __all__ = ["SimCostModel", "costmodel_from_arch", "levels_due",
            "StreamSimulator", "SimDeployment", "SimJobHandle",
            "BatchedCampaign", "BatchedDeployment", "BatchedLaneHandle",
-           "LaneSpec", "build_profile_lanes", "make_plan_verifier",
-           "measure_profile_lanes", "scatter_profile_results"]
+           "DeviceCampaign", "LaneSpec", "build_profile_lanes",
+           "make_campaign", "make_plan_verifier", "measure_profile_lanes",
+           "scatter_profile_results"]
+
+
+def __getattr__(name):
+    if name == "DeviceCampaign":
+        from repro.sim.device import DeviceCampaign
+        return DeviceCampaign
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

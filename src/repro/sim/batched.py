@@ -42,7 +42,16 @@ fixed-seed lanes stay bit-exact against their scalar twins.
 
 ``benchmarks/bench_recovery.py`` measures the engine (lane-ticks/s vs the
 scalar loop) and emits the ``BENCH_sim.json`` artifact (schema
-"bench_sim/2").
+"bench_sim/3").
+
+This engine is the middle tier of the sim package's three-engine
+hierarchy: ``StreamSimulator`` (the scalar oracle — authoritative for
+tick SEMANTICS) -> ``BatchedCampaign`` (NumPy lanes — authoritative for
+the vectorized floating-point ORDER, bit-exact against the oracle) ->
+``sim.device.DeviceCampaign`` (the jitted/vmapped device engine for
+10^5+-lane mega-campaigns, bit-exact against THIS engine).  Campaign
+consumers select a tier with ``make_campaign(..., engine=)`` /
+``BatchedDeployment(engine=)`` / ``make_plan_verifier(engine=)``.
 """
 from __future__ import annotations
 
@@ -768,18 +777,20 @@ class BatchedCampaign:
             self.table = _PlanTable(self.cost, list(self._plan_keys.keys()))
         return pid
 
-    def _require_live(self, lane: int) -> int:
-        i = int(self._pos[lane])
-        if i < 0:
-            raise ValueError(f"lane {lane} already finished (compacted)")
-        return i
-
     def lane_set_ci(self, lane: int, ci_s: float) -> None:
         """Per-lane ``StreamSimulator.set_ci``: hot CI change, or savepoint
         + controlled restart under flink semantics — statement-for-
         statement the scalar actuation, so a controller-in-the-loop lane
-        stays bit-exact against its scalar twin."""
-        i = self._require_live(lane)
+        stays bit-exact against its scalar twin.
+
+        Actuating a RETIRED lane (past its horizon and compacted out) is
+        an inert no-op: the scalar runtime's post-loop actuation on a
+        finished job changes nothing either, so supervisors holding
+        ``BatchedLaneHandle``s can keep polling/actuating while the pooled
+        campaign compacts finished lanes away."""
+        i = int(self._pos[lane])
+        if i < 0:
+            return
         self.interval[i] = float(ci_s)
         if self.flink_semantics:
             # savepoint immediately, restart; no offset rollback
@@ -793,8 +804,11 @@ class BatchedCampaign:
 
     def lane_set_plan(self, lane: int, plan: CheckpointPlan) -> None:
         """Per-lane ``StreamSimulator.set_plan``: controlled mechanism
-        switch (savepoint + restart under flink semantics)."""
-        i = self._require_live(lane)
+        switch (savepoint + restart under flink semantics).  Inert on
+        retired lanes, exactly as ``lane_set_ci``."""
+        i = int(self._pos[lane])
+        if i < 0:
+            return
         pid = self._plan_index(plan)
         self.ck_active[i] = False      # in-flight write dies with the switch
         # levels absent from the new plan drop their offsets (the scalar
@@ -809,6 +823,25 @@ class BatchedCampaign:
         self.lane_plan_name[lane] = self.table.names[pid]
         self.save_count[i] = 0
         self.lane_set_ci(lane, plan.interval_s)
+
+
+#: campaign engine registry (see the module docstring's three-engine
+#: hierarchy); "device" resolves lazily so NumPy-only users never import jax
+CAMPAIGN_ENGINES = ("numpy", "device")
+
+
+def make_campaign(cost: SimCostModel, lanes: Sequence[LaneSpec],
+                  engine: str = "numpy", **kwargs) -> BatchedCampaign:
+    """Construct a campaign on the requested engine: ``"numpy"`` (the
+    ``BatchedCampaign`` reference) or ``"device"`` (the jitted
+    ``sim.device.DeviceCampaign``, bit-exact against it)."""
+    if engine == "device":
+        from repro.sim.device import DeviceCampaign
+        return DeviceCampaign(cost, lanes, **kwargs)
+    if engine != "numpy":
+        raise ValueError(f"unknown campaign engine {engine!r} "
+                         f"(expected one of {CAMPAIGN_ENGINES})")
+    return BatchedCampaign(cost, lanes, **kwargs)
 
 
 class BatchedLaneHandle:
@@ -917,11 +950,77 @@ def measure_profile_lanes(camp: BatchedCampaign, inject_ts: Sequence[float],
     scalar path computes these inside the tick loop; with full lag
     histories recorded they are pure array reductions.
 
+    The recovery scan runs as ONE NumPy pass over an (M, T) time matrix
+    (the per-lane Python loop was a measurable fraction of large-campaign
+    post-processing); only the short pre-window ``mean``/``median``
+    reductions stay per lane, on the SAME contiguous slices the scan
+    identifies — NumPy's pairwise summation makes a masked full-row
+    reduction group differently, so slicing is what keeps results
+    bit-identical to the per-lane reference
+    (``_measure_profile_lanes_loop``, asserted in tests).
+
     ``lanes`` selects which campaign lanes ``inject_ts`` refers to
     (default: lanes 0..len(inject_ts)-1) — the pooled multi-job profiling
     path measures each job's contiguous lane slice with that job's own
     margin/horizon.
     """
+    cost = camp.cost
+    lane_ids = np.asarray(list(range(len(inject_ts)) if lanes is None
+                               else lanes), dtype=np.int64)
+    inj = np.asarray(inject_ts, dtype=np.float64)
+    M = min(lane_ids.size, inj.size)          # zip() truncation semantics
+    lane_ids, inj = lane_ids[:M], inj[:M]
+    if M == 0:
+        return []
+    lat_hist = camp.latency_history()[lane_ids]
+    lag_hist = camp.lag_hist[lane_ids]
+    ns = camp._lane_ticks_all[lane_ids]
+    T = int(ns.max())
+    k = np.arange(T)
+    ts = camp._t0_all[lane_ids][:, None] + k          # (M, T) tick clocks
+    valid = k < ns[:, None]
+    lag = lag_hist[:, :T]
+    rows = np.arange(M)
+    inj_c = inj[:, None]
+    # pre-failure margin window: monotone clocks make the mask one
+    # contiguous run per lane — reduce it to (start, count) slice bounds
+    pre = (ts >= inj_c - margin) & (ts < inj_c) & valid
+    pre_lo = pre.argmax(axis=1)
+    pre_n = pre.sum(axis=1)
+    # steady threshold fixed at the first post-injection tick
+    post = (ts >= inj_c) & valid
+    has_post = post.any(axis=1)
+    k0 = post.argmax(axis=1)
+    base = np.zeros(M)
+    for i in np.flatnonzero(pre_n):
+        base[i] = np.mean(lag[i, pre_lo[i]:pre_lo[i] + pre_n[i]])
+    lam_k0 = camp.rates[lane_ids][rows, k0]
+    steady = np.maximum(2.0 * lam_k0, 1.2 * base + 1.0)
+    ok = (ts > inj_c + cost.detect_s) & (ts >= inj_c) \
+        & (ts < inj_c + max_recovery_s) & (lag <= steady[:, None]) & valid
+    hit = ok.any(axis=1) & has_post
+    first = ok.argmax(axis=1)
+    recovery = np.where(hit, ts[rows, first] - inj,
+                        float(max_recovery_s))
+    out: list[LaneMeasurement] = []
+    for i in range(M):
+        if pre_n[i]:
+            sl = lat_hist[i, pre_lo[i]:pre_lo[i] + pre_n[i]]
+            latency = float(min(np.median(sl), 30.0))
+        else:
+            latency = cost.base_latency_s
+        out.append(LaneMeasurement(latency, float(recovery[i]),
+                                   bool(hit[i])))
+    return out
+
+
+def _measure_profile_lanes_loop(camp: BatchedCampaign,
+                                inject_ts: Sequence[float],
+                                margin: float, max_recovery_s: float,
+                                lanes: Optional[Sequence[int]] = None
+                                ) -> list[LaneMeasurement]:
+    """Per-lane reference implementation of ``measure_profile_lanes``
+    (kept verbatim; the vectorized pass must match it bit-for-bit)."""
     cost = camp.cost
     lat_hist = camp.latency_history()
     out: list[LaneMeasurement] = []
@@ -1023,11 +1122,13 @@ class BatchedDeployment:
     """
 
     def __init__(self, cost: SimCostModel, recording: WorkloadRecording,
-                 warmup_s: float = 300.0, max_recovery_s: float = 7200.0):
+                 warmup_s: float = 300.0, max_recovery_s: float = 7200.0,
+                 engine: str = "numpy"):
         self.cost = cost
         self.recording = recording
         self.warmup_s = warmup_s
         self.max_recovery_s = max_recovery_s
+        self.engine = engine
         self.last_campaign: Optional[BatchedCampaign] = None
 
     def profile_campaign(self, failure_times, ci_values, margin: float
@@ -1036,7 +1137,7 @@ class BatchedDeployment:
         lanes, inject_ts = build_profile_lanes(
             self.cost, self.recording, failure_times, ci_values, margin,
             warmup_s=self.warmup_s, max_recovery_s=self.max_recovery_s)
-        camp = BatchedCampaign(self.cost, lanes).run()
+        camp = make_campaign(self.cost, lanes, engine=self.engine).run()
         self.last_campaign = camp
         meas = measure_profile_lanes(camp, inject_ts, margin,
                                      self.max_recovery_s)
@@ -1054,12 +1155,18 @@ def make_plan_verifier(cost: SimCostModel,
                        failure_mix: Sequence[tuple[str, float]] = (
                            ("task", 0.30), ("node", 0.65), ("cluster", 0.05)),
                        warmup_s: float = 300.0, margin_s: float = 90.0,
-                       max_recovery_s: float = 3600.0):
+                       max_recovery_s: float = 3600.0,
+                       engine: str = "numpy"):
     """Build the ``optimize_plan(verifier=...)`` callback: top-k plan
     candidates are replayed through one batched campaign — one lane per
     (candidate, failure kind) with worst-case injection — and scored by
     MEASURED pre-failure latency and kind-mixed recovery, instead of the
-    re-priced QoS surfaces alone."""
+    re-priced QoS surfaces alone.
+
+    ``engine`` picks the campaign engine (it is also exposed as a mutable
+    ``verify.engine`` attribute, which ``optimize_plan(engine=...)`` sets
+    — an exhaustive sweep over the full candidate grid wants the device
+    engine; both engines measure bit-identically)."""
     assert recording is not None or schedule is not None
 
     def verify(cands: Sequence[tuple[CheckpointPlan, float]]) -> list[dict]:
@@ -1076,7 +1183,7 @@ def make_plan_verifier(cost: SimCostModel,
                     rates=rates, ci_s=float(ci), plan=plan,
                     failures=((inject_t, kind),), tag={"kind": kind}))
                 inject_ts.append(inject_t)
-        camp = BatchedCampaign(cost, lanes).run()
+        camp = make_campaign(cost, lanes, engine=verify.engine).run()
         meas = measure_profile_lanes(camp, inject_ts, margin_s,
                                      max_recovery_s)
         out: list[dict] = []
@@ -1092,4 +1199,5 @@ def make_plan_verifier(cost: SimCostModel,
                         "per_kind": per_kind})
         return out
 
+    verify.engine = engine
     return verify

@@ -5,3 +5,12 @@ import sys
 
 # keep tests importable without `pip install -e .`
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Pin the XLA CPU backend to a pre-FMA ISA BEFORE any test initializes a
+# backend: LLVM contracts f64 mul-add chains into FMAs on wider ISAs, which
+# breaks the device campaign's bit-exact parity with the NumPy engine
+# (sim/device.py documents the finding).  Kernel tests are tolerance-based
+# and unaffected.
+if "--xla_cpu_max_isa" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_cpu_max_isa=AVX").strip()

@@ -12,7 +12,7 @@ from repro.data.stream import (constant_rate, dense_rates, diurnal_rate,
 from repro.ft.failures import Degradation, FailureInjector
 from repro.sim import (BatchedCampaign, BatchedDeployment, LaneSpec,
                        SimCostModel, SimDeployment, StreamSimulator,
-                       make_plan_verifier)
+                       make_plan_verifier, measure_profile_lanes)
 
 COST = SimCostModel(capacity_eps=4600.0, base_latency_s=0.5,
                     ckpt_duration_s=3.0, ckpt_sync_penalty=0.6)
@@ -415,3 +415,76 @@ def test_campaign_scales_to_large_grids():
     np.testing.assert_array_equal(
         np.array(sim.metrics.series("consumer_lag").values),
         camp.lag_hist[i])
+
+
+def test_measure_profile_lanes_vectorized_matches_loop_reference():
+    """The one-pass NumPy recovery scan must reproduce the per-lane Python
+    reference bit-for-bit — including lanes with no pre-window samples, no
+    post-injection ticks, and unrecovered lanes hitting max_recovery_s."""
+    from repro.sim.batched import _measure_profile_lanes_loop
+    T = 1400
+    sched = diurnal_rate(base=2400.0, amplitude=0.4, period=3600.0, seed=3)
+    lanes, injects = [], []
+    for j, ci in enumerate(np.geomspace(12.0, 180.0, 9)):
+        t = _worst_case(float(ci))
+        lanes.append(LaneSpec(rates=dense_rates(0.0, T - 40 * (j % 3),
+                                                schedule=sched),
+                              ci_s=float(ci), t0=0.0,
+                              failures=((t, KINDS[j % 3]),)))
+        injects.append(t)
+    # degenerate injections: before any pre-window, after the horizon
+    lanes.append(LaneSpec(rates=dense_rates(0.0, T, schedule=sched),
+                          ci_s=30.0))
+    injects.append(0.0)                   # pre-window empty
+    lanes.append(LaneSpec(rates=dense_rates(0.0, T, schedule=sched),
+                          ci_s=30.0))
+    injects.append(float(T + 100))        # no post-injection ticks
+    camp = BatchedCampaign(COST, lanes).run()
+    for margin, max_rec in ((90.0, 900.0), (60.0, 50.0)):
+        fast = measure_profile_lanes(camp, injects, margin, max_rec)
+        ref = _measure_profile_lanes_loop(camp, injects, margin, max_rec)
+        assert fast == ref
+    # the pooled-slice path (explicit lanes=) must agree too
+    sel = [3, 7, 10]
+    fast = measure_profile_lanes(camp, [injects[i] for i in sel], 90.0,
+                                 900.0, lanes=sel)
+    ref = _measure_profile_lanes_loop(camp, [injects[i] for i in sel],
+                                      90.0, 900.0, lanes=sel)
+    assert fast == ref
+
+
+def test_handles_survive_compaction_and_retired_actuation_is_inert():
+    """A live BatchedLaneHandle must keep observing its lane after
+    compaction retires it (reads route through the _final masters), and
+    actuating a retired lane is a no-op instead of a crash — so pooled
+    fleet campaigns can compact under live supervisors."""
+    from repro.sim import BatchedLaneHandle
+    sched = constant_rate(3000.0)
+    # lane 0 recovers and early-exits; lane 1 (no chaos) must run out its
+    # longer horizon, keeping the campaign alive past the compaction
+    lanes = [LaneSpec(rates=dense_rates(0.0, 500, schedule=sched), ci_s=30.0,
+                      failures=((_worst_case(30.0), "node"),)),
+             LaneSpec(rates=dense_rates(0.0, 2000, schedule=sched),
+                      ci_s=30.0)]
+    camp = BatchedCampaign(COST, lanes, early_exit=True, compact_every=64)
+    h_short, h_long = (BatchedLaneHandle(camp, i) for i in range(2))
+    camp.run(n_ticks=1200)
+    assert camp.compactions > 0 and camp._pos[0] < 0, \
+        "scenario must retire lane 0 mid-run while lane 1 lives"
+    # retired lane: reads still work, actuation is inert
+    assert not h_short.alive()
+    t_frozen = h_short.now()
+    ci_frozen = h_short.current_ci()
+    camp.lane_set_ci(0, 15.0)
+    camp.lane_set_plan(0, CheckpointPlan(sync=False))
+    assert h_short.current_ci() == ci_frozen
+    assert h_short.current_plan().interval_s == ci_frozen
+    assert h_short.now() == t_frozen
+    # live lane: actuation still lands post-compaction
+    assert h_long.alive()
+    camp.lane_set_ci(1, 20.0)
+    assert h_long.current_ci() == 20.0
+    camp.run()
+    assert camp.done
+    rec = camp.recoveries[0]
+    assert rec, "retired lane keeps its recovery record"

@@ -1,0 +1,206 @@
+"""Device-engine parity: ``DeviceCampaign`` must reproduce the NumPy
+``BatchedCampaign`` bit-for-bit across the full plan x crash-kind x
+degradation-kind matrix (the device twin of test_batched_sim's
+lane-vs-scalar matrix), survive mid-run actuation, drive under the
+Phase-3 controller loop, and power ``optimize_plan``'s exhaustive sweep.
+
+One shared campaign pair runs the whole matrix (XLA compiles are the
+expensive part, not lanes), and the assertions are ``assert_array_equal``
+— no tolerances anywhere in this file.
+"""
+import numpy as np
+import pytest
+
+from repro.config import CheckpointPlan, KhaosConfig
+from repro.core import KhaosRuntime, QoSModel, optimize_plan
+from repro.data.stream import constant_rate, dense_rates
+from repro.ft.failures import Degradation
+from repro.sim import (BatchedCampaign, LaneSpec, SimCostModel,
+                       make_campaign, make_plan_verifier)
+from repro.sim.device import DeviceCampaign, fma_contraction_active
+
+COST = SimCostModel(capacity_eps=4600.0, base_latency_s=0.5,
+                    ckpt_duration_s=3.0, ckpt_sync_penalty=0.6)
+PLANS = (None,
+         CheckpointPlan(sync=False),
+         CheckpointPlan(mode="incremental", full_every=8, sync=False),
+         CheckpointPlan(mode="incremental", full_every=4,
+                        levels=("memory", "local", "remote"),
+                        local_every=1, remote_every=8))
+KINDS = ("task", "node", "cluster")
+DEGRADATIONS = (
+    Degradation(t=300.0, kind="straggler", duration_s=400.0, severity=1.8),
+    Degradation(t=250.0, kind="net_delay", duration_s=500.0, severity=3.0,
+                jitter_s=0.8, direction="to_source"),
+    Degradation(t=250.0, kind="net_delay", duration_s=600.0, severity=4.0,
+                jitter_s=1.0, direction="to_ckpt_store"),
+    Degradation(t=200.0, kind="backpressure", duration_s=150.0),
+)
+T = 900
+RATES = 3000.0 + 800.0 * np.sin(np.arange(T) / 40.0)
+
+FINAL_STATE = ("lag", "consumed", "produced", "processed_total",
+               "ckpt_count", "save_count", "steady_lag", "down", "t",
+               "off_lvl")
+
+
+def _matrix_lanes() -> list[LaneSpec]:
+    lanes = []
+    for pi, plan in enumerate(PLANS):
+        for kind in KINDS:
+            for ci in (15.0, 45.0):
+                lanes.append(LaneSpec(
+                    rates=RATES, ci_s=ci, plan=plan,
+                    failures=((200.0 + 20 * pi, kind), (560.0, "task"))))
+    for plan in PLANS:
+        for deg in DEGRADATIONS:
+            for fails in ((), ((400.0, "task"),)):
+                lanes.append(LaneSpec(rates=RATES, ci_s=20.0, plan=plan,
+                                      failures=fails, degradations=[deg]))
+    for plan in PLANS:        # no-failure lanes: the recovery-free carry
+        lanes.append(LaneSpec(rates=RATES, ci_s=25.0, plan=plan))
+    return lanes
+
+
+@pytest.fixture(scope="module")
+def matrix():
+    lanes = _matrix_lanes()
+    a = BatchedCampaign(COST, lanes).run()
+    b = DeviceCampaign(COST, lanes).run()
+    return a, b
+
+
+def test_fma_contraction_pinned_off():
+    """conftest pins --xla_cpu_max_isa=AVX; without it, LLVM contracts f64
+    mul-add chains into FMAs and every bit-exact assertion below would be
+    1 ULP off."""
+    assert fma_contraction_active() is False
+
+
+def test_matrix_lag_history_bitexact(matrix):
+    a, b = matrix
+    np.testing.assert_array_equal(a.lag_hist, b.lag_hist)
+
+
+def test_matrix_latency_history_bitexact(matrix):
+    a, b = matrix
+    np.testing.assert_array_equal(a.latency_history(), b.latency_history())
+
+
+def test_matrix_final_state_bitexact(matrix):
+    a, b = matrix
+    for name in FINAL_STATE:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, name)), np.asarray(getattr(b, name)),
+            err_msg=name)
+
+
+def test_matrix_recoveries_identical(matrix):
+    a, b = matrix
+    assert a.recoveries == b.recoveries
+    assert any(a.recoveries), "matrix must actually exercise recoveries"
+
+
+def test_midrun_plan_and_ci_switch_bitexact():
+    """Actuation between run() calls — the drive_campaign contract — must
+    leave both engines in the same state, including the flink-semantics
+    savepoint restart the plan switch triggers."""
+    Ts = 600
+    rates = RATES[:Ts]
+    lanes = [LaneSpec(rates=rates, ci_s=60.0,
+                      failures=((150.0, "node"),)) for _ in range(4)]
+    a = BatchedCampaign(COST, lanes)
+    b = DeviceCampaign(COST, lanes)
+    for camp in (a, b):
+        camp.run(n_ticks=300)
+        camp.lane_set_plan(1, CheckpointPlan(mode="incremental",
+                                             full_every=8, sync=False))
+        camp.lane_set_ci(2, 20.0)
+        camp.run()
+    np.testing.assert_array_equal(a.lag_hist, b.lag_hist)
+    for name in FINAL_STATE:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, name)), np.asarray(getattr(b, name)),
+            err_msg=name)
+    assert a.recoveries == b.recoveries
+    assert a.lane_plan(1).name == b.lane_plan(1).name
+
+
+def test_drive_campaign_device_matches_numpy():
+    """The Phase-3 controller loop produces identical decisions and lane
+    trajectories on either engine underneath."""
+    rng = np.random.default_rng(0)
+    ci = rng.uniform(10, 300, 150)
+    tr = rng.uniform(800, 2200, 150)
+    cost = SimCostModel(capacity_eps=2600.0, ckpt_duration_s=1.0)
+    m_l = QoSModel().fit(ci, tr, cost.base_latency_s + 2.0 / ci)
+    m_r = QoSModel().fit(ci, tr, 80 + 1.2 * ci + 0.02 * tr)
+    cfg = KhaosConfig(latency_constraint=1.0, recovery_constraint=240.0,
+                      optimization_period=30.0, ci_min=10, ci_max=300,
+                      reconfig_cooldown=60.0)
+    Ts = 601
+    lanes = [LaneSpec(rates=dense_rates(0.0, Ts,
+                                        schedule=constant_rate(1800.0)),
+                      ci_s=290.0)]
+    sups = {}
+    for engine in ("numpy", "device"):
+        rt = KhaosRuntime(cfg, cost=cost)
+        rt.install_models(m_l, m_r)
+        camp = make_campaign(cost, lanes, engine=engine)
+        sups[engine] = (rt.drive_campaign(camp), camp)
+    (sup_n, camp_n), (sup_d, camp_d) = sups["numpy"], sups["device"]
+    assert isinstance(camp_d, DeviceCampaign)
+    assert sup_n.handles[0].reconfigurations == \
+        sup_d.handles[0].reconfigurations
+    assert sup_n.handles[0].plan_changes == sup_d.handles[0].plan_changes
+    np.testing.assert_array_equal(camp_n.lag_hist, camp_d.lag_hist)
+
+
+def test_optimize_plan_exhaustive_device_matches_or_improves_topk():
+    """The exhaustive device sweep replays every feasible variant; since
+    its measurements are bit-identical to the NumPy verifier's, its pick
+    must match or improve the top-k pick's MEASURED objective."""
+    cost = SimCostModel(capacity_eps=2600.0, ckpt_duration_s=1.5)
+    rng = np.random.default_rng(0)
+    ci = rng.uniform(10, 120, 200)
+    tr = rng.uniform(1000, 2200, 200)
+    m_l = QoSModel().fit(ci, tr, cost.base_latency_s + 40.0 / ci + tr * 1e-5)
+    m_r = QoSModel().fit(ci, tr, 80.0 + 1.2 * ci + 0.01 * tr)
+    kw = dict(tr_avg=1500.0, l_const=2.0, r_const=600.0, p=1.0,
+              ci_min=10, ci_max=120, cost=cost, grid=32)
+
+    ver = make_plan_verifier(cost, schedule=constant_rate(1500.0),
+                             warmup_s=60.0, max_recovery_s=600.0)
+    res_top = optimize_plan(m_l, m_r, verifier=ver, verify_top_k=2, **kw)
+
+    ver = make_plan_verifier(cost, schedule=constant_rate(1500.0),
+                             warmup_s=60.0, max_recovery_s=600.0)
+    res_ex = optimize_plan(m_l, m_r, verifier=ver, exhaustive=True,
+                           engine="device", **kw)
+    assert ver.engine == "device"        # optimize_plan(engine=) set it
+
+    def measured(res):
+        return {c.plan.name: c.sim["objective"] for c in res.candidates
+                if c.sim is not None and c.sim["feasible"]}
+
+    top_m, ex_m = measured(res_top), measured(res_ex)
+    assert set(top_m) <= set(ex_m), \
+        "exhaustive replay must cover the top-k shortlist"
+    # identical measurements for the shared candidates (device parity)
+    for name, obj in top_m.items():
+        assert ex_m[name] == obj
+    assert res_ex.verified and res_top.verified
+    # the measured-objective gate: exhaustive can only match or improve
+    assert min(ex_m.values()) <= min(top_m.values())
+    assert ex_m[res_ex.plan.name] <= top_m[res_top.plan.name]
+
+
+def test_make_campaign_factory_and_lazy_export():
+    lanes = [LaneSpec(rates=RATES[:100], ci_s=30.0)]
+    assert type(make_campaign(COST, lanes)) is BatchedCampaign
+    assert type(make_campaign(COST, lanes, engine="device")) \
+        is DeviceCampaign
+    with pytest.raises(ValueError, match="unknown campaign engine"):
+        make_campaign(COST, lanes, engine="cuda")
+    import repro.sim
+    assert repro.sim.DeviceCampaign is DeviceCampaign

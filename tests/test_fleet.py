@@ -8,7 +8,8 @@ from repro.core.qos_models import QoSModel, demo_prior_models
 from repro.core.runtime import KhaosRuntime, PhaseError
 from repro.data.stream import constant_rate, record_workload
 from repro.fleet import (DivergenceWatchdog, FleetJobSpec, FleetSupervisor,
-                         QoSModelRegistry, decide_admission, fingerprint)
+                         JobFingerprint, QoSModelRegistry, decide_admission,
+                         fingerprint)
 from repro.metrics import MetricsStore, TimeSeries
 from repro.sim import BatchedDeployment, SimCostModel
 
@@ -325,3 +326,47 @@ def test_rollup_merge_preserves_aggregates():
     assert abs(m.mean - (2.0 * 10 + 4.0 * 30) / 40) < 1e-12
     assert m.vmin == 0.5 and m.vmax == 9.0
     assert m.t_start == 0.0 and m.t_end == 19.0
+
+
+def test_fingerprint_key_format_is_stable():
+    """Persisted registries (QoSModelRegistry.save) are keyed by this
+    string — a format change silently orphans every saved surface on the
+    next fleet restart, so the format is pinned as a literal."""
+    fp = JobFingerprint(state_bytes_log2=30, rate_mean_bin=10,
+                        rate_peak_bin=11, ci_window=(10.0, 120.0),
+                        num_configs=12)
+    assert fp.key() == "sb30-rm10-rp11-ci10_120-z12"
+    # and a real fingerprint survives the JSON round trip key-intact
+    cfg = _cfg()
+    rec = record_workload(constant_rate(1200.0), 400.0, seed=0)
+    real = fingerprint(cfg, rec, 1e9)
+    m_l, m_r = demo_prior_models()
+    reg = QoSModelRegistry()
+    reg.put(real, m_l, m_r, "donor")
+    back = QoSModelRegistry.from_dict(reg.to_dict())
+    entry = back.lookup(real)
+    assert entry is not None and entry.fp.key() == real.key()
+
+
+def test_registry_save_is_restart_stable(tmp_path):
+    """save -> load -> save must be byte-identical (a fleet restarting in
+    a loop never rewrites its registry), and reloaded surfaces must
+    predict bit-exactly, not just approximately."""
+    m_l, m_r = demo_prior_models()
+    cfg = _cfg()
+    rec = record_workload(constant_rate(1200.0), 400.0, seed=0)
+    reg = QoSModelRegistry()
+    reg.put(fingerprint(cfg, rec, 1e9), m_l, m_r, "donor")
+    p1, p2 = str(tmp_path / "r1.json"), str(tmp_path / "r2.json")
+    reg.save(p1)
+    back = QoSModelRegistry.load(p1)
+    back.save(p2)
+    with open(p1, "rb") as a, open(p2, "rb") as b:
+        assert a.read() == b.read()
+    ci = np.linspace(10, 60, 7)
+    tr = np.linspace(200, 900, 7)
+    entry = back.lookup(fingerprint(cfg, rec, 1e9))
+    np.testing.assert_array_equal(entry.m_l.predict(ci, tr),
+                                  m_l.predict(ci, tr))
+    np.testing.assert_array_equal(entry.m_r.predict(ci, tr),
+                                  m_r.predict(ci, tr))
